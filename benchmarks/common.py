@@ -1,0 +1,35 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results.json")
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_results(key: str, payload):
+    data = {}
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            try:
+                data = json.load(f)
+            except Exception:
+                data = {}
+    data[key] = payload
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

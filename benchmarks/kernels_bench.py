@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: wall time of the pure-jnp reference path (the
+CPU production path) and derived TPU-side arithmetic-intensity estimates for
+each Pallas kernel. Interpret-mode timings are not meaningful hardware
+numbers, so the derived column reports the kernel's bytes/elem roofline
+character instead."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_results
+from repro.kernels import ops
+
+
+def bench(fn, *args, iters=20):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(0)
+    rows = {}
+
+    x = jax.random.normal(key, (1 << 20,))  # 1M-element gradient leaf
+    us = bench(jax.jit(lambda v: ops.topk_sparsify_leaf(v, 0.01)), x)
+    rows["topk_ref_1M"] = us
+    emit("kernels/topk_1M", us, "hbm=8B/elem;compute=k·max/256elem")
+
+    us = bench(jax.jit(lambda v: ops.int8_roundtrip_leaf(v)), x)
+    rows["int8_ref_1M"] = us
+    emit("kernels/int8_1M", us, "hbm=8B/elem;compute=3flop/elem")
+
+    tree = {"a": x, "b": jax.random.normal(key, (1 << 18,))}
+    us = bench(
+        jax.jit(lambda t: ops.dp_transmit(t, key, 1.0, 0.1)), tree
+    )
+    rows["dp_transmit_1.25M"] = us
+    emit("kernels/dp_transmit", us, "two-pass;hbm=12B/elem")
+
+    q = jax.random.normal(key, (4, 8, 4, 128), jnp.bfloat16)
+    kc = jax.random.normal(key, (4, 8192, 8, 128), jnp.bfloat16)
+    vc = jax.random.normal(key, (4, 8192, 8, 128), jnp.bfloat16)
+    us = bench(
+        jax.jit(lambda a, b, c: ops.swa_decode_attention(a, b, c, jnp.asarray(9000), 8192)),
+        q, kc, vc,
+    )
+    rows["swa_decode_ref_8k_window"] = us
+    emit("kernels/swa_decode_8k", us, "hbm-bound:2·C·Hkv·hd·2B/token")
+
+    # flash prefill attention (causal GQA): ref oracle at CPU-feasible size.
+    # HBM model: flash = O(Q+K+V+O) vs naive = O(S²·H) probs materialized.
+    qf = jax.random.normal(key, (2, 512, 4, 4, 64), jnp.bfloat16)
+    kf = jax.random.normal(key, (2, 512, 4, 64), jnp.bfloat16)
+    vf = jax.random.normal(key, (2, 512, 4, 64), jnp.bfloat16)
+    us = bench(
+        jax.jit(lambda a, b, c: ops.flash_prefill_attention(a, b, c, causal=True)),
+        qf, kf, vf,
+    )
+    rows["flash_prefill_ref_512"] = us
+    emit("kernels/flash_prefill_512", us, "vmem-resident softmax;hbm=Q+K+V+O")
+
+    save_results("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""End-to-end driver: federated-train a ~25M-parameter dense LM for a few
+hundred steps across 3 simulated clouds, comparing the paper's three
+aggregation algorithms, with checkpointing and held-out evaluation.
+
+    PYTHONPATH=src python examples/federated_lm.py [--steps 300] [--d-model 320]
+
+This is the "real run" example (Table 3's experiment at CPU scale): expect
+next-token accuracy to climb toward the corpus oracle (0.9) as the model
+learns the per-domain transition structure."""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import FederatedConfig, ModelConfig, TrainConfig
+from repro.core.federated import FederatedTrainer
+from repro.data import SyntheticCorpus, dirichlet_mixtures, federated_batch
+from repro.models import build_model
+from repro.utils.tree import tree_count_params
+
+
+def model_config(d_model: int, n_layers: int) -> ModelConfig:
+    return ModelConfig(
+        name=f"dense-{d_model}x{n_layers}",
+        arch_type="dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=max(d_model // 64, 2),
+        n_kv_heads=max(d_model // 128, 1),
+        d_ff=int(d_model * 8 / 3) // 32 * 32,
+        vocab_size=512,
+        remat=False,
+    )
+
+
+def run(aggregation: str, args, corpus, mixtures) -> dict:
+    cfg = model_config(args.d_model, args.layers)
+    model = build_model(cfg)
+    fed = FederatedConfig(
+        n_clouds=args.clouds, local_steps=args.local_steps,
+        aggregation=aggregation, compression=args.compression,
+        topk_ratio=0.05, cloud_sample_counts=(2000, 3000, 5000),
+    )
+    tcfg = TrainConfig(steps=args.steps, lr=args.lr, warmup_steps=args.steps // 10)
+    trainer = FederatedTrainer(model, fed, tcfg)
+    state = trainer.init_state(jax.random.PRNGKey(args.seed))
+    if aggregation == "fedavg":
+        print(f"params: {tree_count_params(state['global']['params']):,}")
+    ckpt = Checkpointer(f"/tmp/fedlm_{aggregation}") if args.checkpoint else None
+
+    step = jax.jit(trainer.train_step)
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = federated_batch(
+            corpus, jax.random.fold_in(jax.random.PRNGKey(args.seed + 3), i),
+            mixtures, args.batch, args.seq,
+        )
+        state, metrics = step(state, batch)
+        if (i + 1) % 50 == 0:
+            print(f"  [{aggregation}] step {i+1:4d} loss {float(metrics['loss']):.4f} "
+                  f"acc {float(metrics['accuracy']):.3f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+            if ckpt:
+                ckpt.save(i + 1, state["global"]["params"])
+
+    # held-out IID eval of the aggregated global model
+    eval_batch = corpus.sample(
+        jax.random.PRNGKey(777), jnp.ones(corpus.n_domains) / corpus.n_domains,
+        64, args.seq,
+    )
+    loss, m = model.loss(
+        state["global"]["params"],
+        {"tokens": eval_batch["tokens"], "labels": eval_batch["labels"]},
+    )
+    return {"eval_loss": float(loss), "eval_acc": float(m["accuracy"])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=320)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--clouds", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--beta", type=float, default=0.1)
+    ap.add_argument("--compression", default="topk")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", action="store_true")
+    ap.add_argument("--aggregators", default="fedavg,dynamic,gradient")
+    args = ap.parse_args()
+
+    corpus = SyntheticCorpus(vocab_size=512, n_domains=6, noise=0.1)
+    mixtures = dirichlet_mixtures(jax.random.PRNGKey(9), args.clouds, 6, beta=args.beta)
+
+    results = {}
+    for aggregation in args.aggregators.split(","):
+        print(f"=== {aggregation} ===")
+        results[aggregation] = run(aggregation, args, corpus, mixtures)
+    print("\nheld-out results (oracle acc 0.902):")
+    for k, v in results.items():
+        print(f"  {k:10s} loss={v['eval_loss']:.4f} acc={v['eval_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

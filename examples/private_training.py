@@ -1,0 +1,73 @@
+"""Privacy-preserving cross-cloud training: DP clipping/noise + secure
+aggregation (the paper's §3.1 "Ensure Data Security").
+
+    PYTHONPATH=src python examples/private_training.py
+
+Demonstrates:
+ 1. DP-FedAvg: per-cloud update clipping + calibrated Gaussian noise, with
+    the privacy/utility trade-off across noise multipliers,
+ 2. secure aggregation: pairwise-masked updates whose masks cancel exactly
+    in the cross-cloud sum (the server never sees an individual update)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import FederatedConfig, TrainConfig
+from repro.core import privacy
+from repro.core.federated import FederatedTrainer
+from repro.data import SyntheticCorpus, dirichlet_mixtures, federated_batch
+from repro.models import build_model
+from repro.utils.tree import tree_map, tree_norm
+
+
+def dp_sweep():
+    print("=== DP-FedAvg: privacy/utility trade-off ===")
+    cfg = get_smoke_config("stablelm-1.6b")
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, n_domains=4, noise=0.1)
+    mix = dirichlet_mixtures(jax.random.PRNGKey(2), 3, 4, beta=0.3)
+    for noise_mult in (0.0, 0.3, 1.0, 3.0):
+        fed = FederatedConfig(
+            n_clouds=3, local_steps=2, aggregation="fedavg",
+            dp_clip=0.5, dp_noise_mult=noise_mult,
+        )
+        trainer = FederatedTrainer(model, fed, TrainConfig(steps=60, lr=3e-3, warmup_steps=6))
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(trainer.train_step)
+        losses = []
+        for i in range(60):
+            batch = federated_batch(
+                corpus, jax.random.fold_in(jax.random.PRNGKey(3), i), mix, 4, 32
+            )
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        print(f"  σ={noise_mult:3.1f}: final loss {np.mean(losses[-8:]):.4f}")
+
+
+def secure_agg_demo():
+    print("\n=== secure aggregation: masks cancel exactly ===")
+    key = jax.random.PRNGKey(0)
+    updates = [
+        {"w": 0.01 * jax.random.normal(jax.random.fold_in(key, i), (4, 6))}
+        for i in range(3)
+    ]
+    masked = [
+        privacy.mask_update(privacy.to_fixed(u), i, 3, round_idx=0)
+        for i, u in enumerate(updates)
+    ]
+    print("  raw update[0][:3]:     ", np.asarray(updates[0]["w"]).ravel()[:3])
+    print("  masked transmit[0][:3]:", np.asarray(masked[0]["w"]).ravel()[:3],
+          " <- uniform noise to the server")
+    agg = privacy.from_fixed(privacy.secure_sum(masked), jnp.float32)
+    plain = updates[0]
+    for u in updates[1:]:
+        plain = tree_map(lambda a, b: a + b, plain, u)
+    err = float(tree_norm(tree_map(lambda a, b: a - b, agg, plain)))
+    print(f"  |secure_sum - plain_sum| = {err:.2e} "
+          f"(fixed-point quantization only)")
+
+
+if __name__ == "__main__":
+    dp_sweep()
+    secure_agg_demo()

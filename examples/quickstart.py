@@ -1,0 +1,63 @@
+"""Quickstart: 3 clouds federated-train a small LM in ~60 seconds on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the public API end to end: pick an architecture config, build the
+model, configure the paper's federated knobs (aggregation formula, local
+steps, compression, privacy), and train on a non-IID synthetic corpus."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import FederatedConfig, TrainConfig
+from repro.core.federated import FederatedTrainer
+from repro.data import SyntheticCorpus, dirichlet_mixtures, federated_batch
+from repro.models import build_model
+from repro.utils.tree import tree_count_params
+
+
+def main():
+    # 1. pick an architecture (any of the 10 assigned ids works; smoke = CPU-sized)
+    cfg = get_smoke_config("stablelm-1.6b")
+    model = build_model(cfg)
+
+    # 2. the paper's federated configuration (§3.1-3.3)
+    fed = FederatedConfig(
+        n_clouds=3,
+        local_steps=4,               # H local steps between cross-cloud syncs
+        aggregation="dynamic",       # formula 2: softmax(-loss) weighting
+        compression="topk",          # §3.2 gradient/delta sparsification
+        topk_ratio=0.05,
+        error_feedback=True,
+    )
+    train = TrainConfig(steps=60, lr=3e-3, warmup_steps=6)
+    trainer = FederatedTrainer(model, fed, train)
+
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name}  params={tree_count_params(state['global']['params']):,}")
+    print(f"sync payload per cloud: "
+          f"{trainer.sync_bytes_per_cloud(state['global']['params'])/1e6:.2f} MB "
+          f"(raw would be {tree_count_params(state['global']['params'])*2/1e6:.2f} MB)")
+
+    # 3. non-IID data: each cloud samples its own Dirichlet domain mixture
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, n_domains=4, noise=0.1)
+    mixtures = dirichlet_mixtures(jax.random.PRNGKey(1), fed.n_clouds, 4, beta=0.2)
+
+    # 4. train
+    step = jax.jit(trainer.train_step)
+    for i in range(train.steps):
+        batch = federated_batch(
+            corpus, jax.random.fold_in(jax.random.PRNGKey(2), i),
+            mixtures, per_cloud_batch=4, seq=48,
+        )
+        state, metrics = step(state, batch)
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1:3d}  loss {float(metrics['loss']):.4f}  "
+                  f"acc {float(metrics['accuracy']):.3f}  "
+                  f"synced={bool(metrics['synced'])}")
+
+    print(f"done. oracle accuracy for this corpus: {corpus.oracle_accuracy():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Pytree checkpointing: flat .npz payload + JSON treedef manifest.
+
+Sharding-aware in the sense that arrays are fully gathered to host before
+save (fine at the scales this container runs; a real multi-host deployment
+would swap in per-shard files keyed by the same manifest). Keeps the last
+``keep`` checkpoints; restore validates structure and dtypes against the
+target pytree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def save(self, step: int, tree) -> str:
+        path = self._path(step)
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten_with_paths(tree)
+        arrays = {}
+        manifest = {}
+        for i, (key, leaf) in enumerate(sorted(flat.items())):
+            arr = np.asarray(jax.device_get(leaf))
+            name = f"a{i}"
+            # bf16 has no numpy dtype: view as uint16 and record the real dtype
+            if arr.dtype.name == "bfloat16":
+                manifest[key] = {"name": name, "dtype": "bfloat16"}
+                arr = arr.view(np.uint16)
+            else:
+                manifest[key] = {"name": name, "dtype": arr.dtype.name}
+            arrays[name] = arr
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f, indent=1)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target):
+        """Restore into the structure of ``target`` (shapes must match)."""
+        import jax.numpy as jnp
+
+        path = self._path(step)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(target)
+        leaves = []
+        for p, leaf in flat_t:
+            key = "/".join(str(x) for x in p)
+            if key not in manifest:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            entry = manifest[key]
+            arr = data[entry["name"]]
+            if entry["dtype"] == "bfloat16":
+                arr = jnp.asarray(arr).view(jnp.bfloat16)
+            else:
+                arr = jnp.asarray(arr)
+            if arr.shape != leaf.shape:
+                raise ValueError(
+                    f"shape mismatch for {key!r}: ckpt {arr.shape} vs target {leaf.shape}"
+                )
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,58 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    FederatedConfig,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+
+_ARCH_MODULES = {
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).smoke_config()
+
+
+def get_shape(shape_id: str) -> ShapeConfig:
+    return INPUT_SHAPES[shape_id]
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "FederatedConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "get_config",
+    "get_smoke_config",
+    "get_shape",
+]

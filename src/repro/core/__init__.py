@@ -1,0 +1,17 @@
+from repro.core.aggregation import (
+    async_update,
+    dynamic_weights,
+    fedavg_weights,
+    gradient_aggregate,
+    weighted_average,
+)
+from repro.core.federated import FederatedTrainer
+
+__all__ = [
+    "FederatedTrainer",
+    "async_update",
+    "dynamic_weights",
+    "fedavg_weights",
+    "gradient_aggregate",
+    "weighted_average",
+]

@@ -1,0 +1,162 @@
+"""Model aggregation algorithms — the paper's §3.3, formulas 1-4.
+
+All functions operate on *stacked* cloud pytrees: every leaf carries a
+leading ``n_clouds`` axis. This single representation serves both execution
+modes: on CPU it is a plain batched array; on the production mesh the
+leading axis is sharded over ``pod`` and the axis-0 reductions below lower
+to all-reduce/all-gather collectives over the cross-cloud links — exactly
+the traffic the paper's techniques aim to shrink.
+
+    formula 1 (FedAvg):      w = Σ_i (n_i / n) · w_i
+    formula 2 (dynamic):     α_i = exp(−L_i) / Σ_j exp(−L_j)
+    formula 3 (gradient):    w ← w − η Σ_i (n_i / n) · ∇w_i
+    formula 4 (async):       w ← w + α_i (w_i − w)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_map
+
+Pytree = Any
+
+AGGREGATORS = ("fedavg", "dynamic", "gradient", "async")
+
+
+def fedavg_weights(sample_counts: jax.Array) -> jax.Array:
+    """Formula 1 weights: n_i / n. sample_counts: (C,)."""
+    n = sample_counts.astype(jnp.float32)
+    return n / jnp.maximum(jnp.sum(n), 1.0)
+
+
+def dynamic_weights(losses: jax.Array, temp: float = 1.0) -> jax.Array:
+    """Formula 2: α_i = softmax(−L_i / τ). losses: (C,)."""
+    return jax.nn.softmax(-losses.astype(jnp.float32) / temp)
+
+
+def weighted_average(stacked: Pytree, weights: jax.Array) -> Pytree:
+    """Σ_i weights_i · leaf_i over the leading cloud axis (fp32 accumulate)."""
+
+    def avg(x):
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0).astype(x.dtype)
+
+    return tree_map(avg, stacked)
+
+
+def gradient_aggregate(
+    params: Pytree, stacked_grads: Pytree, weights: jax.Array
+) -> Pytree:
+    """Formula 3's aggregation half: ĝ = Σ_i (n_i/n) ∇w_i.
+
+    The global update ``w ← w − η ĝ`` is then applied by the inner optimizer
+    (plain SGD reproduces the formula exactly; AdamW is the production
+    variant — §Claims reports both)."""
+    del params  # signature kept symmetric with the other aggregators
+    return weighted_average(stacked_grads, weights)
+
+
+def async_update(
+    global_params: Pytree,
+    cloud_params: Pytree,
+    alpha: jax.Array | float,
+) -> Pytree:
+    """Formula 4: w ← w + α (w_i − w) for one arriving cloud update."""
+
+    def upd(w, wi):
+        wf = w.astype(jnp.float32)
+        return (wf + alpha * (wi.astype(jnp.float32) - wf)).astype(w.dtype)
+
+    return tree_map(upd, global_params, cloud_params)
+
+
+def masked_async_update(
+    global_params: Pytree,
+    stacked_params: Pytree,
+    alphas: jax.Array,
+    arrived: jax.Array,
+) -> Pytree:
+    """Batched formula 4 for the SPMD path: apply all clouds whose update
+    arrived this round (``arrived``: (C,) bool), each with its staleness-
+    discounted α_i. Sequential-arrival semantics are approximated by the
+    simultaneous sum  w += Σ_i arrived_i · α_i (w_i − w)  with
+    Σ arrived_i·α_i ≤ 1 enforced by the scheduler."""
+    a = (alphas * arrived.astype(jnp.float32)).astype(jnp.float32)
+
+    def upd(w, wi):
+        wf = w.astype(jnp.float32)
+        contrib = jnp.sum(
+            a.reshape((-1,) + (1,) * (wi.ndim - 1))
+            * (wi.astype(jnp.float32) - wf[None]),
+            axis=0,
+        )
+        return (wf + contrib).astype(w.dtype)
+
+    return tree_map(upd, global_params, stacked_params)
+
+
+# ------------------------------------------------- int8-on-the-wire (beyond-paper)
+def int8_wire_weighted_average(stacked: Pytree, weights: jax.Array,
+                               pod_axis: str = "pod", mesh=None,
+                               shard_specs: Pytree | None = None) -> Pytree:
+    """Weighted average across clouds with the cross-pod payload carried as
+    int8 INSIDE the XLA program (beyond-paper §Perf optimization).
+
+    The pjit formulation of formula 1 lowers to a dense fp32 all-reduce over
+    the pod axis — the full master-precision delta crosses the (slow, paid)
+    DCN link even though the sync only needs ~8-bit fidelity (error feedback
+    absorbs the residual). This runs the combine under a FULLY-MANUAL
+    ``shard_map``: every device quantizes its local shard per-(last-dim)-row
+    to int8, all-gathers only the int8 shard + fp32 row scales across its
+    pod-peer, and dequantizes/combines locally. 4× fewer DCN bytes than the
+    fp32 all-reduce (8× vs. its 2× round trip), visible as ``s8`` gathers in
+    the compiled HLO rather than only in the analytic wire model.
+
+    Fully-manual matters: with auto intra-pod axes, the per-row max inside
+    the body reduces over a sharded dimension, and the partitioner falls
+    back to replicating the whole fp32 delta per device (measured 75 GB/dev
+    cross-pod). Manual specs keep every op shard-local by construction.
+
+    shard_specs: pytree of PartitionSpec for the UNSTACKED leaves (the
+    intra-pod placement); required together with ``mesh``."""
+    P = jax.sharding.PartitionSpec
+    assert mesh is not None and shard_specs is not None, (
+        "int8_wire_weighted_average needs mesh + per-leaf shard specs"
+    )
+    n_pods = dict(mesh.shape)[pod_axis]
+
+    def leaf_fn(x, w):
+        # x: this device's local shard of (1, ...) — one cloud's slice
+        c = w.shape[0]
+        if x.ndim <= 1 or x.size * n_pods <= 8192:
+            xg = jax.lax.all_gather(x, pod_axis, axis=0, tiled=True)
+            wr = w.reshape((c,) + (1,) * (xg.ndim - 1))
+            return jnp.sum(wr * xg.astype(jnp.float32), axis=0)
+        xf = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, pod_axis, axis=0, tiled=True)   # int8 wire
+        sg = jax.lax.all_gather(scale, pod_axis, axis=0, tiled=True)
+        deq = qg.astype(jnp.float32) * sg
+        wr = w.reshape((c,) + (1,) * (deq.ndim - 1))
+        return jnp.sum(wr * deq, axis=0)
+
+    def fn(tree, w):
+        return tree_map(lambda x: leaf_fn(x, w), tree)
+
+    in_specs = (
+        tree_map(lambda s: P(pod_axis, *s), shard_specs),
+        P(),
+    )
+    out_specs = tree_map(lambda s: P(*s), shard_specs)
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )(stacked, weights)

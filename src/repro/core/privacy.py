@@ -1,0 +1,122 @@
+"""Data-security layer — the paper's §3.1 "Ensure Data Security".
+
+Two mechanisms, composable with every aggregator:
+
+* **Differential privacy (DP-FedAvg)**: each cloud's update is clipped to
+  global-L2 norm ≤ C before transmission; Gaussian noise N(0, (σC)²/C_clouds)
+  is added to the *aggregate* (server-side noise under the honest-server
+  model; per-cloud noise for the local model is a one-line change). The
+  fused clip+noise hot path is the `dp_clip` Pallas kernel.
+
+* **Secure aggregation** (the paper's "homomorphic encryption" requirement,
+  adapted — see DESIGN.md §2.5): Bonawitz-style pairwise additive masking in
+  fixed-point int32 arithmetic. Cloud i adds Σ_{j>i} PRF(i,j) − Σ_{j<i}
+  PRF(j,i); masks cancel *exactly* in the modular sum, so the server learns
+  only Σ_i update_i. Wraparound int32 arithmetic gives bit-exact
+  cancellation (floats would leak rounding residue).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_map, tree_sq_norm, tree_split_keys
+
+Pytree = Any
+
+FIXED_POINT_SCALE = 2.0**16
+
+
+# ------------------------------------------------------------------ DP-SGD
+def clip_update(update: Pytree, clip_norm: float) -> tuple[Pytree, jax.Array]:
+    """Scale the whole update so its global L2 norm is ≤ clip_norm."""
+    norm = jnp.sqrt(tree_sq_norm(update))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-9))
+    return tree_map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), update), norm
+
+
+def add_gaussian_noise(
+    tree: Pytree, key: jax.Array, stddev: float | jax.Array
+) -> Pytree:
+    keys = tree_split_keys(key, tree)
+    return tree_map(
+        lambda x, k: (
+            x.astype(jnp.float32)
+            + stddev * jax.random.normal(k, x.shape, jnp.float32)
+        ).astype(x.dtype),
+        tree,
+        keys,
+    )
+
+
+def dp_noise_stddev(clip_norm: float, noise_mult: float, n_clouds: int) -> float:
+    """Std-dev of the noise added to the *average* of n clipped updates."""
+    return noise_mult * clip_norm / max(n_clouds, 1)
+
+
+# ------------------------------------------------------- secure aggregation
+def _pair_key(round_idx, i: int, j: int) -> jax.Array:
+    base = jax.random.PRNGKey(0x5EC0)
+    k = jax.random.fold_in(base, round_idx)
+    k = jax.random.fold_in(k, i * 100_003 + j)
+    return k
+
+
+def _mask_like_int(tree: Pytree, key: jax.Array) -> Pytree:
+    keys = tree_split_keys(key, tree)
+    return tree_map(
+        lambda x, k: jax.random.randint(
+            k, x.shape, jnp.iinfo(jnp.int32).min, jnp.iinfo(jnp.int32).max, jnp.int32
+        ),
+        tree,
+        keys,
+    )
+
+
+def to_fixed(tree: Pytree) -> Pytree:
+    return tree_map(
+        lambda x: jnp.round(x.astype(jnp.float32) * FIXED_POINT_SCALE).astype(jnp.int32),
+        tree,
+    )
+
+
+def from_fixed(tree: Pytree, dtype) -> Pytree:
+    return tree_map(
+        lambda x: (x.astype(jnp.float32) / FIXED_POINT_SCALE).astype(dtype), tree
+    )
+
+
+def mask_update(
+    update_fixed: Pytree, cloud_idx: int, n_clouds: int, round_idx
+) -> Pytree:
+    """Additive pairwise masks in wraparound int32: what cloud i transmits."""
+    masked = update_fixed
+    for j in range(n_clouds):
+        if j == cloud_idx:
+            continue
+        lo, hi = min(cloud_idx, j), max(cloud_idx, j)
+        mask = _mask_like_int(update_fixed, _pair_key(round_idx, lo, hi))
+        sign = 1 if cloud_idx < j else -1
+        masked = tree_map(
+            lambda m, x, s=sign: (m + s * x).astype(jnp.int32), masked, mask
+        )
+    return masked
+
+
+def secure_sum(masked_updates: list[Pytree]) -> Pytree:
+    """Σ_i masked_i — masks cancel exactly; returns fixed-point sum."""
+    out = masked_updates[0]
+    for m in masked_updates[1:]:
+        out = tree_map(lambda a, b: (a + b).astype(jnp.int32), out, m)
+    return out
+
+
+def secure_aggregate(updates: list[Pytree], round_idx, dtype=jnp.float32) -> Pytree:
+    """End-to-end: fixed-point lift → mask → sum → unmask-by-cancellation."""
+    n = len(updates)
+    masked = [
+        mask_update(to_fixed(u), i, n, round_idx) for i, u in enumerate(updates)
+    ]
+    return from_fixed(secure_sum(masked), dtype)

@@ -1,0 +1,9 @@
+from repro.data.pipeline import SyntheticCorpus, batch_iterator
+from repro.data.federated_data import dirichlet_mixtures, federated_batch
+
+__all__ = [
+    "SyntheticCorpus",
+    "batch_iterator",
+    "dirichlet_mixtures",
+    "federated_batch",
+]

@@ -1,0 +1,90 @@
+"""Deterministic synthetic LM corpus with domain structure.
+
+WikiText-103 is unavailable offline, so the paper's §4 experiments run on a
+synthetic corpus engineered to have the property the paper's experiment
+actually needs: *learnable structure with controllable cross-cloud skew*.
+
+Each domain d is a noisy affine automaton over the vocabulary:
+
+    t_{k+1} = (a_d · t_k + c_d) mod V     with prob 1−ε
+    t_{k+1} ~ Uniform(V)                  with prob ε
+
+A model that learns the per-domain transition achieves next-token accuracy
+→ (1−ε); mixing coefficients over domains generate exactly the "uneven data
+distribution" regime of the paper's Table 3. Everything is jittable and
+seeded — batches are pure functions of (seed, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+_PRIMES = jnp.asarray(
+    [3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59], jnp.int32
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticCorpus:
+    vocab_size: int
+    n_domains: int = 8
+    noise: float = 0.1
+
+    def domain_params(self) -> tuple[jax.Array, jax.Array]:
+        d = jnp.arange(self.n_domains)
+        a = _PRIMES[d % len(_PRIMES)]
+        c = (7 * d + 1) % self.vocab_size
+        return a, c
+
+    def sample(
+        self, key: jax.Array, domain_mix: jax.Array, batch: int, seq: int
+    ) -> dict:
+        """domain_mix: (n_domains,) simplex. Returns {"tokens","labels","domain"}."""
+        ka, kb, kc, kd = jax.random.split(key, 4)
+        dom = jax.random.choice(ka, self.n_domains, (batch,), p=domain_mix)
+        a_all, c_all = self.domain_params()
+        a, c = a_all[dom], c_all[dom]  # (B,)
+        t0 = jax.random.randint(kb, (batch,), 0, self.vocab_size)
+        noise_mask = jax.random.bernoulli(kc, self.noise, (batch, seq))
+        noise_tok = jax.random.randint(kd, (batch, seq), 0, self.vocab_size)
+
+        def step(t, inputs):
+            nm, nt = inputs
+            nxt = (a * t + c) % self.vocab_size
+            nxt = jnp.where(nm, nt, nxt)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            step, t0, (noise_mask.T, noise_tok.T)
+        )
+        toks = jnp.concatenate([t0[None], toks], axis=0).T  # (B, seq+1)
+        return {
+            "tokens": toks[:, :-1].astype(jnp.int32),
+            "labels": toks[:, 1:].astype(jnp.int32),
+            "domain": dom.astype(jnp.int32),
+        }
+
+    def oracle_accuracy(self) -> float:
+        """Best achievable next-token accuracy (predict the affine map)."""
+        return (1.0 - self.noise) + self.noise / self.vocab_size
+
+
+def batch_iterator(
+    corpus: SyntheticCorpus,
+    seed: int,
+    domain_mix: jax.Array,
+    batch: int,
+    seq: int,
+) -> Iterator[dict]:
+    """Infinite deterministic batch stream."""
+    step = 0
+    sample = jax.jit(
+        lambda k: corpus.sample(k, domain_mix, batch, seq)
+    )
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        yield sample(key)
+        step += 1

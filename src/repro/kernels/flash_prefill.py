@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: flash attention for training/prefill (causal GQA,
+optional sliding window).
+
+Why this is the §Roofline hot spot: the jnp chunked-attention path
+materializes the (B, Hkv, G, q_chunk, T) probability tensor in HBM between
+the two matmuls — at prefill_32k that is the dominant memory term for every
+attention architecture (≈100 TB/step/device on the 12B configs). Flash
+tiling keeps the running softmax state in VMEM so HBM traffic drops to
+O(Q + K + V + O).
+
+Layout:
+    grid = (B, Hkv, S/BQ, T/BK); the LAST grid axis streams over KV blocks
+    (TPU grid iteration is sequential per core), carrying (m, l, acc) in
+    VMEM scratch. One q tile blocks all G = H/Hkv query heads of one KV
+    head: the MXU sees (BQ·G, hd) × (hd, BK) — both dims ≥128 for
+    hardware-aligned shapes at hd=128, BK=128.
+
+Causality is position arithmetic on block indices; fully-masked (future)
+KV blocks are skipped with ``pl.when`` so the streaming pass does no MXU
+work above the diagonal (the HBM prefetch of those blocks is hidden by the
+sequential grid)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0**30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, bq: int, bk: int, n_k: int, g: int, hd: int,
+    causal: bool, window: int, scale: float,
+):
+    i = pl.program_id(2)          # query block
+    j = pl.program_id(3)          # kv block (streaming reduction axis)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip: the whole KV block is in the future of the whole
+    # q block (or beyond the window's past edge)
+    q_lo = i * bq
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    k_hi = k_lo + bk - 1
+    if causal:
+        live = k_lo <= q_hi
+        if window > 0:
+            live = live & (k_hi >= q_lo - (window - 1))
+    else:
+        live = jnp.asarray(True)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)          # (BK, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (BQ·G, BK)
+
+        if causal:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, g, bk), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, g, bk), 2)
+            mask = qpos >= kpos
+            if window > 0:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask.reshape(bq * g, bk), s, NEG)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_new = acc_prev * alpha + pv
+        m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(bq, g, hd).astype(o_ref.dtype)
+
+
+def _block_size(n: int, target: int) -> int:
+    for b in (target, target // 2, target // 4, 64, 32, 16, 8):
+        if b and n % b == 0 and n >= b:
+            return b
+    return n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret", "bq", "bk")
+)
+def flash_prefill(
+    q: jax.Array,          # (B, S, Hkv, G, hd)
+    k: jax.Array,          # (B, T, Hkv, hd)
+    v: jax.Array,          # (B, T, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (B, S, Hkv, G, hd) attention output, fp32-accumulated."""
+    b, s, hkv, g, hd = q.shape
+    t = k.shape[1]
+    bq = _block_size(s, bq)
+    bk = _block_size(t, bk)
+    scale = hd**-0.5
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_k=t // bk, g=g, hd=hd,
+        causal=causal, window=window, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, s, hkv, g, hd), q.dtype),
+        grid=(b, hkv, s // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, hd), lambda b_, h, i, j: (b_, i, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h, i, j: (b_, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h, i, j: (b_, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bq, 1, g, hd), lambda b_, h, i, j: (b_, i, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq * g, 1), jnp.float32),
+            pltpu.VMEM((bq * g, 1), jnp.float32),
+            pltpu.VMEM((bq * g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

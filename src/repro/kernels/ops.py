@@ -1,0 +1,144 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+The wrappers own the layout plumbing the kernels don't: flattening pytrees
+into (rows, 256) tiles (with padding), restoring shapes, and dispatching
+kernel vs. pure-jnp reference (``use_kernel=False`` is the CPU production
+path; kernels run interpret=True on CPU for validation and compile natively
+on TPU)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dp_clip as _dp
+from repro.kernels import quantize as _quant
+from repro.kernels import ref as _ref
+from repro.kernels import swa_decode as _swa
+from repro.kernels import topk_compress as _topk
+
+Pytree = Any
+
+BLOCK = 256
+ROWS = 8
+TILE = BLOCK * ROWS
+
+
+def _to_tiles(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.astype(jnp.float32).ravel()
+    n = flat.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(-1, BLOCK), n
+
+
+def _from_tiles(t: jax.Array, n: int, shape, dtype) -> jax.Array:
+    return t.ravel()[:n].reshape(shape).astype(dtype)
+
+
+# ----------------------------------------------------------- top-k sparsify
+def topk_sparsify_leaf(
+    x: jax.Array, ratio: float, *, use_kernel: bool = False, interpret: bool = True
+) -> jax.Array:
+    tiles, n = _to_tiles(x)
+    k = max(1, int(round(ratio * BLOCK)))
+    if use_kernel:
+        out = _topk.topk_sparsify(tiles, k, interpret=interpret)
+    else:
+        out = _ref.topk_sparsify_ref(tiles, k)
+    return _from_tiles(out, n, x.shape, x.dtype)
+
+
+# ------------------------------------------------------------ int8 channel
+def int8_roundtrip_leaf(
+    x: jax.Array, *, use_kernel: bool = False, interpret: bool = True
+) -> jax.Array:
+    tiles, n = _to_tiles(x)
+    if use_kernel:
+        out = _quant.int8_roundtrip(tiles, interpret=interpret)
+    else:
+        out = _ref.int8_roundtrip_ref(tiles)
+    return _from_tiles(out, n, x.shape, x.dtype)
+
+
+def int8_encode_leaf(x: jax.Array, *, use_kernel: bool = False, interpret: bool = True):
+    tiles, n = _to_tiles(x)
+    if use_kernel:
+        return _quant.int8_encode(tiles, interpret=interpret) + (n,)
+    return _ref.int8_encode_ref(tiles) + (n,)
+
+
+# ------------------------------------------------------------------ DP clip
+def tree_sq_norm(
+    tree: Pytree, *, use_kernel: bool = False, interpret: bool = True
+) -> jax.Array:
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        tiles, _ = _to_tiles(leaf)  # zero-padding does not change Σx²
+        if use_kernel:
+            total = total + _dp.sq_norm(tiles, interpret=interpret)
+        else:
+            total = total + _ref.sq_norm_ref(tiles)
+    return total
+
+
+def dp_transmit(
+    tree: Pytree,
+    key: jax.Array,
+    clip_norm: float,
+    stddev: float,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> Pytree:
+    """Fused DP channel: clip the pytree to clip_norm, add N(0, stddev²)."""
+    norm = jnp.sqrt(tree_sq_norm(tree, use_kernel=use_kernel, interpret=interpret))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-9))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        tiles, n = _to_tiles(leaf)
+        noise = jax.random.normal(k, tiles.shape, jnp.float32)
+        if use_kernel:
+            y = _dp.clip_noise(tiles, scale, noise, stddev, interpret=interpret)
+        else:
+            y = _ref.clip_noise_ref(tiles, scale, noise, stddev)
+        out.append(_from_tiles(y, n, leaf.shape, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------- swa decode attention
+def swa_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    window: int = 0,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """(B, Hkv, G, hd) x ring cache (B, C, Hkv, hd) → (B, Hkv, G, hd)."""
+    if use_kernel:
+        return _swa.swa_decode(q, k_cache, v_cache, pos, window, interpret=interpret)
+    return _ref.swa_decode_ref(q, k_cache, v_cache, pos, window)
+
+
+# -------------------------------------------------------- flash prefill attn
+def flash_prefill_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: int = 0, use_kernel: bool = False, interpret: bool = True,
+) -> jax.Array:
+    """Causal GQA flash attention for training/prefill (see
+    kernels/flash_prefill.py). q: (B,S,Hkv,G,hd); k/v: (B,T,Hkv,hd)."""
+    from repro.kernels import flash_prefill as _fp
+
+    if use_kernel:
+        return _fp.flash_prefill(
+            q, k, v, causal=causal, window=window, interpret=interpret
+        )
+    return _ref.flash_prefill_ref(q, k, v, causal=causal, window=window)

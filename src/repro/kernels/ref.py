@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(shape/dtype sweeps, assert_allclose). They are also the CPU fallbacks the
+framework uses when kernels are disabled."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ topk_compress
+def topk_sparsify_ref(x: jax.Array, k: int, block: int = 256) -> jax.Array:
+    """Block-local magnitude top-k with threshold (tie-keeping) semantics.
+
+    x: (nb, block) fp32 → same shape, entries below the per-row k-th largest
+    magnitude zeroed."""
+    mag = jnp.abs(x)
+    kth = jax.lax.top_k(mag, k)[0][:, -1:]
+    return jnp.where(mag >= kth, x, 0.0)
+
+
+# ------------------------------------------------------------------ quantize
+def int8_roundtrip_ref(x: jax.Array) -> jax.Array:
+    """Per-row symmetric int8 quantize→dequantize. x: (nb, block) fp32."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+def int8_encode_ref(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ------------------------------------------------------------------- dp_clip
+def sq_norm_ref(x: jax.Array) -> jax.Array:
+    """Σ x² over everything → () fp32."""
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def clip_noise_ref(
+    x: jax.Array, scale: jax.Array, noise: jax.Array, stddev: float
+) -> jax.Array:
+    """out = x·scale + stddev·noise (the fused DP transmit transform)."""
+    return x * scale + stddev * noise
+
+
+# ---------------------------------------------------------------- swa_decode
+def swa_decode_ref(
+    q: jax.Array,       # (B, Hkv, G, hd)
+    k: jax.Array,       # (B, C, Hkv, hd)   ring-buffer cache (rotated keys)
+    v: jax.Array,       # (B, C, Hkv, hd)
+    pos: jax.Array,     # ()  tokens already cached; current token index
+    window: int,        # attention span (0 = all cached)
+) -> jax.Array:
+    """Single-token flash-decode over a ring-buffer KV cache (oracle).
+
+    Slot s holds global position  pos - ((pos % C) - s) mod C ; valid slots
+    are those within [max(pos-window+1, 0), pos]."""
+    b, c, hkv, hd = k.shape
+    slot = pos % c
+    slots = jnp.arange(c)
+    gpos = pos - (slot - slots) % c
+    lo = jnp.maximum(pos - (window - 1) if window > 0 else 0, 0)
+    valid = (gpos >= lo) & (gpos <= pos)
+
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd**-0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, -2.0**30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_prefill_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Full-softmax GQA attention oracle for the flash_prefill kernel.
+
+    q: (B, S, Hkv, G, hd); k/v: (B, T, Hkv, hd) → (B, S, Hkv, G, hd)."""
+    b, s, hkv, g, hd = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        scores = jnp.where(mask[None, None, None], scores, -2.0**30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash-decode attention over a ring-buffer KV cache.
+
+The long_500k serving shape decodes ONE token against a sliding-window ring
+cache; this kernel is that hot path. Online-softmax accumulation over cache
+chunks keeps VMEM at O(chunk · head_dim):
+
+    grid = (B, Hkv, C/CK); the last grid axis is the streaming reduction —
+    running (m, l, acc) live in VMEM scratch across grid steps (TPU grid
+    iteration is sequential per core), the output block is written on the
+    final chunk.
+
+Ring-buffer masking is position arithmetic, not data movement: slot s holds
+global position  pos − ((pos mod C) − s) mod C ; valid ⇔ within
+[pos−window+1, pos]. GQA is handled by blocking all G = H/Hkv query heads of
+one KV head into a single (G, hd) q tile — one MXU matmul per chunk."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0**30
+
+
+def _swa_kernel(
+    pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, ck: int, cap: int, window: int, scale: float,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (CK, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # (G, CK)
+
+    slots = j * ck + jax.lax.broadcasted_iota(jnp.int32, (1, ck), 1)
+    slot_w = pos % cap
+    gpos = pos - (slot_w - slots) % cap
+    lo = jnp.maximum(pos - (window - 1), 0) if window > 0 else 0
+    valid = (gpos >= lo) & (gpos <= pos)           # (1, CK)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                          # (G, CK)
+    alpha = jnp.exp(m_prev - m_new)                 # (G, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (G, hd)
+    acc_new = acc_prev * alpha + pv
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(j == (cap // ck) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def _chunk(cap: int) -> int:
+    for ck in (512, 256, 128, 64):
+        if cap % ck == 0 and cap >= ck:
+            return ck
+    return cap
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def swa_decode(
+    q: jax.Array,          # (B, Hkv, G, hd)
+    k_cache: jax.Array,    # (B, C, Hkv, hd)
+    v_cache: jax.Array,    # (B, C, Hkv, hd)
+    pos: jax.Array,        # () i32 — tokens already cached
+    window: int = 0,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hkv, g, hd = q.shape
+    cap = k_cache.shape[1]
+    ck = _chunk(cap)
+    scale = hd**-0.5
+    kernel = functools.partial(
+        _swa_kernel, ck=ck, cap=cap, window=window, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        grid=(b, hkv, cap // ck),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, ck, 1, hd), lambda b_, h, j: (b_, j, h, 0)),
+            pl.BlockSpec((1, ck, 1, hd), lambda b_, h, j: (b_, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h, j: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.reshape(1, 1).astype(jnp.int32), q, k_cache, v_cache)

@@ -1,0 +1,242 @@
+"""Production meshes + parameter/state/input sharding rules.
+
+Mesh axes:
+    pod   — the cross-cloud boundary (federated replicas; slow DCN links)
+    data  — intra-cloud data parallelism (+ FSDP/ZeRO param sharding)
+    model — intra-cloud tensor/expert parallelism
+
+Parameter sharding is rule-based on leaf path names (MaxText-style): every
+architecture uses the same names for analogous weights (wq/wk/wv/wo,
+w_gate/w_up/w_down, tok/unembed, router, ...), so one rule table covers all
+10 archs. Rules only assign an axis when it divides the dimension; otherwise
+the dim stays replicated (e.g. kv heads < model-axis size under GQA)."""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Pytree = Any
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_sim_mesh(n_clouds: int = 1) -> Mesh:
+    """CPU simulation mesh: pod axis only (requires host device override)."""
+    n = len(jax.devices())
+    assert n >= n_clouds, f"need {n_clouds} devices, have {n}"
+    return jax.make_mesh((n_clouds,), ("pod",))
+
+
+def axis_size(mesh, name: str) -> int:
+    """Works for both concrete Mesh and AbstractMesh."""
+    shape = dict(mesh.shape)
+    return int(shape.get(name, 1))
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = int(np.prod([axis_size(mesh, a) for a in axis]))
+    else:
+        size = axis_size(mesh, axis)
+    return size > 1 and dim % size == 0
+
+
+# --------------------------------------------------------------- param rules
+# (regex on the leaf path, rule) — first match wins. The rule maps
+# dimension-role → axis; `_spec_for` instantiates it against the leaf shape.
+#   "last"/-1 etc. index dims from the END so stacked layer/period/cloud
+#   leading dims never shift the rule.
+_PARAM_RULES: list[tuple[str, dict[int, str]]] = [
+    # embeddings: vocab over model (megatron vocab-parallel)
+    (r"embed/tok$", {-2: "model", -1: "fsdp"}),
+    (r"embed/unembed$", {-1: "model", -2: "fsdp"}),
+    (r"router$", {-1: None}),
+    # attention: output-feature dim over model (column parallel), input dim
+    # of the out-projection over model (row parallel)
+    (r"(attn|xattn)/(wq|wk|wv)$", {-1: "model", -2: "fsdp"}),
+    (r"(attn|xattn)/wo$", {-2: "model", -1: "fsdp"}),
+    # gated MLPs (dense, griffin, whisper-plain): column/row parallel
+    (r"(ffn|mlp)/(w_gate|w_up)$", {-1: "model", -2: "fsdp"}),
+    (r"(ffn|mlp)/w_down$", {-2: "model", -1: "fsdp"}),
+    # griffin local-attention blocks keep attention weights under mix/
+    (r"mix/(wq|wk|wv)$", {-1: "model", -2: "fsdp"}),
+    (r"mix/wo$", {-2: "model", -1: "fsdp"}),
+    # griffin recurrent block
+    (r"mix/(w_x|w_y)$", {-1: "model", -2: "fsdp"}),
+    (r"mix/w_out$", {-2: "model", -1: "fsdp"}),
+    (r"mix/conv_w$", {-1: "model"}),
+    (r"mix/(gate_r|gate_i)$", {}),          # block-diag per head: replicate
+    # xLSTM blocks
+    (r"blk/w_up$", {-1: "model", -2: "fsdp"}),
+    (r"blk/(wq|wk|wv)$", {-1: "model", -2: "fsdp"}),
+    (r"blk/(w_i|w_f)$", {-2: "fsdp"}),
+    (r"blk/w_down$", {-2: "model", -1: "fsdp"}),
+    (r"blk/ff_up$", {-1: "model", -2: "fsdp"}),
+    (r"blk/ff_down$", {-2: "model", -1: "fsdp"}),
+    (r"blk/conv_w$", {-1: "model"}),
+    # vlm projector
+    (r"projector/w$", {-1: "model"}),
+]
+
+
+def _leaf_path(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _apply_rule(rule: dict[int, str], shape: tuple, fsdp_axis, mesh: Mesh) -> P:
+    axes: list = [None] * len(shape)
+    for rel_dim, axis_name in rule.items():
+        dim = len(shape) + rel_dim if rel_dim < 0 else rel_dim
+        if dim < 0 or dim >= len(shape):
+            continue
+        axis = fsdp_axis if axis_name == "fsdp" else axis_name
+        if axis is not None and _fits(shape[dim], mesh, axis):
+            axes[dim] = axis
+    return P(*axes)
+
+
+def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (no pod dim — caller prepends)."""
+    if cfg.pure_dp:
+        return P()  # replicate everything; batch covers both axes
+    fsdp_axis = "data" if cfg.fsdp else None
+    if cfg.arch_type == "moe":
+        # expert-parallel MoE weights: (L, E, D, F)/(L, E, F, D)
+        if re.search(r"ffn/(w_gate|w_up)$", path):
+            return _apply_rule({-3: "model", -1: "fsdp"}, shape, fsdp_axis, mesh)
+        if re.search(r"ffn/w_down$", path):
+            return _apply_rule({-3: "model", -2: "fsdp"}, shape, fsdp_axis, mesh)
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, path):
+            return _apply_rule(rule, shape, fsdp_axis, mesh)
+    return P()  # norms, biases, scalars: replicated
+
+
+def params_pspec_tree(params_shapes: Pytree, cfg: ModelConfig, mesh: Mesh, prefix: tuple = ()) -> Pytree:
+    """Pytree of PartitionSpecs matching ``params_shapes``."""
+
+    def spec_fn(path, leaf):
+        return P(*prefix, *param_spec(_leaf_path(path), leaf.shape, cfg, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_fn, params_shapes)
+
+
+def shardings_from_pspecs(pspecs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+
+
+# ------------------------------------------------------------ non-param state
+def opt_pspec_tree(opt_shapes: Pytree, param_pspecs: Pytree, mesh: Mesh) -> Pytree:
+    """AdamW m/v inherit the parameter sharding (ZeRO: fsdp covers them)."""
+    return {
+        "m": param_pspecs,
+        "v": param_pspecs,
+        "count": P(),
+    }
+
+
+def batch_pspec(
+    batch_shapes: Pytree, mesh: Mesh, *, pod_stacked: bool = False,
+    pure_dp: bool = False,
+) -> Pytree:
+    """tokens/labels (B, S) → P(batch_axes, None); embeds get the same B rule.
+
+    pure_dp: the model axis carries no tensor parallelism, so batch shards
+    over (data, model) (or (pod, data, model) when serving multi-pod)."""
+    dp = ("data", "model") if pure_dp else ("data",)
+    b_axes: Any = (
+        ("pod",) + dp if ("pod" in mesh.axis_names and not pod_stacked) else dp
+    )
+    b_axes = b_axes if len(b_axes) > 1 else b_axes[0]
+
+    def spec_fn(path, leaf):
+        dims: list = [None] * len(leaf.shape)
+        if pod_stacked:
+            dims[0] = "pod"
+            if len(leaf.shape) > 1:
+                if _fits(leaf.shape[1], mesh, dp):
+                    dims[1] = dp if len(dp) > 1 else dp[0]
+                elif _fits(leaf.shape[1], mesh, "data"):
+                    dims[1] = "data"
+        else:
+            if _fits(leaf.shape[0], mesh, b_axes):
+                dims[0] = b_axes
+            elif _fits(leaf.shape[0], mesh, dp):
+                dims[0] = dp if len(dp) > 1 else dp[0]
+            elif _fits(leaf.shape[0], mesh, "data"):
+                dims[0] = "data"
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_fn, batch_shapes)
+
+
+def cache_pspec(cache_shapes: Pytree, cfg: ModelConfig, mesh: Mesh, batch: int) -> Pytree:
+    """Decode-cache sharding.
+
+    Large-batch decode: shard batch over (pod,data). Batch-1 long-context:
+    shard the cache-length dim over (pod,data) instead (context parallelism)
+    — this is what makes a 500k-token cache fit."""
+    pod = "pod" in mesh.axis_names
+    dp: tuple = ("data", "model") if cfg.pure_dp else ("data",)
+    b_axes = (("pod",) + dp) if pod else dp
+    b_axes = b_axes if len(b_axes) > 1 else b_axes[0]
+    seq_axes = b_axes  # used only when batch cannot shard
+
+    batch_shardable = _fits(batch, mesh, b_axes) or _fits(batch, mesh, "data")
+    b_axis = b_axes if _fits(batch, mesh, b_axes) else ("data" if _fits(batch, mesh, "data") else None)
+
+    def spec_fn(path, leaf):
+        p = _leaf_path(path)
+        shape = leaf.shape
+        dims: list = [None] * len(shape)
+        if re.search(r"(^|/)(k|v|xk|xv)$", p) and len(shape) >= 4:
+            # (L, B, C, Hkv, hd) or stacked periods (P, B, C, Hkv, hd)
+            bdim, cdim, hdim = len(shape) - 4, len(shape) - 3, len(shape) - 2
+            if batch_shardable:
+                dims[bdim] = b_axis
+                if _fits(shape[hdim], mesh, "model"):
+                    dims[hdim] = "model"
+            else:
+                if _fits(shape[cdim], mesh, seq_axes):
+                    dims[cdim] = seq_axes
+                if _fits(shape[hdim], mesh, "model"):
+                    dims[hdim] = "model"
+            return P(*dims)
+        # recurrent states: (..., B, W) / (B, H, dh, dh) / conv tails
+        if len(shape) >= 2 and not re.search(r"(pos|window)$", p):
+            bdim = None
+            for d in range(len(shape)):
+                if shape[d] == batch:
+                    bdim = d
+                    break
+            if bdim is not None and batch_shardable:
+                dims[bdim] = b_axis
+            # shard the widest trailing dim over model if divisible
+            last = len(shape) - 1
+            if _fits(shape[last], mesh, "model") and shape[last] >= 128:
+                dims[last] = "model"
+            return P(*dims)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_fn, cache_shapes)
+
+
+# ---------------------------------------------------------------- constants
+# TPU v5e per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (intra-pod)
+DCN_BW = 6.25e9              # bytes/s cross-pod (cross-cloud, 50 Gbit/s)

@@ -1,0 +1,109 @@
+"""ShapeDtypeStruct input specs for every (architecture × input-shape) pair.
+
+Nothing here allocates: specs stand in for real arrays so the dry-run can
+``jax.jit(...).lower(**specs).compile()`` the full-size configs on a CPU
+host. Modality carve-outs: VLM/audio specs include the precomputed
+patch/frame embeddings from the stubbed frontends (vision tokens count
+against the sequence budget, so text length = seq_len − vision_seq)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import ModelAPI
+
+Pytree = Any
+
+SDS = jax.ShapeDtypeStruct
+
+ACTIVATION_BUDGET = 4e9  # target bytes of saved residuals per device
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.arch_type == "vlm" and shape.kind == "training":
+        return shape.seq_len - cfg.vision_seq
+    return shape.seq_len
+
+
+def train_batch_specs(
+    cfg: ModelConfig, shape: ShapeConfig, *, n_pods: int = 1
+) -> dict:
+    """Batch specs. n_pods>1 → leading cloud axis (federated stacking)."""
+    b = shape.global_batch
+    s = text_len(cfg, shape)
+    dt = jnp.dtype(cfg.dtype)
+
+    def shaped(*dims, dtype=jnp.int32):
+        if n_pods > 1:
+            assert dims[0] % n_pods == 0, (dims, n_pods)
+            dims = (n_pods, dims[0] // n_pods) + dims[1:]
+        return SDS(dims, dtype)
+
+    batch = {"tokens": shaped(b, s), "labels": shaped(b, s)}
+    if cfg.arch_type == "vlm":
+        batch["patch_embeds"] = shaped(b, cfg.vision_seq, cfg.d_model, dtype=dt)
+    if cfg.arch_type == "audio":
+        batch["audio_embeds"] = shaped(b, cfg.encoder_seq, cfg.d_model, dtype=dt)
+    return batch
+
+
+def decode_token_specs(shape: ShapeConfig) -> SDS:
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def state_specs(model: ModelAPI, key=None) -> tuple[Pytree, Pytree]:
+    """(params, adamw-state) ShapeDtypeStructs via eval_shape."""
+    from repro.optim.adamw import adamw_init
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = jax.eval_shape(model.init, key)
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt
+
+
+def cache_specs(
+    model: ModelAPI, cfg: ModelConfig, shape: ShapeConfig, window: int
+) -> Pytree:
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = train_batch_specs(cfg, shape)
+    # decode batches need only tokens/audio_embeds shapes
+    dec_batch = {"tokens": SDS((shape.global_batch, 1), jnp.int32)}
+    if cfg.arch_type == "audio":
+        dec_batch["audio_embeds"] = batch["audio_embeds"]
+
+    def mk(params, b):
+        return model.init_cache(params, b, shape.seq_len, window=window)
+
+    return jax.eval_shape(mk, params, dec_batch)
+
+
+def layers_for_memory(cfg: ModelConfig) -> int:
+    n = cfg.n_layers
+    if cfg.arch_type == "audio":
+        n += cfg.encoder_layers
+    return n
+
+
+def microbatch_policy(
+    cfg: ModelConfig, shape: ShapeConfig, *, n_pods: int = 1, data_axis: int = 16
+) -> int:
+    """Grad-accumulation chunks so saved residuals ≲ ACTIVATION_BUDGET/device.
+
+    Saved live set under scan+remat ≈ L · B_local · S · D · 2 bytes (the
+    per-layer residual carries); microbatching divides B_local."""
+    if shape.kind != "training":
+        return 1
+    b_local = shape.global_batch // (n_pods * data_axis)
+    if b_local == 0:
+        return 1
+    s = shape.seq_len
+    saved = layers_for_memory(cfg) * b_local * s * cfg.d_model * 2
+    k = max(1, math.ceil(saved / ACTIVATION_BUDGET))
+    while b_local % k != 0:
+        k += 1
+    return min(k, b_local)

@@ -1,0 +1,79 @@
+"""Step functions the launcher lowers: train / prefill / decode, single-pod
+and multi-pod-federated variants. These are the exact computations the
+dry-run compiles and the roofline reads."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.core.federated import FederatedTrainer
+from repro.models.model import ModelAPI
+from repro.optim.adamw import adamw_update
+from repro.utils.grad import microbatched_value_and_grad
+
+Pytree = Any
+
+
+def decode_window_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sliding-window policy: long-context decode on attention archs uses the
+    SWA ring buffer; 32k decode keeps the full cache; recurrent families keep
+    their native O(1)/local-window state everywhere."""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return 0  # native recurrent state / local-attn ring (config-internal)
+    if shape.seq_len > 32_768:
+        return cfg.decode_window
+    return 0
+
+
+def make_train_step(
+    model: ModelAPI, train_cfg: TrainConfig, microbatches: int = 1,
+    grad_shardings=None,
+) -> Callable:
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = microbatched_value_and_grad(
+            model.loss, params, batch, microbatches,
+            grad_shardings=grad_shardings,
+        )
+        params, opt = adamw_update(train_cfg, grads, opt, params)
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: ModelAPI, shape: ShapeConfig) -> Callable:
+    def prefill_step(params, batch):
+        cache, logits = model.prefill(params, batch)
+        return cache, logits
+
+    return prefill_step
+
+
+def make_decode_step(model: ModelAPI, window: int) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode(params, cache, tokens, window=window)
+
+    return decode_step
+
+
+def make_federated_step(
+    model: ModelAPI,
+    fed_cfg: FederatedConfig,
+    train_cfg: TrainConfig,
+    microbatches: int = 1,
+    grad_shardings=None,
+    mesh=None,
+) -> tuple[FederatedTrainer, Callable]:
+    """Multi-pod federated train step (spmd over the pod axis)."""
+    trainer = FederatedTrainer(
+        model, fed_cfg, train_cfg, spmd_axis="pod", microbatches=microbatches,
+        grad_shardings=grad_shardings, mesh=mesh,
+    )
+
+    def fed_step(state, batch_stack):
+        return trainer.train_step(state, batch_stack)
+
+    return trainer, fed_step

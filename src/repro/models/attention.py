@@ -1,0 +1,309 @@
+"""GQA attention: training (blockwise, memory-bounded), prefill, and decode
+with linear or ring-buffer (sliding-window) KV caches.
+
+Design notes
+------------
+* Training/prefill attention scans over **query chunks** so the live score
+  tensor is (B, heads, q_chunk, S) instead of (B, heads, S, S). At 32k
+  sequence length the full score tensor would be ~128 GiB/device-group; the
+  chunked form keeps it at q_chunk/S of that. This is the jnp-level
+  flash-attention pattern; the Pallas `swa_decode` kernel covers the decode
+  hot path.
+* Decode caches are ring buffers of capacity C. For full-attention decode
+  C = max context; for sliding-window decode C = window, which is what makes
+  `long_500k` (524288-token context) feasible: memory O(window), compute
+  O(window) per token.
+* RoPE is applied at cache-write time (keys stored rotated), so reads never
+  need per-slot position bookkeeping beyond the validity mask.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, he_init
+from repro.models.sharding import constrain
+
+Params = Any
+
+NEG_INF = -2.0**30  # large finite negative; avoids NaN from all-masked rows
+
+# When True, decode_attend computes its attention through the Pallas
+# flash-decode kernel (repro.kernels.swa_decode) instead of the jnp path.
+# The jnp path below IS the kernel's oracle; tests pin them equal.
+USE_DECODE_KERNEL = False
+
+# When True, attend_full runs the Pallas flash-attention kernel
+# (repro.kernels.flash_prefill) for training/prefill instead of the jnp
+# chunked path. The kernel keeps the softmax state in VMEM — the jnp path
+# materializes (B,Hkv,G,chunk,T) probability tensors in HBM, the dominant
+# §Roofline memory term at prefill_32k. Kernel assumes dense 0..S-1 query
+# positions (true for every training/prefill call site).
+USE_PREFILL_KERNEL = False
+
+
+def set_decode_kernel(enabled: bool) -> None:
+    global USE_DECODE_KERNEL
+    USE_DECODE_KERNEL = enabled
+
+
+def set_prefill_kernel(enabled: bool) -> None:
+    global USE_PREFILL_KERNEL
+    USE_PREFILL_KERNEL = enabled
+
+
+# ------------------------------------------------------------------ params
+def init_attention(key, cfg: ModelConfig, d_model: int | None = None) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": he_init(kq, (d, cfg.n_heads * hd), cfg.dtype),
+        "wk": he_init(kk, (d, cfg.n_kv_heads * hd), cfg.dtype),
+        "wv": he_init(kv, (d, cfg.n_kv_heads * hd), cfg.dtype),
+        "wo": he_init(ko, (cfg.n_heads * hd, d), cfg.dtype, fan_in=cfg.n_heads * hd),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int, head_dim: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,Hkv,G,hd), k: (B,Sk,Hkv,hd) → (B,Hkv,G,Sq,Sk) fp32.
+
+    Inputs stay in their storage dtype (bf16): the MXU natively accumulates
+    bf16×bf16 into fp32 (`preferred_element_type`), and explicit
+    ``astype(f32)`` casts would materialize an fp32 copy of the entire K
+    operand in HBM — at decode that is a cache-sized temp per layer."""
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, dtype) -> jax.Array:
+    """probs: (B,Hkv,G,Sq,Sk) fp32, v: (B,Sk,Hkv,hd) → (B,Sq,Hkv*G*hd).
+
+    probs are cast to the value dtype (the MXU ingests bf16); accumulation
+    stays fp32 via preferred_element_type."""
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    b, sq = out.shape[0], out.shape[1]
+    return out.reshape(b, sq, -1).astype(dtype)
+
+
+def attend_full(
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv: tuple[jax.Array, jax.Array] | None = None,
+    kv_positions: jax.Array | None = None,
+    rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross-attn).
+
+    x: (B, S, D). ``kv``: precomputed (k, v) for cross-attention (already
+    head-split and rotated if applicable); otherwise self-attention.
+    ``window > 0`` restricts to a causal sliding window.
+    """
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    b, s, _ = x.shape
+
+    q = _split_heads(x @ params["wq"], hq, hd)
+    q = constrain(q, "batch", "seq", "heads", None)
+    if kv is None:
+        k = _split_heads(x @ params["wk"], hkv, hd)
+        v = _split_heads(x @ params["wv"], hkv, hd)
+        if rope and positions is not None:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+    else:
+        k, v = kv
+        if rope and positions is not None:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        kv_pos = kv_positions
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    q = q.reshape(b, s, hkv, g, hd)
+    scale = hd**-0.5
+
+    t = k.shape[1]
+    if kv_pos is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+    def q_block(q_blk: jax.Array, pos_blk: jax.Array) -> jax.Array:
+        # q_blk: (B, C, Hkv, G, hd); pos_blk: (B, C)
+        scores = _gqa_scores(q_blk, k) * scale  # (B,Hkv,G,C,T)
+        if causal:
+            mask = pos_blk[:, None, None, :, None] >= kv_pos[:, None, None, None, :]
+            if window > 0:
+                mask &= (
+                    pos_blk[:, None, None, :, None] - kv_pos[:, None, None, None, :]
+                ) < window
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(probs, v, x.dtype)  # (B, C, H*hd)
+
+    if USE_PREFILL_KERNEL:
+        from repro.kernels.ops import flash_prefill_attention
+
+        out = flash_prefill_attention(
+            q, k, v, causal=causal, window=window, use_kernel=True
+        )
+        out = constrain(out.reshape(b, s, -1), "batch", "seq", "heads")
+        return out @ params["wo"]
+
+    # query-side positions (kv_pos is the key side — different length under
+    # cross-attention, so it must never stand in for the query positions)
+    q_pos = (
+        positions
+        if positions is not None
+        else jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    )
+    if s <= q_chunk:
+        attn = q_block(q, q_pos)
+    else:
+        n_chunks = s // q_chunk
+        assert s % q_chunk == 0, f"seq {s} not divisible by q_chunk {q_chunk}"
+        qp = q_pos
+        q_r = q.reshape(b, n_chunks, q_chunk, hkv, g, hd).swapaxes(0, 1)
+        p_r = qp.reshape(b, n_chunks, q_chunk).swapaxes(0, 1)
+        attn = jax.lax.map(lambda qb: q_block(qb[0], qb[1]), (q_r, p_r))
+        attn = attn.swapaxes(0, 1).reshape(b, s, -1)
+
+    attn = constrain(attn, "batch", "seq", "heads")
+    return attn @ params["wo"]
+
+
+# ------------------------------------------------------------------- caches
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0, dtype=None
+) -> dict:
+    """Ring-buffer KV cache. capacity = window if window>0 else max_seq."""
+    cap = window if (0 < window < max_seq) else max_seq
+    hd = cfg.resolved_head_dim
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),  # number of tokens already written
+    }
+
+
+def cache_capacity(cache: dict) -> int:
+    return cache["k"].shape[1]
+
+
+def fill_cache(cache: dict, k: jax.Array, v: jax.Array, start: int = 0) -> dict:
+    """Prefill: write S tokens (already rotated) into the ring buffer."""
+    cap = cache_capacity(cache)
+    s = k.shape[1]
+    if s >= cap:
+        # only the last `cap` tokens survive; ring layout slot = pos % cap
+        tail_k, tail_v = k[:, s - cap :], v[:, s - cap :]
+        first_pos = start + s - cap
+        roll = -((first_pos) % cap)
+        new_k = jnp.roll(tail_k, roll, axis=1)
+        new_v = jnp.roll(tail_v, roll, axis=1)
+    else:
+        idx = (start + jnp.arange(s)) % cap
+        new_k = cache["k"].at[:, idx].set(k)
+        new_v = cache["v"].at[:, idx].set(v)
+    return {"k": new_k, "v": new_v, "pos": jnp.asarray(start + s, jnp.int32)}
+
+
+def decode_attend(
+    params: Params,
+    x: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    rope: bool = True,
+) -> tuple[jax.Array, dict]:
+    """One decode step. x: (B, 1, D). Returns (out (B,1,D), new cache).
+
+    The cache is a ring buffer; ``window`` is the attention span (0 = all
+    cached tokens). Keys are stored rotated, the validity mask reconstructs
+    each slot's global position from ``pos``.
+    """
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    b = x.shape[0]
+    cap = cache_capacity(cache)
+    pos = cache["pos"]  # tokens already cached; current token index == pos
+
+    q = _split_heads(x @ params["wq"], hq, hd)
+    k = _split_heads(x @ params["wk"], hkv, hd)
+    v = _split_heads(x @ params["wv"], hkv, hd)
+    if rope:
+        pos_b = jnp.broadcast_to(pos[None], (b, 1))
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+
+    slot = pos % cap
+    # Reshard the ONE-TOKEN k/v to the cache layout BEFORE the in-place
+    # write: k/v inherit the wk/wv column-parallel (model-sharded) layout
+    # from the projection, and letting that propagate through the
+    # dynamic-update-slice makes XLA reshard the ENTIRE cache afterwards
+    # (an all-gather of cap·Hkv·hd per layer per step — ~47 GB/dev on
+    # stablelm-12b decode_32k — instead of one token's worth).
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    new_k = constrain(new_k, "batch", "cache_seq", "kv_heads", None)
+    new_v = constrain(new_v, "batch", "cache_seq", "kv_heads", None)
+
+    if USE_DECODE_KERNEL:
+        from repro.kernels.ops import swa_decode_attention
+
+        q_k = q.reshape(b, hkv, g, hd)
+        out = swa_decode_attention(q_k, new_k, new_v, pos, window, use_kernel=True)
+        out = out.reshape(b, 1, hkv * g * hd).astype(x.dtype)
+    else:
+        # global position held by each slot after the write
+        slots = jnp.arange(cap)
+        gpos = pos - (slot - slots) % cap  # == pos at slot==slot, wraps mod cap
+        lo = pos - (window - 1) if window > 0 else 0
+        valid = (gpos >= jnp.maximum(lo, 0)) & (gpos <= pos)
+
+        q = q.reshape(b, 1, hkv, g, hd)
+        scores = _gqa_scores(q, new_k) * (hd**-0.5)  # (B,Hkv,G,1,cap)
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, new_v, x.dtype)  # (B,1,H*hd)
+    out = out @ params["wo"]
+    new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    return out, new_cache
+
+
+def compute_kv_for_prefill(
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rope: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Head-split, rotated (k, v) for writing into a cache after prefill."""
+    hd = cfg.resolved_head_dim
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    if rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v

@@ -1,0 +1,151 @@
+"""Common model machinery: embeddings, vocab padding, scan-over-layers.
+
+Scan-over-layers (stacked parameter pytrees + ``lax.scan``) keeps HLO size
+and compile time independent of depth — required to dry-run the 94-layer
+config on a single CPU core. Heterogeneous block patterns (Griffin's
+(rec, rec, attn); xLSTM's every-k-th-sLSTM) use ``periodic`` layouts: one
+stacked pytree per pattern position, scanned over periods, remainder layers
+applied unrolled.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import embed_init
+from repro.models.sharding import constrain
+from repro.utils.tree import round_up
+
+Params = Any
+
+VOCAB_ALIGN = 256  # pad vocab so TP=16 shards stay (8,128)-tile aligned
+NEG_INF = -2.0**30
+
+
+def padded_vocab(vocab_size: int) -> int:
+    return round_up(vocab_size, VOCAB_ALIGN)
+
+
+# ------------------------------------------------------------- embeddings
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    vp = padded_vocab(cfg.vocab_size)
+    k1, k2 = jax.random.split(key)
+    params = {"tok": embed_init(k1, (vp, cfg.d_model), cfg.dtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(k2, (cfg.d_model, vp), cfg.dtype)
+    return params
+
+
+def embed_tokens(params: Params, tokens: jax.Array) -> jax.Array:
+    x = params["tok"][tokens]
+    return constrain(x, "batch", "seq", "embed")
+
+
+def lm_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """fp32 logits with padded-vocab columns masked out."""
+    w = params["tok"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < cfg.vocab_size, logits, NEG_INF)
+    return logits
+
+
+# --------------------------------------------------------- scan over layers
+def stack_layer_params(per_layer: list[Params]) -> Params:
+    """[{...}, {...}] -> {leaf: (L, ...)} stacked pytree."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def scan_layers(
+    body: Callable,
+    x: jax.Array,
+    xs: Params,
+    *,
+    remat: bool = True,
+    unroll: int = 1,
+):
+    """carry = hidden states; xs = stacked per-layer inputs (params [+ cache]).
+
+    ``body(x, layer_slice) -> (x, aux)``; returns (final x, stacked aux).
+    """
+    fn = body
+    if remat:
+        fn = jax.checkpoint(fn, prevent_cse=False)
+    return jax.lax.scan(fn, x, xs, unroll=unroll)
+
+
+def periodic_stack(
+    per_layer: list[Params], pattern_len: int
+) -> tuple[Params | None, list[Params]]:
+    """Group per-layer params into (periods, remainder).
+
+    ``periods``: dict {"pos0": stacked, "pos1": stacked, ...} with leading
+    dim n_periods; ``remainder``: the trailing layers that do not fill a
+    whole period, kept as a plain list (applied unrolled).
+    """
+    n = len(per_layer)
+    n_periods = n // pattern_len
+    rem = per_layer[n_periods * pattern_len :]
+    if n_periods == 0:
+        return None, rem
+    periods = {}
+    for p in range(pattern_len):
+        slot = [per_layer[i * pattern_len + p] for i in range(n_periods)]
+        periods[f"pos{p}"] = stack_layer_params(slot)
+    return periods, rem
+
+
+def periodic_scan(
+    bodies: list[Callable],
+    x: jax.Array,
+    periods: Params | None,
+    remainder: list[Params],
+    *,
+    remat: bool = True,
+):
+    """Apply a repeating heterogeneous block pattern.
+
+    ``bodies[p]``: body for pattern position p, signature
+    ``body(x, layer_params) -> (x, aux)``. Aux values from the scanned part
+    are stacked per period; remainder aux values are returned as a list.
+    """
+    pattern_len = len(bodies)
+    aux_scanned = None
+    if periods is not None:
+        def period_body(carry, period_slice):
+            auxes = []
+            for p in range(pattern_len):
+                carry, aux = bodies[p](carry, period_slice[f"pos{p}"])
+                auxes.append(aux)
+            return carry, tuple(auxes)
+
+        fn = period_body
+        if remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        x, aux_scanned = jax.lax.scan(fn, x, periods)
+    aux_rest = []
+    for i, lp in enumerate(remainder):
+        x, aux = bodies[i % pattern_len](x, lp)
+        aux_rest.append(aux)
+    return x, (aux_scanned, aux_rest)
+
+
+def positions_for(tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape[0], tokens.shape[1]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+
+def default_q_chunk(seq_len: int) -> int:
+    """Query-chunk size for blockwise attention: bound live score memory."""
+    if seq_len <= 2048:
+        return seq_len
+    for c in (1024, 512, 256):
+        if seq_len % c == 0:
+            return c
+    return seq_len

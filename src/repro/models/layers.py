@@ -1,0 +1,124 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, initializers.
+
+Pure-JAX, pure-functional: parameters are nested dicts of arrays, every layer
+is ``apply(params, x) -> y``. Layer compute runs in the model dtype (bf16 by
+default) with fp32 internals where numerics demand it (norm statistics,
+softmax, recurrence gates).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------- initializers
+def he_init(key, shape, dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = (2.0 / max(fan, 1)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def lecun_init(key, shape, dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = (1.0 / max(fan, 1)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # stored as (1 + scale)
+
+
+def init_layer_norm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies, fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MLPs
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("silu", "gelu"):  # gated: SwiGLU / GeGLU
+        return {
+            "w_gate": he_init(k1, (d_model, d_ff), dtype),
+            "w_up": he_init(k2, (d_model, d_ff), dtype),
+            "w_down": he_init(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    # plain 2-matrix MLP (whisper)
+    return {
+        "w_up": he_init(k1, (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": he_init(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_mlp(params: Params, x: jax.Array, act: str) -> jax.Array:
+    if "w_gate" in params:
+        gate = x @ params["w_gate"]
+        up = x @ params["w_up"]
+        act_fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+        return (act_fn(gate) * up) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]
+
+
+def unembed_logits(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Final projection in fp32 for stable softmax/loss."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32))
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None
+):
+    """Token-mean cross entropy + top-1 accuracy. logits fp32 (B,S,V)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    acc = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, jnp.sum(acc * mask) / denom

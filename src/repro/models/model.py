@@ -1,0 +1,178 @@
+"""Uniform model API over all 10 assigned architectures.
+
+``build_model(cfg)`` returns a ``ModelAPI`` whose members close over the
+config. Batches are dicts:
+
+    training / prefill:  {"tokens": (B,S) i32, "labels": (B,S) i32}
+                         + "patch_embeds" (B, vision_seq, D)  for vlm
+                         + "audio_embeds" (B, enc_seq, D)     for audio
+    decode:              tokens (B,1) against a cache pytree
+
+Decode caches are created by ``init_cache`` and threaded through ``decode``.
+``window=0`` means full-context decode (ring capacity = max_seq); a positive
+window selects the sliding-window ring buffer (sub-quadratic long-context).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru, transformer, vlm, whisper, xlstm
+from repro.models.moe import MOE_FFN
+from repro.models.transformer import DENSE_FFN
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, dict], tuple[jax.Array, dict]]
+    forward: Callable[[Params, dict], jax.Array]
+    init_cache: Callable[..., Any]     # (params, batch, max_seq, window=) -> cache
+    decode: Callable[..., tuple[Any, jax.Array]]   # (params, cache, tokens, window=)
+    prefill: Callable[..., tuple[Any, jax.Array]]  # (params, batch, window=, cache_window=)
+
+
+def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
+    def init(key):
+        return transformer.init_params(cfg, key, ffn)
+
+    def loss(params, batch):
+        return transformer.loss_fn(cfg, params, batch, ffn=ffn, window=cfg.window)
+
+    def forward(params, batch):
+        return transformer.forward(cfg, params, batch["tokens"], ffn=ffn, window=cfg.window)[0]
+
+    def init_cache(params, batch, max_seq, *, window=0):
+        b = batch["tokens"].shape[0]
+        return transformer.init_decode_cache(cfg, b, max_seq, window=window)
+
+    def decode(params, cache, tokens, *, window=0):
+        return transformer.decode_step(cfg, params, cache, tokens, ffn=ffn, window=window)
+
+    def prefill(params, batch, *, window=0, cache_window=0):
+        return transformer.prefill(
+            cfg, params, batch["tokens"], ffn=ffn, window=window or cfg.window,
+            cache_window=cache_window,
+        )
+
+    return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
+
+
+def _vlm_api(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return vlm.init_params(cfg, key)
+
+    def loss(params, batch):
+        return vlm.loss_fn(cfg, params, batch)
+
+    def forward(params, batch):
+        return vlm.forward(cfg, params, batch)[0]
+
+    def init_cache(params, batch, max_seq, *, window=0):
+        b = batch["tokens"].shape[0]
+        return vlm.init_decode_cache(cfg, b, max_seq, window=window)
+
+    def decode(params, cache, tokens, *, window=0):
+        return vlm.decode_step(cfg, params, cache, tokens, window=window)
+
+    def prefill(params, batch, *, window=0, cache_window=0):
+        return vlm.prefill(cfg, params, batch, window=window, cache_window=cache_window)
+
+    return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return rglru.init_params(cfg, key)
+
+    def loss(params, batch):
+        return rglru.loss_fn(cfg, params, batch)
+
+    def forward(params, batch):
+        return rglru.forward(cfg, params, batch["tokens"])[0]
+
+    def init_cache(params, batch, max_seq, *, window=0):
+        b = batch["tokens"].shape[0]
+        return rglru.init_decode_cache(cfg, b, max_seq, window=window)
+
+    def decode(params, cache, tokens, *, window=0):
+        return rglru.decode_step(cfg, params, cache, tokens, window=window)
+
+    def prefill(params, batch, *, window=0, cache_window=0):
+        return rglru.prefill(
+            cfg, params, batch["tokens"], window=window, cache_window=cache_window
+        )
+
+    return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
+
+
+def _ssm_api(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return xlstm.init_params(cfg, key)
+
+    def loss(params, batch):
+        return xlstm.loss_fn(cfg, params, batch)
+
+    def forward(params, batch):
+        return xlstm.forward(cfg, params, batch["tokens"])[0]
+
+    def init_cache(params, batch, max_seq, *, window=0):
+        b = batch["tokens"].shape[0]
+        return xlstm.init_decode_cache(cfg, b, max_seq, window=window)
+
+    def decode(params, cache, tokens, *, window=0):
+        return xlstm.decode_step(cfg, params, cache, tokens, window=window)
+
+    def prefill(params, batch, *, window=0, cache_window=0):
+        return xlstm.prefill(cfg, params, batch["tokens"])
+
+    return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
+
+
+def _audio_api(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return whisper.init_params(cfg, key)
+
+    def loss(params, batch):
+        return whisper.loss_fn(cfg, params, batch)
+
+    def forward(params, batch):
+        return whisper.forward(cfg, params, batch)[0]
+
+    def init_cache(params, batch, max_seq, *, window=0):
+        return whisper.init_decode_cache(
+            cfg, params, batch["audio_embeds"], max_seq, window=window
+        )
+
+    def decode(params, cache, tokens, *, window=0):
+        return whisper.decode_step(cfg, params, cache, tokens, window=window)
+
+    def prefill(params, batch, *, window=0, cache_window=0):
+        return whisper.prefill(
+            cfg, params, batch, window=window, cache_window=cache_window
+        )
+
+    return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.arch_type == "dense":
+        return _transformer_api(cfg, DENSE_FFN)
+    if cfg.arch_type == "moe":
+        return _transformer_api(cfg, MOE_FFN)
+    if cfg.arch_type == "vlm":
+        return _vlm_api(cfg)
+    if cfg.arch_type == "hybrid":
+        return _hybrid_api(cfg)
+    if cfg.arch_type == "ssm":
+        return _ssm_api(cfg)
+    if cfg.arch_type == "audio":
+        return _audio_api(cfg)
+    raise ValueError(f"unknown arch_type {cfg.arch_type!r}")

@@ -1,0 +1,365 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local
+sliding-window MQA attention in a repeating (rec, rec, attn) pattern.
+[arXiv:2402.19427]
+
+The RG-LRU is a gated diagonal linear recurrence:
+
+    r_t = σ(W_r x_t + b_r)           (recurrence gate, block-diag per head)
+    i_t = σ(W_i x_t + b_i)           (input gate, block-diag per head)
+    a_t = exp(-c · softplus(Λ) · r_t)          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training runs it as a ``jax.lax.associative_scan`` over time (log-depth on
+the sequence, TPU-friendly); decode is the O(1) single-step update. The
+temporal conv (width 4, depthwise, causal) carries a (width-1)-tap state in
+decode. Long-context decode is native: state is O(d), no KV growth — this is
+why the hybrid runs `long_500k` without any attention approximation (the
+local-attention blocks use a ring cache of their 2048 window).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    default_q_chunk,
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+    periodic_scan,
+    periodic_stack,
+    positions_for,
+)
+from repro.models.layers import (
+    apply_mlp,
+    cross_entropy_loss,
+    he_init,
+    init_mlp,
+    init_rms_norm,
+    rms_norm,
+)
+from repro.models.sharding import constrain
+
+Params = Any
+RG_C = 8.0
+
+
+def _pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    return tuple(cfg.block_pattern) or ("rglru", "rglru", "attn")
+
+
+# ------------------------------------------------------------------- params
+def _init_block_diag(key, n_heads: int, width: int, dtype):
+    hd = width // n_heads
+    return he_init(key, (n_heads, hd, hd), dtype, fan_in=hd)
+
+
+def _init_rec_mixing(key, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    kx, ky, ko, kc, kr, ki, kl = jax.random.split(key, 7)
+    # Λ init so that a = exp(-c·softplus(Λ)) ∈ [0.9, 0.999]
+    import numpy as np
+
+    lo, hi = -np.log(0.999) / RG_C, -np.log(0.9) / RG_C  # softplus targets
+    u = np.random.RandomState(0).uniform(lo, hi, size=(w,))
+    lam = np.log(np.expm1(u))  # inverse softplus
+    return {
+        "w_x": he_init(kx, (d, w), cfg.dtype),
+        "w_y": he_init(ky, (d, w), cfg.dtype),
+        "w_out": he_init(ko, (w, d), cfg.dtype, fan_in=w),
+        "conv_w": he_init(kc, (cfg.conv_width, w), cfg.dtype, fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((w,), cfg.dtype),
+        "gate_r": _init_block_diag(kr, cfg.n_heads, w, cfg.dtype),
+        "gate_r_b": jnp.zeros((w,), cfg.dtype),
+        "gate_i": _init_block_diag(ki, cfg.n_heads, w, cfg.dtype),
+        "gate_i_b": jnp.zeros((w,), cfg.dtype),
+        "lam": jnp.asarray(lam, jnp.float32),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    mixing = (
+        _init_rec_mixing(k1, cfg) if kind == "rglru" else attn.init_attention(k1, cfg)
+    )
+    return {
+        "ln1": init_rms_norm(cfg.d_model, cfg.dtype),
+        "mix": mixing,
+        "ln2": init_rms_norm(cfg.d_model, cfg.dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    pat = _pattern(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = [
+        _init_layer(keys[i], cfg, pat[i % len(pat)]) for i in range(cfg.n_layers)
+    ]
+    periods, rest = periodic_stack(layers, len(pat))
+    return {
+        "embed": init_embedding(keys[-1], cfg),
+        "periods": periods,
+        "rest": rest,
+        "ln_f": init_rms_norm(cfg.d_model, cfg.dtype),
+    }
+
+
+# ------------------------------------------------------------------- RG-LRU
+def _block_diag_apply(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., W) with W = H·hd; w: (H, hd, hd)."""
+    h, hd, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], h, hd)
+    out = jnp.einsum("...hi,hij->...hj", xs, w)
+    return out.reshape(*x.shape[:-1], h * hd) + b
+
+
+def _rg_lru_coeffs(p: Params, x: jax.Array):
+    """Gate computation. x: (..., W) fp32 → (a, bx) recurrence coefficients."""
+    r = jax.nn.sigmoid(_block_diag_apply(p["gate_r"], p["gate_r_b"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_apply(p["gate_i"], p["gate_i_b"], x).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, bx
+
+
+def rg_lru_scan(p: Params, x: jax.Array, h0: jax.Array | None = None):
+    """Training-time parallel scan. x: (B, S, W) → (y (B,S,W), h_final (B,W))."""
+    a, bx = _rg_lru_coeffs(p, x)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(p: Params, x: jax.Array, h_prev: jax.Array):
+    """Decode-time step. x: (B, 1, W), h_prev: (B, W) fp32."""
+    a, bx = _rg_lru_coeffs(p, x)
+    h = a[:, 0] * h_prev + bx[:, 0]
+    return h.astype(x.dtype)[:, None, :], h
+
+
+# ------------------------------------------------------- temporal conv (x4)
+def causal_conv(p: Params, x: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, S, W); tail: (B, cw-1, W) carried state.
+
+    Returns (y, new_tail)."""
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * p["conv_w"][i][None, None, :]
+        for i in range(cw)
+    )
+    return y + p["conv_b"], xp[:, -(cw - 1) :]
+
+
+# ------------------------------------------------------------- block bodies
+def _rec_mixing(p: Params, x: jax.Array, state: dict | None):
+    """Griffin recurrent branch. Returns (out, new_state)."""
+    gate = jax.nn.gelu(x @ p["w_y"])
+    main = x @ p["w_x"]
+    main = constrain(main, "batch", "seq", "lru")
+    tail = state["conv"] if state is not None else None
+    main, new_tail = causal_conv(p, main, tail)
+    if x.shape[1] == 1 and state is not None:
+        y, new_h = rg_lru_step(p, main, state["h"])
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_last = rg_lru_scan(p, main, h0)
+        new_h = h_last.astype(jnp.float32)
+    out = (y * gate) @ p["w_out"]
+    return out, {"h": new_h.astype(jnp.float32), "conv": new_tail}
+
+
+def _make_bodies(cfg: ModelConfig, mode: str, positions=None, window: int = 0):
+    """Bodies for periodic_scan. mode: train | prefill | decode.
+
+    Layer slice is {"p": params} (train) or {"p": params, "c": cache}.
+    Aux output is the new cache slice (None in train mode).
+    """
+    pat = _pattern(cfg)
+    q_chunk = default_q_chunk(positions.shape[1]) if positions is not None else 1
+    w = window or cfg.local_attn_window
+
+    def rec_body(x, sl):
+        p = sl["p"]
+        h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        if mode == "train":
+            out, _ = _rec_mixing(p["mix"], h, None)
+            new_c = None
+        else:
+            out, new_c = _rec_mixing(p["mix"], h, sl["c"])
+        x = x + out
+        f = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], f, cfg.act)
+        return x, new_c
+
+    def attn_body(x, sl):
+        p = sl["p"]
+        h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+        if mode == "decode":
+            out, new_c = attn.decode_attend(
+                p["mix"], h, {"k": sl["c"]["k"], "v": sl["c"]["v"], "pos": sl["c"]["pos"]},
+                cfg, window=w,
+            )
+            new_c = {"k": new_c["k"], "v": new_c["v"], "pos": new_c["pos"]}
+        else:
+            out = attn.attend_full(
+                p["mix"], h, positions, cfg, causal=True, window=w, q_chunk=q_chunk
+            )
+            new_c = None
+            if mode == "prefill":
+                # fill the ALLOCATED ring (sl["c"]) — its capacity may exceed
+                # the prompt length (decode-continuation headroom); building a
+                # prompt-sized ring here would silently shrink the window.
+                k, v = attn.compute_kv_for_prefill(p["mix"], h, positions, cfg)
+                empty = {
+                    "k": sl["c"]["k"], "v": sl["c"]["v"],
+                    "pos": jnp.zeros((), jnp.int32),
+                }
+                filled = attn.fill_cache(empty, k, v)
+                new_c = {"k": filled["k"], "v": filled["v"], "pos": filled["pos"]}
+        x = x + out
+        f = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], f, cfg.act)
+        return x, new_c
+
+    return [rec_body if k == "rglru" else attn_body for k in pat]
+
+
+# ------------------------------------------------------------- entry points
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    x = embed_tokens(params["embed"], tokens)
+    pos = positions_for(tokens)
+    bodies = _make_bodies(cfg, "train", positions=pos)
+    wrapped = [lambda x, lp, b=b: b(x, {"p": lp}) for b in bodies]
+    x, _ = periodic_scan(wrapped, x, params["periods"], params["rest"], remat=cfg.remat)
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    return lm_logits(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    loss, acc = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def _empty_cache_for(cfg: ModelConfig, kind: str, batch: int, window: int):
+    w_lru = cfg.lru_width or cfg.d_model
+    if kind == "rglru":
+        return {
+            "h": jnp.zeros((batch, w_lru), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w_lru), cfg.dtype),
+        }
+    cap = window or cfg.local_attn_window
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, hd), cfg.dtype),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, hd), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0):
+    pat = _pattern(cfg)
+    w = min(window or cfg.local_attn_window, max_seq)
+    per_layer = [
+        _empty_cache_for(cfg, pat[i % len(pat)], batch, w)
+        for i in range(cfg.n_layers)
+    ]
+    periods, rest = periodic_stack(per_layer, len(pat))
+    return {"periods": periods, "rest": rest, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _run_cached(cfg, params, cache, x, mode, positions=None, window=0):
+    pat = _pattern(cfg)
+    bodies = _make_bodies(cfg, mode, positions=positions, window=window)
+    pos = cache["pos"]
+
+    def with_pos(c, kind):
+        if c is not None and kind == "attn" and mode == "decode":
+            return dict(c, pos=pos)
+        return c
+
+    wrapped = []
+    for i, b in enumerate(bodies):
+        kind = pat[i]
+
+        def body(x, sl, b=b, kind=kind):
+            c = with_pos(sl.get("c"), kind)
+            return b(x, {"p": sl["p"], "c": c})
+
+        wrapped.append(body)
+
+    periods = None
+    if params["periods"] is not None:
+        periods = {"p": params["periods"], "c": cache["periods"]}
+        # re-nest: scan slice must be {"p": ..., "c": ...} per position
+        periods = {
+            f"pos{i}": {"p": params["periods"][f"pos{i}"], "c": cache["periods"][f"pos{i}"]}
+            for i in range(len(pat))
+        }
+    rest = [
+        {"p": lp, "c": lc} for lp, lc in zip(params["rest"], cache["rest"])
+    ]
+
+    def run_body(x, sl, i):
+        return wrapped[i % len(pat)](x, sl)
+
+    # periodic_scan with combined slices
+    bodies2 = [
+        (lambda x, sl, b=wrapped[i]: b(x, sl)) for i in range(len(pat))
+    ]
+    x, (aux_scanned, aux_rest) = periodic_scan(
+        bodies2, x, periods, rest, remat=(cfg.remat and mode != "decode")
+    )
+    new_cache = {
+        "periods": None,
+        "rest": list(aux_rest),
+        "pos": pos + x.shape[1] if mode == "decode" else jnp.asarray(
+            positions.shape[1] if positions is not None else 0, jnp.int32
+        ),
+    }
+    if aux_scanned is not None:
+        new_cache["periods"] = {
+            f"pos{i}": aux_scanned[i] for i in range(len(pat))
+        }
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, tokens: jax.Array, *, window: int = 0):
+    x = embed_tokens(params["embed"], tokens)
+    x, new_cache = _run_cached(cfg, params, cache, x, "decode", window=window)
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0]
+    return new_cache, logits
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *, window: int = 0, cache_window: int = 0):
+    b, s = tokens.shape
+    # ring capacity covers the continuation (cache_window ≥ s) but never
+    # exceeds the attention window — beyond it slots are dead weight.
+    cache = init_decode_cache(
+        cfg, b, max(cache_window, s), window=window or cfg.local_attn_window
+    )
+    x = embed_tokens(params["embed"], tokens)
+    pos = positions_for(tokens)
+    x, new_cache = _run_cached(cfg, params, cache, x, "prefill", positions=pos, window=window)
+    new_cache["pos"] = jnp.asarray(s, jnp.int32)
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return new_cache, logits

@@ -1,0 +1,104 @@
+"""Logical-axis activation sharding constraints (t5x/MaxText style).
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", "seq", "heads", None)``); the launch layer activates
+a rule set mapping logical names to physical mesh axes. With no active rules
+(unit tests, CPU runs) the annotation is a no-op, so model code never needs
+to know about meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, logical_to_physical: dict[str, str | None]):
+        self.mesh = mesh
+        self.map = dict(logical_to_physical)
+
+    def spec(self, *logical_axes: str | None) -> P:
+        phys = []
+        for ax in logical_axes:
+            if ax is None:
+                phys.append(None)
+                continue
+            p = self.map.get(ax)
+            phys.append(p)
+        return P(*phys)
+
+
+def active_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Apply a sharding constraint if rules are active; else identity."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        return x  # shape changed under transformation (e.g. vmap); skip
+    spec = rules.spec(*logical_axes)
+    # drop constraints that do not divide the dimension
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+
+    def axis_total(ax) -> int:
+        if isinstance(ax, tuple):
+            total = 1
+            for a in ax:
+                total *= sizes.get(a, 1)
+            return total
+        return sizes.get(ax, 1)
+
+    fixed = []
+    used: set[str] = set()  # each mesh axis may appear at most once per spec
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        cand = tuple(a for a in cand if a not in used and sizes.get(a, 1) > 1)
+        if not cand or dim % axis_total(cand) != 0:
+            fixed.append(None)
+            continue
+        fixed.append(cand if len(cand) > 1 else cand[0])
+        used.update(cand)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*fixed))
+    )
+
+
+# Default logical→physical mapping for the production meshes. The federated
+# layer maps "batch" to the data axis only (the pod axis is handled by
+# shard_map outside the per-cloud step).
+DEFAULT_RULES = {
+    "batch": "data",
+    "seq": None,
+    "cache_seq": "data",     # decode: shard long KV caches over the data axis
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "lru": "model",
+    "inner": "model",
+}

@@ -1,0 +1,230 @@
+"""Decoder-only transformer: train forward, prefill, and cached decode.
+
+This module is the generic engine for the dense, MoE and VLM architectures:
+the FFN is a hook (dense MLP or MoE layer), and the embedding entry point is
+split out (`forward_embeds`) so the VLM can inject patch embeddings.
+
+All layer iteration is ``lax.scan`` over stacked parameters; decode carries
+ring-buffer KV caches as stacked (L, B, C, Hkv, hd) arrays scanned jointly
+with the layer params.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    default_q_chunk,
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+    positions_for,
+    scan_layers,
+    stack_layer_params,
+)
+from repro.models.layers import (
+    apply_mlp,
+    cross_entropy_loss,
+    init_mlp,
+    init_rms_norm,
+    rms_norm,
+)
+
+Params = Any
+
+
+class FFNHooks(NamedTuple):
+    """Pluggable feed-forward: dense MLP (here) or MoE (models/moe.py)."""
+    init: Callable[[jax.Array, ModelConfig], Params]
+    apply: Callable[[Params, jax.Array, ModelConfig], tuple[jax.Array, jax.Array]]
+
+
+def _dense_ffn_init(key, cfg: ModelConfig) -> Params:
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)
+
+
+def _dense_ffn_apply(params, x, cfg: ModelConfig):
+    return apply_mlp(params, x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+DENSE_FFN = FFNHooks(_dense_ffn_init, _dense_ffn_apply)
+
+
+# ---------------------------------------------------------------------- init
+def init_layer(key, cfg: ModelConfig, ffn: FFNHooks) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, cfg.dtype),
+        "attn": attn.init_attention(k1, cfg),
+        "ln2": init_rms_norm(cfg.d_model, cfg.dtype),
+        "ffn": ffn.init(k2, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key, ffn: FFNHooks = DENSE_FFN) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = [init_layer(keys[i], cfg, ffn) for i in range(cfg.n_layers)]
+    return {
+        "embed": init_embedding(keys[-1], cfg),
+        "layers": stack_layer_params(layers),
+        "ln_f": init_rms_norm(cfg.d_model, cfg.dtype),
+    }
+
+
+# ------------------------------------------------------------------- forward
+def forward_embeds(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward on embeddings. Returns (hidden, aux_loss_sum)."""
+    q_chunk = default_q_chunk(x.shape[1])
+
+    def body(h, lp):
+        a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        a = attn.attend_full(
+            lp["attn"], a, positions, cfg, causal=True, window=window,
+            q_chunk=q_chunk,
+        )
+        h = h + a
+        f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        f, aux = ffn.apply(lp["ffn"], f, cfg)
+        return h + f, aux
+
+    x, auxes = scan_layers(body, x, params["layers"], remat=cfg.remat)
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    return x, jnp.sum(auxes)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) → (logits fp32 (B, S, Vp), aux_loss)."""
+    x = embed_tokens(params["embed"], tokens)
+    pos = positions_for(tokens)
+    x, aux = forward_embeds(cfg, params, x, pos, ffn=ffn, window=window)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    batch: dict,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+) -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, batch["tokens"], ffn=ffn, window=window)
+    loss, acc = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "accuracy": acc, "aux_loss": aux}
+
+
+# -------------------------------------------------------------------- decode
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0
+) -> dict:
+    cap = window if (0 < window < max_seq) else max_seq
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cap, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+        "window": jnp.asarray(window, jnp.int32),
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: dict,
+    tokens: jax.Array,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+) -> tuple[dict, jax.Array]:
+    """One token for every sequence. tokens (B, 1) → (cache', logits (B, Vp))."""
+    x = embed_tokens(params["embed"], tokens)
+    pos = cache["pos"]
+
+    def body(h, sl):
+        lp, ck, cv = sl
+        a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        a, newc = attn.decode_attend(
+            lp["attn"], a, {"k": ck, "v": cv, "pos": pos}, cfg, window=window
+        )
+        h = h + a
+        f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        f, _ = ffn.apply(lp["ffn"], f, cfg)
+        return h + f, (newc["k"], newc["v"])
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0]
+    new_cache = {"k": nk, "v": nv, "pos": pos + 1, "window": cache["window"]}
+    return new_cache, logits
+
+
+# ------------------------------------------------------------------- prefill
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+    cache_window: int = 0,
+) -> tuple[dict, jax.Array]:
+    """Process a full prompt, build the decode cache, return last-pos logits."""
+    b, s = tokens.shape
+    q_chunk = default_q_chunk(s)
+    x = embed_tokens(params["embed"], tokens)
+    pos = positions_for(tokens)
+    # cache_window > s allocates headroom for decode continuation;
+    # cache_window < s is a sliding-window ring smaller than the prompt.
+    cap = cache_window if cache_window > 0 else s
+
+    def body(h, lp):
+        a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
+        a = attn.attend_full(
+            lp["attn"], a, pos, cfg, causal=True, window=window, q_chunk=q_chunk
+        )
+        h = h + a
+        f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        f, _ = ffn.apply(lp["ffn"], f, cfg)
+        layer_cache = attn.fill_cache(
+            {
+                "k": jnp.zeros((b, cap, cfg.n_kv_heads, cfg.resolved_head_dim), cfg.dtype),
+                "v": jnp.zeros((b, cap, cfg.n_kv_heads, cfg.resolved_head_dim), cfg.dtype),
+                "pos": jnp.zeros((), jnp.int32),
+            },
+            k,
+            v,
+        )
+        return h + f, (layer_cache["k"], layer_cache["v"])
+
+    x, (ck, cv) = scan_layers(body, x, params["layers"], remat=cfg.remat)
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    cache = {
+        "k": ck,
+        "v": cv,
+        "pos": jnp.asarray(s, jnp.int32),
+        "window": jnp.asarray(cache_window, jnp.int32),
+    }
+    return cache, logits

@@ -1,0 +1,576 @@
+"""xLSTM: mLSTM (matrix-memory, parallelizable) + sLSTM (scalar-memory,
+recurrent-weight) blocks. [arXiv:2405.04517]
+
+* mLSTM trains in its stabilized parallel (quadratic) form — an
+  attention-like einsum with exponential-gate decay matrix D — and decodes
+  with the O(1) recurrent update of the matrix memory C ∈ R^{h×d×d}. The
+  parallel form is query-chunked like attention so prefill_32k stays
+  memory-bounded.
+* sLSTM has recurrent weights (block-diagonal per head), so training scans
+  over time (`lax.scan`); decode is the same cell applied once.
+* Block pattern: every ``cfg.slstm_every``-th block is sLSTM, the rest
+  mLSTM, via the periodic-scan machinery.
+
+Long-context decode is native: total state is O(h·d²) per mLSTM block —
+no KV cache — which is why xlstm runs `long_500k` without approximation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+    periodic_scan,
+    periodic_stack,
+)
+from repro.models.layers import (
+    cross_entropy_loss,
+    he_init,
+    init_rms_norm,
+    rms_norm,
+)
+from repro.models.rglru import causal_conv
+from repro.models.sharding import constrain
+
+Params = Any
+
+
+def _pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    if cfg.slstm_every and cfg.slstm_every > 0:
+        return tuple(["mlstm"] * (cfg.slstm_every - 1) + ["slstm"])
+    return ("mlstm",)
+
+
+def _inner(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model  # mLSTM projection factor 2
+
+
+# ------------------------------------------------------------------- params
+def _init_mlstm(key, cfg: ModelConfig) -> Params:
+    d, inner = cfg.d_model, _inner(cfg)
+    h = cfg.n_heads
+    dh = inner // h
+    ku, kq, kk, kv, ki, kf, ko, kd = jax.random.split(key, 8)
+    return {
+        "w_up": he_init(ku, (d, 2 * inner), cfg.dtype),
+        "conv_w": he_init(kq, (4, inner), cfg.dtype, fan_in=4),
+        "conv_b": jnp.zeros((inner,), cfg.dtype),
+        "wq": he_init(kq, (inner, inner), cfg.dtype),
+        "wk": he_init(kk, (inner, inner), cfg.dtype),
+        "wv": he_init(kv, (inner, inner), cfg.dtype),
+        "w_i": he_init(ki, (inner, h), cfg.dtype, fan_in=inner),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": he_init(kf, (inner, h), cfg.dtype, fan_in=inner),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # forget-gate bias: keep memory
+        "skip": jnp.ones((inner,), cfg.dtype),
+        "gn": jnp.ones((inner,), cfg.dtype),      # per-head groupnorm scale
+        "w_down": he_init(kd, (inner, d), cfg.dtype, fan_in=inner),
+    }
+
+
+def _init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    kz, ki, kf, ko, rz, ri, rf, ro, kf1, kf2 = jax.random.split(key, 10)
+    dh = d // h
+
+    def rec(k):
+        return he_init(k, (h, dh, dh), cfg.dtype, fan_in=dh)
+
+    ff = max(1, int(d * 4 / 3) // 64 * 64) or 64
+    return {
+        "conv_w": he_init(kz, (4, d), cfg.dtype, fan_in=4),
+        "conv_b": jnp.zeros((d,), cfg.dtype),
+        "w_z": he_init(kz, (d, d), cfg.dtype),
+        "w_i": he_init(ki, (d, d), cfg.dtype),
+        "w_f": he_init(kf, (d, d), cfg.dtype),
+        "w_o": he_init(ko, (d, d), cfg.dtype),
+        "r_z": rec(rz),
+        "r_i": rec(ri),
+        "r_f": rec(rf),
+        "r_o": rec(ro),
+        "b_z": jnp.zeros((d,), jnp.float32),
+        "b_i": jnp.zeros((d,), jnp.float32),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "b_o": jnp.zeros((d,), jnp.float32),
+        "gn": jnp.ones((d,), cfg.dtype),
+        "ff_up": he_init(kf1, (d, 2 * ff), cfg.dtype),
+        "ff_down": he_init(kf2, (ff, d), cfg.dtype, fan_in=ff),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    k1, _ = jax.random.split(key)
+    p = _init_mlstm(k1, cfg) if kind == "mlstm" else _init_slstm(k1, cfg)
+    return {"ln": init_rms_norm(cfg.d_model, cfg.dtype), "blk": p, "kind_mlstm": kind == "mlstm"}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    pat = _pattern(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        lp = _init_layer(keys[i], cfg, pat[i % len(pat)])
+        lp.pop("kind_mlstm")
+        layers.append(lp)
+    periods, rest = periodic_stack(layers, len(pat))
+    return {
+        "embed": init_embedding(keys[-1], cfg),
+        "periods": periods,
+        "rest": rest,
+        "ln_f": init_rms_norm(cfg.d_model, cfg.dtype),
+    }
+
+
+# ----------------------------------------------------------- mLSTM parallel
+def _head_norm(x: jax.Array, scale: jax.Array, h: int, eps: float) -> jax.Array:
+    """Per-head RMS norm of (..., inner) viewed as h heads."""
+    shp = x.shape
+    xs = x.reshape(*shp[:-1], h, shp[-1] // h).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xs), axis=-1, keepdims=True)
+    xs = xs * jax.lax.rsqrt(var + eps)
+    return (xs.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_parallel(
+    q: jax.Array, k: jax.Array, v: jax.Array, i_pre: jax.Array, f_pre: jax.Array,
+    q_chunk: int = 1024,
+):
+    """Stabilized parallel mLSTM. q,k,v: (B,S,H,dh); i_pre,f_pre: (B,S,H) fp32.
+
+    Returns h: (B,S,H,dh)."""
+    b, s, h, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)                    # (B,S,H)
+    lf_cum = jnp.cumsum(logf, axis=1)                   # Σ_{r<=t} log f_r
+    scale = dh**-0.5
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def block(args):
+        qb, lf_b, t_idx = args                          # (B,C,H,dh), (B,C,H), (C,)
+        # D̃[t,s] = lf_cum[t] - lf_cum[s] + ĩ_s  (decay over r = s+1..t)
+        dtil = (
+            lf_b[:, :, None, :]                          # (B,C,1,H)
+            - lf_cum[:, None, :, :]                      # (B,1,S,H)
+            + i_pre[:, None, :, :]
+        )                                                # (B,C,S,H)
+        causal = t_idx[:, None] >= jnp.arange(s)[None, :]
+        dtil = jnp.where(causal[None, :, :, None], dtil, -jnp.inf)
+        m = jnp.max(dtil, axis=2, keepdims=True)         # (B,C,1,H)
+        m = jnp.maximum(m, -1e30)                        # guard all -inf rows
+        d = jnp.exp(dtil - m)                            # (B,C,S,H)
+        scores = jnp.einsum("bchd,bshd->bcsh", qb, kf) * scale
+        sw = scores * d
+        n = jnp.maximum(jnp.abs(jnp.sum(sw, axis=2)), jnp.exp(-m[:, :, 0, :]))
+        out = jnp.einsum("bcsh,bshd->bchd", sw, vf) / n[..., None]
+        return out
+
+    if s <= q_chunk:
+        out = block((qf, lf_cum, jnp.arange(s)))
+    else:
+        assert s % q_chunk == 0
+        nc = s // q_chunk
+        q_r = qf.reshape(b, nc, q_chunk, h, dh).swapaxes(0, 1)
+        lf_r = lf_cum.reshape(b, nc, q_chunk, h).swapaxes(0, 1)
+        t_r = jnp.arange(s).reshape(nc, q_chunk)
+        out = jax.lax.map(block, (q_r, lf_r, t_r))
+        out = out.swapaxes(0, 1).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def mlstm_final_state(
+    k: jax.Array, v: jax.Array, i_pre: jax.Array, f_pre: jax.Array
+):
+    """Final (C, n, m) after consuming the whole sequence (for prefill)."""
+    b, s, h, dh = k.shape
+    logf = jax.nn.log_sigmoid(f_pre)
+    lf_cum = jnp.cumsum(logf, axis=1)
+    total = lf_cum[:, -1:]                               # (B,1,H)
+    # weight of position s in the final state: Π_{r>s} f_r · exp(ĩ_s)
+    w_log = total - lf_cum + i_pre                       # (B,S,H)
+    m = jnp.max(w_log, axis=1)                           # (B,H)
+    w = jnp.exp(w_log - m[:, None, :])
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c = jnp.einsum("bsh,bshd,bshe->bhde", w, kf, vf)     # (B,H,dh,dh)
+    n = jnp.einsum("bsh,bshd->bhd", w, kf)
+    return c, n, m
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """O(1) decode update. q,k,v: (B,H,dh); i_pre,f_pre: (B,H).
+
+    state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)), all fp32 in stabilized
+    space (C,n are scaled by exp(-m))."""
+    c, n, m = state
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    f_s = jnp.exp(logf + m - m_new)
+    i_s = jnp.exp(i_pre - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = f_s[..., None, None] * c + i_s[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n = f_s[..., None] * n + i_s[..., None] * kf
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    num = jnp.einsum("bhde,bhd->bhe", c, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), jnp.exp(-m_new))
+    out = num / den[..., None]
+    return (c, n, m_new), out.astype(q.dtype)
+
+
+def _mlstm_qkvif(p: Params, x_main: jax.Array, h: int):
+    inner = x_main.shape[-1]
+    dh = inner // h
+    q = (x_main @ p["wq"]).reshape(*x_main.shape[:-1], h, dh)
+    k = (x_main @ p["wk"]).reshape(*x_main.shape[:-1], h, dh)
+    v = (x_main @ p["wv"]).reshape(*x_main.shape[:-1], h, dh)
+    i_pre = (x_main @ p["w_i"]).astype(jnp.float32) + p["b_i"]
+    f_pre = (x_main @ p["w_f"]).astype(jnp.float32) + p["b_f"]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, state: dict | None):
+    """x: (B,S,d). Returns (out (B,S,d), new_state)."""
+    h = cfg.n_heads
+    up = x @ p["w_up"]
+    main, gate = jnp.split(up, 2, axis=-1)
+    main = constrain(main, "batch", "seq", "inner")
+    tail = state["conv"] if state is not None else None
+    conv_out, new_tail = causal_conv(p, main, tail)
+    conv_out = jax.nn.silu(conv_out)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, conv_out, h)
+    if x.shape[1] == 1 and state is not None:
+        (c, n, m), cell = mlstm_step(
+            (state["c"], state["n"], state["m"]),
+            q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0],
+        )
+        cell = cell[:, None]
+        new_state = {"c": c, "n": n, "m": m, "conv": new_tail}
+    else:
+        cell = mlstm_parallel(q, k, v, i_pre, f_pre)
+        if state is not None:
+            c, n, m = mlstm_final_state(k, v, i_pre, f_pre)
+            new_state = {"c": c, "n": n, "m": m, "conv": new_tail}
+        else:
+            new_state = None
+    cell = cell.reshape(*x.shape[:-1], -1)
+    cell = _head_norm(cell, p["gn"], h, cfg.norm_eps)
+    cell = cell + p["skip"] * conv_out
+    out = (cell * jax.nn.silu(gate)) @ p["w_down"]
+    return out, new_state
+
+
+# ------------------------------------------------------------------- sLSTM
+def _block_diag(w: jax.Array, x: jax.Array) -> jax.Array:
+    h, dh, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], h, dh)
+    return jnp.einsum("...hi,hij->...hj", xs, w).reshape(x.shape)
+
+
+def slstm_cell(p: Params, xz, xi, xf, xo, state):
+    """One sLSTM step. x*: (B,d) pre-activations from the input; state dict."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    hf = h.astype(xz.dtype)
+    z = jnp.tanh((xz + _block_diag(p["r_z"], hf)).astype(jnp.float32) + p["b_z"])
+    i_pre = (xi + _block_diag(p["r_i"], hf)).astype(jnp.float32) + p["b_i"]
+    f_pre = (xf + _block_diag(p["r_f"], hf)).astype(jnp.float32) + p["b_f"]
+    o = jax.nn.sigmoid((xo + _block_diag(p["r_o"], hf)).astype(jnp.float32) + p["b_o"])
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+# -------------------------------------------- sLSTM training scan, custom VJP
+#
+# Under plain AD, the scan's VJP emits each timestep's recurrent-weight
+# gradient contribution inside the backward loop body, and SPMD all-reduces
+# it there: one (r_z,r_i,r_f,r_o,b_*) tuple all-reduce PER TIMESTEP per
+# sLSTM layer (~55 GB/dev on train_4k — the dominant collective). This
+# custom VJP restructures the backward pass the way high-performance RNN
+# implementations do:
+#   * the reverse-time scan computes ONLY the per-step pre-activation deltas
+#     (dzpre/dipre/dfpre/dopre) and the dh/dc/dn carry chain — no weight
+#     gradients, hence no collectives in the loop;
+#   * weight gradients are one batched einsum over (S, B) AFTER the scan
+#     (dR = Σ_t h_{t-1} ⊗ δpre_t), which XLA syncs with a single all-reduce.
+#
+# The stabilizer m is treated as stop-gradient: c and n both carry the
+# common factor exp(-m), which cancels exactly in h = o·c/max(n,eps), so
+# ∂h/∂m ≡ 0 in exact arithmetic — the stop-grad is exact, not approximate.
+
+_SLSTM_EPS = 1e-6
+
+
+def _slstm_gates(p, hf, xz, xi, xf, xo):
+    """Pre-activations for one step. hf: (B,d) in storage dtype."""
+    zpre = (xz + _block_diag(p["r_z"], hf)).astype(jnp.float32) + p["b_z"]
+    ipre = (xi + _block_diag(p["r_i"], hf)).astype(jnp.float32) + p["b_i"]
+    fpre = (xf + _block_diag(p["r_f"], hf)).astype(jnp.float32) + p["b_f"]
+    opre = (xo + _block_diag(p["r_o"], hf)).astype(jnp.float32) + p["b_o"]
+    return zpre, ipre, fpre, opre
+
+
+@jax.custom_vjp
+def slstm_scan_train(rec, xz, xi, xf, xo):
+    """Training-time sLSTM over (B,S,d) pre-projected inputs → hs (B,S,d) f32.
+
+    rec = {r_z,r_i,r_f,r_o,b_z,b_i,b_f,b_o}. Zero initial state."""
+    hs, _ = _slstm_fwd_core(rec, xz, xi, xf, xo)
+    return hs
+
+
+def _slstm_fwd_core(rec, xz, xi, xf, xo):
+    b, s, d = xz.shape
+    dt = xz.dtype
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        xz_t, xi_t, xf_t, xo_t = xs
+        zpre, ipre, fpre, opre = _slstm_gates(rec, h.astype(dt), xz_t, xi_t, xf_t, xo_t)
+        z = jnp.tanh(zpre)
+        o = jax.nn.sigmoid(opre)
+        f_sig = jax.nn.sigmoid(fpre)
+        logf = jax.nn.log_sigmoid(fpre)
+        m_new = jnp.maximum(logf + m, ipre)
+        i_s = jnp.exp(ipre - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, _SLSTM_EPS)
+        saved = (z, i_s, f_s, o, f_sig, c_new, n_new, h_new)
+        return (c_new, n_new, h_new, m_new), saved
+
+    zero = jnp.zeros((b, d), jnp.float32)
+    carry0 = (zero, zero, zero, jnp.full((b, d), -1e30, jnp.float32))
+    xs = tuple(a.swapaxes(0, 1) for a in (xz, xi, xf, xo))
+    _, saved = jax.lax.scan(step, carry0, xs)
+    hs = saved[-1].swapaxes(0, 1)  # (B,S,d) f32
+    return hs, saved
+
+
+def _slstm_fwd(rec, xz, xi, xf, xo):
+    hs, saved = _slstm_fwd_core(rec, xz, xi, xf, xo)
+    return hs, (rec, xz, xi, xf, xo, saved)
+
+
+def _slstm_bwd(res, dhs):
+    rec, xz, xi, xf, xo, saved = res
+    z, i_s, f_s, o, f_sig, c_seq, n_seq, h_seq = saved  # all (S,B,d) f32
+    s, b, d = z.shape
+    dt = xz.dtype
+    zero = jnp.zeros((b, d), jnp.float32)
+
+    # previous-step states (shifted by one; zero initial)
+    def prev(seq):
+        return jnp.concatenate([zero[None], seq[:-1]], axis=0)
+
+    c_prev, n_prev, h_prev = prev(c_seq), prev(n_seq), prev(h_seq)
+
+    def bwd_step(carry, xs):
+        dh_rec, dc_next, dn_next = carry
+        dhs_t, z_t, i_t, f_t, o_t, fs_t, c_t, n_t, cp, np_ = xs
+        dh = dhs_t + dh_rec
+        nh = jnp.maximum(n_t, _SLSTM_EPS)
+        dc = dh * o_t / nh + dc_next
+        dn_raw = -dh * o_t * c_t / (nh * nh)
+        dn = jnp.where(n_t > _SLSTM_EPS, dn_raw, 0.0) + dn_next
+        do = dh * c_t / nh
+        dopre = do * o_t * (1.0 - o_t)
+        dzpre = dc * i_t * (1.0 - z_t * z_t)
+        dipre = (dc * z_t + dn) * i_t
+        dlogf = (dc * cp + dn * np_) * f_t
+        dfpre = dlogf * (1.0 - fs_t)
+        # recurrent path into h_{t-1}: transpose block-diag matmuls
+        def bdT(w, g):
+            h_, dh_, _ = w.shape
+            gs = g.reshape(b, h_, dh_)
+            out = jnp.einsum(
+                "bhj,hij->bhi", gs, w.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return out.reshape(b, h_ * dh_)
+
+        dh_prev = (
+            bdT(rec["r_z"], dzpre) + bdT(rec["r_i"], dipre)
+            + bdT(rec["r_f"], dfpre) + bdT(rec["r_o"], dopre)
+        )
+        dc_prev = dc * f_t
+        dn_prev = dn * f_t
+        return (dh_prev, dc_prev, dn_prev), (dzpre, dipre, dfpre, dopre)
+
+    xs = (dhs.swapaxes(0, 1), z, i_s, f_s, o, f_sig, c_seq, n_seq, c_prev, n_prev)
+    _, deltas = jax.lax.scan(bwd_step, (zero, zero, zero), xs, reverse=True)
+    dzpre, dipre, dfpre, dopre = deltas  # (S,B,d)
+
+    # weight grads: ONE contraction over (S,B) per weight — outside the loop
+    h_ = rec["r_z"].shape[0]
+    dh_ = rec["r_z"].shape[1]
+    hp = h_prev.reshape(s, b, h_, dh_)
+
+    def dR(dpre):
+        return jnp.einsum(
+            "sbhi,sbhj->hij", hp, dpre.reshape(s, b, h_, dh_),
+            preferred_element_type=jnp.float32,
+        ).astype(rec["r_z"].dtype)
+
+    drec = {
+        "r_z": dR(dzpre), "r_i": dR(dipre), "r_f": dR(dfpre), "r_o": dR(dopre),
+        "b_z": jnp.sum(dzpre, (0, 1)), "b_i": jnp.sum(dipre, (0, 1)),
+        "b_f": jnp.sum(dfpre, (0, 1)), "b_o": jnp.sum(dopre, (0, 1)),
+    }
+    dx = tuple(dp.swapaxes(0, 1).astype(dt) for dp in (dzpre, dipre, dfpre, dopre))
+    return (drec,) + dx
+
+
+slstm_scan_train.defvjp(_slstm_fwd, _slstm_bwd)
+
+
+def slstm_block(p: Params, x: jax.Array, cfg: ModelConfig, state: dict | None):
+    b, s, d = x.shape
+    tail = state["conv"] if state is not None else None
+    conv_out, new_tail = causal_conv(p, x, tail)
+    conv_out = jax.nn.silu(conv_out)
+    xz = conv_out @ p["w_z"]
+    xi = conv_out @ p["w_i"]
+    xf = conv_out @ p["w_f"]
+    xo = x @ p["w_o"]
+    if state is None:
+        # training: custom-VJP scan (weight grads leave the loop — see above)
+        rec = {k: p[k] for k in ("r_z", "r_i", "r_f", "r_o", "b_z", "b_i", "b_f", "b_o")}
+        hs = slstm_scan_train(rec, xz, xi, xf, xo).astype(x.dtype)
+        carry = None
+    else:
+        cell_state = {k: state[k] for k in ("c", "n", "h", "m")}
+
+        def step(carry, xs):
+            new = slstm_cell(p, *xs, carry)
+            return new, new["h"]
+
+        carry, hs = jax.lax.scan(
+            step,
+            cell_state,
+            (
+                xz.swapaxes(0, 1), xi.swapaxes(0, 1),
+                xf.swapaxes(0, 1), xo.swapaxes(0, 1),
+            ),
+        )
+        hs = hs.swapaxes(0, 1).astype(x.dtype)           # (B,S,d)
+    hs = _head_norm(hs, p["gn"], cfg.n_heads, cfg.norm_eps)
+    ff_gate, ff_up = jnp.split(hs @ p["ff_up"], 2, axis=-1)
+    out = (jax.nn.gelu(ff_gate) * ff_up) @ p["ff_down"]
+    new_state = None
+    if state is not None:
+        new_state = dict(carry)
+        new_state["conv"] = new_tail
+    return out, new_state
+
+
+# ------------------------------------------------------------- entry points
+def _bodies(cfg: ModelConfig, mode: str):
+    def mk(kind):
+        def body(x, sl):
+            p = sl["p"]
+            h = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+            state = sl.get("c") if mode != "train" else None
+            fn = mlstm_block if kind == "mlstm" else slstm_block
+            out, new_state = fn(p["blk"], h, cfg, state)
+            return x + out, new_state
+        return body
+
+    return [mk(k) for k in _pattern(cfg)]
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    x = embed_tokens(params["embed"], tokens)
+    bodies = _bodies(cfg, "train")
+    wrapped = [lambda x, lp, b=b: b(x, {"p": lp}) for b in bodies]
+    x, _ = periodic_scan(wrapped, x, params["periods"], params["rest"], remat=cfg.remat)
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    return lm_logits(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    loss, acc = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def _empty_state(cfg: ModelConfig, kind: str, batch: int):
+    d, inner, h = cfg.d_model, _inner(cfg), cfg.n_heads
+    if kind == "mlstm":
+        dh = inner // h
+        return {
+            "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, 3, inner), cfg.dtype),
+        }
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d), cfg.dtype),
+    }
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0):
+    pat = _pattern(cfg)
+    per_layer = [
+        _empty_state(cfg, pat[i % len(pat)], batch) for i in range(cfg.n_layers)
+    ]
+    periods, rest = periodic_stack(per_layer, len(pat))
+    return {"periods": periods, "rest": rest, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _run_cached(cfg, params, cache, x, mode):
+    pat = _pattern(cfg)
+    bodies = _bodies(cfg, mode)
+    wrapped = [
+        (lambda x, sl, b=b: b(x, sl)) for b in bodies
+    ]
+    periods = None
+    if params["periods"] is not None:
+        periods = {
+            f"pos{i}": {"p": params["periods"][f"pos{i}"], "c": cache["periods"][f"pos{i}"]}
+            for i in range(len(pat))
+        }
+    rest = [{"p": lp, "c": lc} for lp, lc in zip(params["rest"], cache["rest"])]
+    x, (aux_scanned, aux_rest) = periodic_scan(
+        wrapped, x, periods, rest, remat=(cfg.remat and mode != "decode")
+    )
+    new_cache = {"periods": None, "rest": list(aux_rest), "pos": cache["pos"] + x.shape[1]}
+    if aux_scanned is not None:
+        new_cache["periods"] = {f"pos{i}": aux_scanned[i] for i in range(len(pat))}
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, tokens: jax.Array, *, window: int = 0):
+    x = embed_tokens(params["embed"], tokens)
+    x, new_cache = _run_cached(cfg, params, cache, x, "decode")
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0]
+    return new_cache, logits
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *, window: int = 0, cache_window: int = 0):
+    b, s = tokens.shape
+    cache = init_decode_cache(cfg, b, s)
+    x = embed_tokens(params["embed"], tokens)
+    x, new_cache = _run_cached(cfg, params, cache, x, "prefill")
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    return new_cache, logits

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update, lr_schedule
+from repro.optim.outer import outer_init, outer_update
+
+__all__ = ["adamw_init", "adamw_update", "lr_schedule", "outer_init", "outer_update"]

@@ -1,0 +1,78 @@
+"""AdamW (decoupled weight decay) in pure JAX — the inner, per-cloud optimizer.
+
+State layout mirrors the parameter pytree: ``{"m": tree, "v": tree,
+"count": i32}``. Moments are fp32 regardless of the parameter dtype (bf16
+params with fp32 state is the production norm). Under FSDP the state simply
+inherits the parameter sharding (ZeRO-1).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.utils.tree import tree_map, tree_sq_norm
+
+Pytree = Any
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    total = jnp.maximum(cfg.steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * cos
+
+
+def adamw_init(params: Pytree) -> dict:
+    return {
+        "m": tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = jnp.sqrt(tree_sq_norm(grads))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    cfg: TrainConfig,
+    grads: Pytree,
+    state: dict,
+    params: Pytree,
+    lr: jax.Array | float | None = None,
+) -> tuple[Pytree, dict]:
+    count = state["count"] + 1
+    if lr is None:
+        lr = lr_schedule(cfg, count)
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p_new = p.astype(jnp.float32) - lr * (step + decay)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    is_tup = lambda x: isinstance(x, tuple)
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_tup)
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_tup)
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=is_tup)
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,2 @@
+from repro.utils import tree as tree
+from repro.utils import hlo as hlo

@@ -1,0 +1,73 @@
+"""Microbatched gradient accumulation.
+
+Large-arch train steps can't hold a full per-device batch of rematerialized
+activations (94 layers × B·S·D), so the batch is split into k microbatches
+scanned sequentially, accumulating grads in fp32. Loss/metrics are
+microbatch means; the result is numerically the same token-mean gradient."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def microbatched_value_and_grad(
+    loss_fn: Callable, params: Pytree, batch: Pytree, microbatches: int,
+    grad_shardings: Pytree | None = None,
+):
+    """loss_fn(params, batch) -> (loss, metrics dict). Returns
+    ((loss, metrics), grads) with grads in fp32.
+
+    grad_shardings: optional NamedSharding tree matching params. Pinning the
+    fp32 accumulator to the parameter sharding makes SPMD reduce-scatter
+    each microbatch's gradient into the shards instead of all-reducing the
+    full fp32 tensor every microbatch (ZeRO-2; ~2× less grad traffic)."""
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, grad_shardings
+        )
+
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        return (loss, metrics), _pin(grads)
+
+    k = microbatches
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % k == 0, f"batch {b} not divisible by {k} microbatches"
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    mbs = jax.tree_util.tree_map(reshape, batch)
+    # (p·0) instead of zeros(): the accumulator inherits the PARAMETER
+    # sharding through propagation. A bare zeros() tree is unsharded, which
+    # makes XLA keep every microbatch's fp32 gradient fully replicated and
+    # all-reduce it whole (~1.6 TB/dev/step on qwen3-235b) instead of
+    # reduce-scattering into the FSDP shards (ZeRO-2).
+    zero = jax.tree_util.tree_map(
+        lambda p: (p * 0).astype(jnp.float32), params
+    )
+
+    zero = _pin(zero)
+
+    def body(acc, mb):
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, gg: a + gg.astype(jnp.float32), acc, g
+        )
+        return _pin(acc), (loss, metrics)
+
+    grads, (losses, metrics) = jax.lax.scan(body, zero, mbs)
+    grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+    loss = jnp.mean(losses)
+    metrics = jax.tree_util.tree_map(jnp.mean, metrics)
+    return (loss, metrics), grads

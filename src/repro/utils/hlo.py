@@ -1,0 +1,425 @@
+"""Trip-count-aware cost model over scheduled HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which silently
+drops ~n_layers× of the work in a scan-over-layers model. This module
+re-derives the roofline inputs from the compiled module's text, where XLA
+records ``known_trip_count`` on every counted loop:
+
+* **FLOPs** — every ``dot``/``convolution`` is 2·out_elems·K, accumulated
+  recursively through while bodies (×trip count), conditionals (branches
+  summed — our sync round lives in a cond branch), and fusion bodies.
+* **HBM bytes** — on TPU, every top-level instruction boundary in a
+  scheduled computation is an HBM buffer (fusions internalize their
+  intermediates in VMEM). Bytes = Σ (operand + output sizes) over scheduled
+  instructions, skipping no-copy ops (tuple/get-tuple-element/bitcast/
+  parameter/constant), recursively with trip multipliers.
+* **Collectives** — all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute ops with their replica groups, multiplied by enclosing
+  trip counts, classified cross-pod vs intra-pod by whether any replica
+  group spans a pod boundary (device_id // pod_size differs). Ring-algorithm
+  per-device link-byte accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 1, "u2": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+
+NO_COPY_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "rng-bit-generator",
+    # dtype converts fuse into their consumers on TPU. The CPU backend
+    # legalizes bf16 by materializing convert-to-f32/convert-back pairs
+    # around whole buffers (e.g. an entire KV cache) — traffic that does not
+    # exist on the target hardware, so it must not count toward the roofline.
+    "convert",
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+        for dt, dims in _SHAPE_RE.findall(text)
+    )
+
+
+def _parse_iota_groups(spec: str):
+    m = re.match(r"\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", spec.strip())
+    if not m:
+        return None
+    group_dims = [int(x) for x in m.group(1).split(",")]
+    iota_dims = [int(x) for x in m.group(2).split(",")]
+    flat = np.arange(int(np.prod(iota_dims))).reshape(iota_dims)
+    if m.group(3):
+        flat = flat.transpose([int(x) for x in m.group(3).split(",")])
+    flat = flat.reshape(-1)
+    ngroups = group_dims[0]
+    gsize = int(np.prod(group_dims[1:]))
+    return [flat[i * gsize : (i + 1) * gsize].tolist() for i in range(ngroups)]
+
+
+def _parse_replica_groups(attrs: str):
+    m = re.search(r"replica_groups=\{(.*?)\}\}", attrs)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([0-9,\s]*)\}", m.group(1) + "}"):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids:
+                groups.append(ids)
+        if groups:
+            return groups
+    m = re.search(
+        r"replica_groups=(\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)", attrs
+    )
+    if m:
+        return _parse_iota_groups(m.group(1))
+    m = re.search(r"replica_groups=\{\}", attrs)
+    return None
+
+
+@dataclasses.dataclass
+class Instr:
+    opcode: str
+    result_bytes: int
+    operand_bytes: int
+    flops: float = 0.0
+    called: tuple = ()            # computation names (while body, cond branches, fusion)
+    trip: int = 1                 # known_trip_count for while
+    replica_groups: Any = None
+    line: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+
+
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+_PARAM_DECL = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9\[\],]+)(?:\{[0-9,]*\})?)")
+_OPCODE = re.compile(r"^(.*?)\s([a-z][a-z0-9\-]*)\(")
+
+
+def _dot_flops(result_type: str, operand_str: str, attrs: str) -> float:
+    out_elems = sum(_shape_elems(d) for _, d in _SHAPE_RE.findall(result_type))
+    shapes = _SHAPE_RE.findall(operand_str)
+    if not shapes:
+        return 0.0
+    lhs_dims = [int(x) for x in shapes[0][1].split(",")] if shapes[0][1] else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+    k = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                k *= lhs_dims[di]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(result_type: str, operand_str: str) -> float:
+    out_elems = sum(_shape_elems(d) for _, d in _SHAPE_RE.findall(result_type))
+    shapes = _SHAPE_RE.findall(operand_str)
+    if len(shapes) < 2:
+        return 0.0
+    kernel_elems = _shape_elems(shapes[1][1])
+    kernel_dims = [int(x) for x in shapes[1][1].split(",")] if shapes[1][1] else [1]
+    out_features = kernel_dims[-1] if kernel_dims else 1
+    return 2.0 * out_elems * (kernel_elems / max(out_features, 1))
+
+
+def parse_module(text: str) -> dict:
+    """Parse scheduled HLO text. Operands print as bare %names, so each
+    computation builds a name→type symbol table (parameters from the header,
+    results from prior instructions) to recover operand shapes."""
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    symtab: dict[str, str] = {}
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            s = line.strip()
+            if s.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")):
+                m = _COMP_NAME.match(s)
+                if m:
+                    current = Computation(m.group(1), [])
+                    symtab = {}
+                    # parameters: "(%name: type, name: type, ...) -> ..."
+                    header = s[m.end(1):]
+                    arrow = header.find("->")
+                    header = header[:arrow] if arrow >= 0 else header
+                    for pname, ptype in _PARAM_DECL.findall(header):
+                        symtab[pname] = ptype
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        iname, rest = m.group(1), m.group(2)
+        om = _OPCODE.match(rest)
+        if not om:
+            continue
+        result_type, opcode = om.group(1), om.group(2)
+        symtab[iname] = result_type
+        paren = rest.find("(", om.end(2))
+        depth, end = 0, paren
+        for i in range(paren, len(rest)):
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[paren + 1 : end]
+        attrs = rest[end + 1 :]
+        # resolve operand shapes through the symbol table
+        op_types = [
+            symtab.get(nm, "") for nm in _OPERAND_NAME.findall(operand_str)
+        ]
+        operand_types_str = " ".join(op_types) if op_types else operand_str
+
+        instr = Instr(
+            opcode=opcode,
+            result_bytes=_shapes_bytes(result_type),
+            operand_bytes=_shapes_bytes(operand_types_str),
+            line=line.strip()[:160],
+        )
+        # TPU-faithful traffic for windowed ops: dynamic-update-slice writes
+        # in place (traffic = the updated slice, read+write), dynamic-slice
+        # reads only the sliced region — not the whole operand buffer.
+        if opcode == "dynamic-update-slice":
+            upd = _shapes_bytes(op_types[1]) if len(op_types) > 1 else instr.result_bytes
+            instr.operand_bytes = upd
+            instr.result_bytes = upd
+        elif opcode == "dynamic-slice":
+            instr.operand_bytes = instr.result_bytes
+        if opcode == "dot":
+            instr.flops = _dot_flops(result_type, operand_types_str, attrs)
+        elif opcode == "convolution":
+            instr.flops = _conv_flops(result_type, operand_types_str)
+        elif opcode == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", attrs)
+            bm = re.search(r"body=%?([\w.\-]+)", attrs)
+            instr.called = tuple(x for x in (bm and bm.group(1),) if x)
+            tm = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', attrs)
+            instr.trip = int(tm.group(1)) if tm else 1
+        elif opcode == "conditional":
+            brs = re.findall(r"(?:branch_computations=\{([^}]*)\}|(?:true|false)_computation=%?([\w.\-]+))", attrs)
+            names: list[str] = []
+            for grp, single in brs:
+                if grp:
+                    names += [x.strip().lstrip("%") for x in grp.split(",")]
+                if single:
+                    names.append(single)
+            instr.called = tuple(names)
+        elif opcode in ("fusion", "call", "async-start"):
+            cm = re.search(r"(?:calls|called_computation)=%?([\w.\-]+)", attrs)
+            if cm:
+                instr.called = (cm.group(1),)
+        base = opcode.replace("-start", "")
+        if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
+            instr.replica_groups = _parse_replica_groups(attrs)
+            instr.opcode = base if opcode.endswith("-start") else opcode
+            instr.called = ()   # don't double count async bodies
+        current.instrs.append(instr)
+    return comps
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: int
+    output_bytes: int
+    group_size: int
+    num_groups: int
+    cross_pod: bool
+    count: float                  # multiplicity from enclosing loops
+    line: str
+
+    @property
+    def link_bytes_per_device(self) -> float:
+        g = max(self.group_size, 1)
+        frac = (g - 1) / g
+        if self.kind == "all-gather":
+            per = frac * self.output_bytes
+        elif self.kind == "all-reduce":
+            per = 2.0 * frac * self.operand_bytes
+        elif self.kind in ("reduce-scatter", "all-to-all"):
+            per = frac * self.operand_bytes
+        else:  # collective-permute
+            per = float(self.operand_bytes)
+        return per * self.count
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collectives: list
+
+    def link_bytes(self, cross_pod: bool | None = None) -> float:
+        return sum(
+            c.link_bytes_per_device
+            for c in self.collectives
+            if cross_pod is None or c.cross_pod == cross_pod
+        )
+
+    def by_kind(self) -> dict:
+        out: dict[str, float] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0.0) + c.link_bytes_per_device
+        return out
+
+    def n_collectives(self) -> float:
+        return sum(c.count for c in self.collectives)
+
+
+def _groups_cross_pod(groups, pod_size: int) -> bool:
+    if not groups or pod_size <= 0:
+        return False
+    for grp in groups:
+        if len({d // pod_size for d in grp}) > 1:
+            return True
+    return False
+
+
+def analyze(text: str, pod_size: int = 0, entry: str | None = None) -> HloCost:
+    comps = parse_module(text)
+    if entry is None:
+        # entry computation: the one containing "main" or the last ENTRY-parsed
+        cands = [n for n in comps if "main" in n]
+        entry = cands[0] if cands else max(comps, key=lambda n: len(comps[n].instrs))
+
+    memo: dict[tuple[str, bool], tuple[float, float, list]] = {}
+
+    def walk(name: str, count_bytes: bool, depth: int = 0):
+        """Returns (flops, bytes, collectives with count=1 basis)."""
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return (0.0, 0.0, [])
+        flops = 0.0
+        nbytes = 0.0
+        colls: list[CollectiveOp] = []
+        for ins in comp.instrs:
+            if ins.opcode in COLLECTIVE_OPS:
+                groups = ins.replica_groups
+                gsize = len(groups[0]) if groups else 1
+                ngroups = len(groups) if groups else 1
+                ob = ins.operand_bytes or ins.result_bytes
+                colls.append(
+                    CollectiveOp(
+                        kind=ins.opcode,
+                        operand_bytes=ob,
+                        output_bytes=ins.result_bytes or ob,
+                        group_size=gsize,
+                        num_groups=ngroups,
+                        cross_pod=_groups_cross_pod(groups, pod_size),
+                        count=1.0,
+                        line=ins.line,
+                    )
+                )
+                nbytes += ins.operand_bytes + ins.result_bytes if count_bytes else 0
+                continue
+            if ins.opcode == "while":
+                for sub in ins.called:
+                    f, b, c = walk(sub, count_bytes, depth + 1)
+                    flops += f * ins.trip
+                    nbytes += b * ins.trip
+                    for cc in c:
+                        colls.append(dataclasses.replace(cc, count=cc.count * ins.trip))
+                continue
+            if ins.opcode == "conditional":
+                for sub in ins.called:
+                    f, b, c = walk(sub, count_bytes, depth + 1)
+                    flops += f
+                    nbytes += b
+                    colls.extend(c)
+                continue
+            if ins.opcode in ("fusion", "call", "async-start"):
+                body_bytes = 0.0
+                for sub in ins.called:
+                    f, bb, c = walk(sub, True, depth + 1)
+                    flops += f
+                    body_bytes += bb
+                    colls.extend(c)
+                if count_bytes and ins.opcode == "fusion":
+                    # HBM traffic of a fusion is its boundary (operands read +
+                    # outputs written) — except when the body shows the
+                    # boundary is inflated: pure-convert fusions (CPU bf16
+                    # legalization; free on TPU) and in-place dynamic-update
+                    # fusions (TPU aliases the buffer; traffic = the updated
+                    # window, not the whole operand). min() picks the
+                    # TPU-faithful reading in both cases.
+                    nbytes += min(ins.operand_bytes + ins.result_bytes, body_bytes)
+                # call/async boundaries are free
+                continue
+            flops += ins.flops
+            if count_bytes and ins.opcode not in NO_COPY_OPS:
+                nbytes += ins.operand_bytes + ins.result_bytes
+        memo[key] = (flops, nbytes, colls)
+        return memo[key]
+
+    flops, nbytes, colls = walk(entry, True)
+    return HloCost(flops=flops, hbm_bytes=nbytes, collectives=colls)
+
+
+# --------------------------------------------------------- legacy interface
+def parse_collectives(hlo_text: str, pod_size: int = 0):
+    """Back-compat shim: collective summary over the whole module with trip
+    multipliers."""
+    cost = analyze(hlo_text, pod_size=pod_size)
+
+    class _Summary:
+        def __init__(self, cost):
+            self._cost = cost
+            self.ops = cost.collectives
+
+        def total_link_bytes_per_device(self, cross_pod=None):
+            return self._cost.link_bytes(cross_pod)
+
+        def count(self, kind=None):
+            return sum(
+                c.count for c in self.ops if kind is None or c.kind == kind
+            )
+
+        def by_kind(self):
+            return self._cost.by_kind()
+
+    return _Summary(cost)

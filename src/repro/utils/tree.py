@@ -1,0 +1,103 @@
+"""Pytree utilities used across the framework.
+
+Everything here is pure-JAX and shape-polymorphic; these helpers are the
+vocabulary the federated layer (core/) uses to talk about "the model" without
+knowing the architecture.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_map(f: Callable, *trees: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return tree_map(jnp.zeros_like, a)
+
+
+def tree_dot(a: Pytree, b: Pytree) -> jax.Array:
+    """Inner product between two pytrees (fp32 accumulate)."""
+    leaves = tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sq_norm(a: Pytree) -> jax.Array:
+    """Squared global L2 norm of a pytree (fp32 accumulate)."""
+    leaves = tree_map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(a: Pytree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_count_params(a: Pytree) -> int:
+    """Static parameter count (python int; works on ShapeDtypeStructs too)."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_bytes(a: Pytree) -> int:
+    """Static byte count of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(a):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_where(pred, a: Pytree, b: Pytree) -> Pytree:
+    """Per-leaf jnp.where with a scalar predicate (select between pytrees)."""
+    return tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_split_keys(key: jax.Array, tree: Pytree) -> Pytree:
+    """One PRNG key per leaf, shaped like the tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(n) < 1024.0 or unit == "PB":
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PB"
+
+
+def fmt_flops(n: float) -> str:
+    for unit in ("FLOP", "KFLOP", "MFLOP", "GFLOP", "TFLOP", "PFLOP"):
+        if abs(n) < 1000.0 or unit == "PFLOP":
+            return f"{n:.2f} {unit}"
+        n /= 1000.0
+    return f"{n:.2f} PFLOP"
+
+
+def round_up(x: int, to: int) -> int:
+    return int(math.ceil(x / to) * to)

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device override here — tests run on
+the real single CPU device; only launch/dryrun.py requests 512 host devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False,
+        help="run slow tests (full smoke sweep, subprocess dry-runs)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; use --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

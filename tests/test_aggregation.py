@@ -1,0 +1,136 @@
+"""Unit + property tests for the paper's aggregation formulas (§3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+
+def _stacked(key, n_clouds, shapes=((4, 8), (16,), (2, 3, 5))):
+    keys = jax.random.split(key, len(shapes))
+    return {
+        f"w{i}": jax.random.normal(k, (n_clouds,) + s)
+        for i, (k, s) in enumerate(zip(keys, shapes))
+    }
+
+
+class TestFedAvg:
+    def test_formula1_weighted_by_sample_counts(self, rng):
+        """w = Σ n_i/n · w_i exactly."""
+        stacked = _stacked(rng, 3)
+        counts = jnp.asarray([100.0, 300.0, 600.0])
+        w = agg.fedavg_weights(counts)
+        np.testing.assert_allclose(np.asarray(w), [0.1, 0.3, 0.6], rtol=1e-6)
+        out = agg.weighted_average(stacked, w)
+        for k in stacked:
+            expected = (
+                0.1 * stacked[k][0] + 0.3 * stacked[k][1] + 0.6 * stacked[k][2]
+            )
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(expected), rtol=1e-5)
+
+    def test_identical_clouds_fixed_point(self, rng):
+        """Aggregating identical replicas returns the replica."""
+        single = {k: v[0] for k, v in _stacked(rng, 1).items()}
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (4,) + x.shape), single
+        )
+        out = agg.weighted_average(stacked, agg.fedavg_weights(jnp.ones(4)))
+        for k in single:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(single[k]), rtol=1e-6
+            )
+
+    @given(counts=st.lists(st.integers(1, 10_000), min_size=2, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_weights_simplex(self, counts):
+        w = np.asarray(agg.fedavg_weights(jnp.asarray(counts, jnp.float32)))
+        assert abs(w.sum() - 1.0) < 1e-5
+        assert (w >= 0).all()
+
+
+class TestDynamicWeights:
+    def test_formula2_softmax_of_neg_loss(self):
+        losses = jnp.asarray([1.0, 2.0, 3.0])
+        w = np.asarray(agg.dynamic_weights(losses))
+        expected = np.exp(-np.asarray([1.0, 2.0, 3.0]))
+        expected /= expected.sum()
+        np.testing.assert_allclose(w, expected, rtol=1e-6)
+
+    def test_lower_loss_gets_higher_weight(self):
+        w = np.asarray(agg.dynamic_weights(jnp.asarray([0.5, 1.5, 2.5])))
+        assert w[0] > w[1] > w[2]
+
+    @given(
+        losses=st.lists(
+            st.floats(0.0, 20.0, allow_nan=False), min_size=2, max_size=8
+        ),
+        temp=st.floats(0.1, 10.0),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_simplex_and_monotonicity(self, losses, temp):
+        w = np.asarray(agg.dynamic_weights(jnp.asarray(losses, jnp.float32), temp))
+        assert abs(w.sum() - 1.0) < 1e-4
+        order = np.argsort(losses)
+        # weights are non-increasing in loss
+        assert (np.diff(w[order]) <= 1e-6).all()
+
+
+class TestGradientAggregation:
+    def test_formula3_matches_manual_sgd(self, rng):
+        """w_{t+1} = w_t − η Σ (n_i/n) ∇w_i."""
+        grads = _stacked(rng, 3)
+        counts = jnp.asarray([1.0, 2.0, 1.0])
+        w = agg.fedavg_weights(counts)
+        agg_grad = agg.gradient_aggregate(None, grads, w)
+        for k in grads:
+            manual = (grads[k][0] + 2 * grads[k][1] + grads[k][2]) / 4.0
+            np.testing.assert_allclose(np.asarray(agg_grad[k]), np.asarray(manual), rtol=1e-5)
+
+
+class TestAsyncUpdate:
+    def test_formula4_single_cloud(self, rng):
+        g = {k: v[0] for k, v in _stacked(rng, 1).items()}
+        ci = {k: v + 1.0 for k, v in g.items()}
+        out = agg.async_update(g, ci, 0.25)
+        for k in g:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(g[k] + 0.25), rtol=1e-5, atol=1e-5
+            )
+
+    def test_alpha_zero_is_identity(self, rng):
+        g = {k: v[0] for k, v in _stacked(rng, 1).items()}
+        ci = {k: v * 2.0 for k, v in g.items()}
+        out = agg.async_update(g, ci, 0.0)
+        for k in g:
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(g[k]))
+
+    def test_masked_matches_sequential_for_disjoint(self, rng):
+        """One arrival per round == formula 4 applied sequentially."""
+        stacked = _stacked(rng, 3)
+        g = {k: jnp.zeros(v.shape[1:]) for k, v in stacked.items()}
+        alphas = jnp.asarray([0.5, 0.3, 0.2])
+        out = dict(g)
+        for i in range(3):
+            arrived = jnp.zeros(3, bool).at[i].set(True)
+            out = agg.masked_async_update(out, stacked, alphas, arrived)
+        seq = dict(g)
+        for i in range(3):
+            ci = {k: v[i] for k, v in stacked.items()}
+            seq = agg.async_update(seq, ci, alphas[i])
+        for k in g:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(seq[k]), rtol=1e-4, atol=1e-5
+            )
+
+    @given(alpha=st.floats(0.0, 1.0))
+    @settings(max_examples=30, deadline=None)
+    def test_convex_combination_bounds(self, alpha):
+        """Result stays between global and cloud params elementwise."""
+        g = {"w": jnp.asarray([0.0, 1.0, -2.0])}
+        c = {"w": jnp.asarray([1.0, -1.0, 4.0])}
+        out = np.asarray(agg.async_update(g, c, alpha)["w"])
+        lo = np.minimum(np.asarray(g["w"]), np.asarray(c["w"]))
+        hi = np.maximum(np.asarray(g["w"]), np.asarray(c["w"]))
+        assert (out >= lo - 1e-6).all() and (out <= hi + 1e-6).all()

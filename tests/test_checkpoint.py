@@ -1,0 +1,51 @@
+"""Checkpointer round-trip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+@pytest.fixture
+def tree(rng):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "layers": {"w": jax.random.normal(k1, (8, 4), jnp.bfloat16)},
+        "embed": jax.random.normal(k2, (16, 4), jnp.float32),
+        "count": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(100, tree)
+    restored = ck.restore(100, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_latest_and_gc(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save(step, tree)
+    assert ck.latest_step() == 4
+    assert ck.all_steps() == [3, 4]
+
+
+def test_shape_mismatch_raises(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree)
+    bad = dict(tree, embed=jnp.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        ck.restore(1, bad)
+
+
+def test_missing_leaf_raises(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"only": tree["embed"]})
+    with pytest.raises(KeyError):
+        ck.restore(1, tree)

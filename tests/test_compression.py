@@ -1,0 +1,103 @@
+"""Compression channel tests (§3.2): semantics, wire accounting, error
+feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    BLOCK,
+    Compressor,
+    int8_roundtrip,
+    topk_block_sparsify,
+)
+
+
+class TestTopK:
+    def test_keeps_largest(self, rng):
+        x = jax.random.normal(rng, (1024,))
+        out = np.asarray(topk_block_sparsify(x, ratio=0.05))
+        xb = np.asarray(x).reshape(-1, BLOCK)
+        ob = out.reshape(-1, BLOCK)
+        k = int(round(0.05 * BLOCK))
+        for row in range(xb.shape[0]):
+            kept = np.nonzero(ob[row])[0]
+            assert len(kept) == k  # continuous values: no ties
+            thr = np.sort(np.abs(xb[row]))[-k]
+            assert (np.abs(xb[row][kept]) >= thr - 1e-7).all()
+            # kept values unmodified
+            np.testing.assert_allclose(ob[row][kept], xb[row][kept], rtol=1e-6)
+
+    def test_shape_and_dtype_preserved(self, rng):
+        for shape in [(7,), (33, 5), (2, 3, 129)]:
+            x = jax.random.normal(rng, shape, jnp.float32)
+            out = topk_block_sparsify(x, 0.1)
+            assert out.shape == shape and out.dtype == x.dtype
+
+    @given(ratio=st.floats(0.01, 1.0))
+    @settings(max_examples=20, deadline=None)
+    def test_energy_decreases(self, ratio):
+        x = jax.random.normal(jax.random.PRNGKey(1), (512,))
+        out = topk_block_sparsify(x, ratio)
+        assert float(jnp.sum(out**2)) <= float(jnp.sum(x**2)) + 1e-5
+
+
+class TestInt8:
+    def test_roundtrip_error_bound(self, rng):
+        x = jax.random.normal(rng, (2048,)) * 10
+        out = int8_roundtrip(x)
+        # error per block ≤ scale/2 = max|x|/254
+        xb = np.asarray(x).reshape(-1, BLOCK)
+        ob = np.asarray(out).reshape(-1, BLOCK)
+        for row in range(xb.shape[0]):
+            bound = np.abs(xb[row]).max() / 254 + 1e-6
+            assert np.abs(xb[row] - ob[row]).max() <= bound
+
+    def test_zeros_stay_zero(self):
+        x = jnp.zeros((512,))
+        np.testing.assert_array_equal(np.asarray(int8_roundtrip(x)), 0.0)
+
+
+class TestCompressor:
+    def test_bytes_accounting_monotone(self, rng):
+        tree = {"a": jnp.zeros((1000, 64), jnp.bfloat16), "b": jnp.zeros((3000,), jnp.float32)}
+        raw = Compressor("none").bytes_per_sync(tree)
+        topk = Compressor("topk", topk_ratio=0.01).bytes_per_sync(tree)
+        int8 = Compressor("int8").bytes_per_sync(tree)
+        assert topk < int8 < raw
+        # int8-on-topk pays once kept values dominate per-block overhead
+        topk10 = Compressor("topk", topk_ratio=0.10).bytes_per_sync(tree)
+        both10 = Compressor("topk+int8", topk_ratio=0.10).bytes_per_sync(tree)
+        assert both10 < topk10
+        assert Compressor("topk", topk_ratio=0.01).compression_ratio(tree) > 20
+
+    def test_unknown_method_raises(self):
+        with pytest.raises(ValueError):
+            Compressor("gzip")
+
+    def test_roundtrip_composition(self, rng):
+        tree = {"w": jax.random.normal(rng, (600,))}
+        c = Compressor("topk+int8", topk_ratio=0.1)
+        out = c.roundtrip(tree)["w"]
+        # sparsity preserved through int8 stage
+        assert float(jnp.mean(out == 0)) > 0.8
+
+    def test_error_feedback_preserves_signal(self, rng):
+        """Accumulated (transmitted + residual) == original sum over rounds —
+        the EF invariant that makes top-k unbiased in the long run."""
+        c = Compressor("topk", topk_ratio=0.05)
+        residual = jnp.zeros((512,))
+        total_sent = jnp.zeros((512,))
+        total_true = jnp.zeros((512,))
+        for i in range(30):
+            g = jax.random.normal(jax.random.fold_in(rng, i), (512,))
+            total_true = total_true + g
+            carried = g + residual
+            sent = c.roundtrip_leaf(carried)
+            residual = carried - sent
+            total_sent = total_sent + sent
+        # residual bounded; sent+residual == true exactly
+        np.testing.assert_allclose(
+            np.asarray(total_sent + residual), np.asarray(total_true), rtol=1e-4, atol=1e-4
+        )

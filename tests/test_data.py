@@ -1,0 +1,78 @@
+"""Data pipeline tests: determinism, learnability structure, non-IID skew."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticCorpus, dirichlet_mixtures, federated_batch
+from repro.data.federated_data import cloud_sample_counts
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        c = SyntheticCorpus(vocab_size=64, n_domains=4)
+        mix = jnp.ones(4) / 4
+        a = c.sample(jax.random.PRNGKey(1), mix, 4, 16)
+        b = c.sample(jax.random.PRNGKey(1), mix, 4, 16)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+    def test_labels_shifted(self):
+        c = SyntheticCorpus(vocab_size=64, n_domains=2, noise=0.0)
+        out = c.sample(jax.random.PRNGKey(0), jnp.ones(2) / 2, 2, 10)
+        # noiseless: label = (a·t + c) mod V for the sequence's domain
+        a_all, c_all = c.domain_params()
+        toks, labels, dom = out["tokens"], out["labels"], out["domain"]
+        for i in range(2):
+            expected = (a_all[dom[i]] * toks[i] + c_all[dom[i]]) % 64
+            np.testing.assert_array_equal(np.asarray(labels[i]), np.asarray(expected))
+
+    def test_tokens_in_vocab(self):
+        c = SyntheticCorpus(vocab_size=32, n_domains=8, noise=0.5)
+        out = c.sample(jax.random.PRNGKey(2), jnp.ones(8) / 8, 8, 64)
+        t = np.asarray(out["tokens"])
+        assert t.min() >= 0 and t.max() < 32
+
+    def test_oracle_accuracy(self):
+        c = SyntheticCorpus(vocab_size=100, n_domains=2, noise=0.2)
+        assert c.oracle_accuracy() == pytest.approx(0.8 + 0.2 / 100)
+
+
+class TestFederatedData:
+    def test_dirichlet_simplex(self):
+        mix = dirichlet_mixtures(jax.random.PRNGKey(0), 5, 8, beta=0.5)
+        assert mix.shape == (5, 8)
+        np.testing.assert_allclose(np.asarray(mix.sum(axis=1)), 1.0, rtol=1e-5)
+
+    def test_beta_controls_skew(self):
+        key = jax.random.PRNGKey(1)
+        skewed = dirichlet_mixtures(key, 20, 8, beta=0.05)
+        uniform = dirichlet_mixtures(key, 20, 8, beta=100.0)
+        # max component much larger under low beta
+        assert float(skewed.max(axis=1).mean()) > float(uniform.max(axis=1).mean()) + 0.3
+
+    def test_degenerate_beta_zero(self):
+        mix = dirichlet_mixtures(jax.random.PRNGKey(0), 3, 4, beta=0)
+        np.testing.assert_array_equal(np.asarray(mix[0]), [1, 0, 0, 0])
+        np.testing.assert_array_equal(np.asarray(mix[1]), [0, 1, 0, 0])
+
+    def test_federated_batch_stacking(self):
+        c = SyntheticCorpus(vocab_size=64, n_domains=4)
+        mix = dirichlet_mixtures(jax.random.PRNGKey(0), 3, 4, beta=0.3)
+        b = federated_batch(c, jax.random.PRNGKey(1), mix, 4, 16)
+        assert b["tokens"].shape == (3, 4, 16)
+        assert b["labels"].shape == (3, 4, 16)
+
+    def test_non_iid_clouds_see_different_domains(self):
+        c = SyntheticCorpus(vocab_size=64, n_domains=4)
+        mix = dirichlet_mixtures(jax.random.PRNGKey(3), 3, 4, beta=0.01)
+        b = federated_batch(c, jax.random.PRNGKey(2), mix, 32, 8)
+        doms = np.asarray(b["domain"])
+        # each cloud's dominant domain differs from at least one other cloud
+        dominant = [np.bincount(doms[i], minlength=4).argmax() for i in range(3)]
+        assert len(set(dominant)) > 1
+
+    def test_sample_counts(self):
+        u = cloud_sample_counts(jax.random.PRNGKey(0), 4, skew=0.0)
+        np.testing.assert_array_equal(np.asarray(u), 10_000)
+        s = cloud_sample_counts(jax.random.PRNGKey(0), 4, skew=1.0)
+        assert len(set(np.asarray(s).tolist())) > 1

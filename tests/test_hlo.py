@@ -1,0 +1,89 @@
+"""HLO cost-model parser tests (synthetic modules)."""
+import numpy as np
+import pytest
+
+from repro.utils import hlo
+
+SYNTH = """
+HloModule test, is_scheduled=true
+
+%body (arg.1: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %arg.1 = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%arg.1), index=0
+  %x = f32[128,256] get-tuple-element(%arg.1), index=1
+  %w = f32[256,256] constant({...})
+  %d = f32[128,256] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256] all-reduce(%d), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ip, %ar)
+}
+
+%cond (arg.2: (s32[], f32[128,256])) -> pred[] {
+  %arg.2 = (s32[], f32[128,256]) parameter(0)
+  %i2 = s32[] get-tuple-element(%arg.2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main.1 (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,256]) tuple(%zero, %p0)
+  %w2 = (s32[], f32[128,256]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %res = f32[128,256] get-tuple-element(%w2), index=1
+  %cp = f32[128,256] collective-permute(%res), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %out = f32[128,256] copy(%cp)
+}
+"""
+
+
+class TestParser:
+    def test_trip_count_multiplies_flops(self):
+        cost = hlo.analyze(SYNTH)
+        # dot: 2*128*256*256 flops, ×10 trips
+        expected = 2 * 128 * 256 * 256 * 10
+        assert cost.flops == pytest.approx(expected)
+
+    def test_collectives_counted_with_trips(self):
+        cost = hlo.analyze(SYNTH)
+        kinds = cost.by_kind()
+        assert "all-reduce" in kinds and "collective-permute" in kinds
+        ar = [c for c in cost.collectives if c.kind == "all-reduce"][0]
+        assert ar.count == 10
+        assert ar.group_size == 4 and ar.num_groups == 2
+        # ring all-reduce: 2*(3/4)*bytes, ×10
+        assert ar.link_bytes_per_device == pytest.approx(
+            2 * 0.75 * 128 * 256 * 4 * 10
+        )
+
+    def test_cross_pod_classification(self):
+        cost = hlo.analyze(SYNTH, pod_size=4)
+        ar = [c for c in cost.collectives if c.kind == "all-reduce"][0]
+        assert not ar.cross_pod  # groups {0-3},{4-7} stay within pods of 4
+        cost2 = hlo.analyze(SYNTH, pod_size=2)
+        ar2 = [c for c in cost2.collectives if c.kind == "all-reduce"][0]
+        assert ar2.cross_pod
+
+    def test_iota_replica_groups(self):
+        groups = hlo._parse_iota_groups("[4,2]<=[8]")
+        assert groups == [[0, 1], [2, 3], [4, 5], [6, 7]]
+        groups = hlo._parse_iota_groups("[2,4]<=[4,2]T(1,0)")
+        assert groups == [[0, 2, 4, 6], [1, 3, 5, 7]]
+
+    def test_hbm_bytes_include_loop_body(self):
+        cost = hlo.analyze(SYNTH)
+        # dot reads x(128KB)+w(256KB), writes 128KB; all-reduce r/w 128KB each;
+        # add small. ×10 trips ≥ 10×(dot ops)
+        assert cost.hbm_bytes > 10 * (128 * 256 * 4 * 2 + 256 * 256 * 4)
+
+    def test_real_module_smoke(self):
+        """Parser handles a real compiled module (saved during development)."""
+        import os
+        path = "/tmp/hlo_stablelm.txt"
+        if not os.path.exists(path):
+            pytest.skip("no saved module")
+        cost = hlo.analyze(open(path).read())
+        assert cost.flops > 1e13
+        assert cost.hbm_bytes > 1e12
+        assert cost.n_collectives() > 10

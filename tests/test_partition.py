@@ -1,0 +1,105 @@
+"""Partitioning (§3.1) and async scheduler tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import Partitioner
+from repro.core.scheduler import (
+    CloudSpec,
+    events_to_round_masks,
+    simulate_async_schedule,
+    sync_round_time,
+)
+
+
+class TestPartitioner:
+    def test_fixed_equal_shares(self):
+        p = Partitioner(strategy="fixed", n_clouds=4)
+        state = p.init()
+        sizes = p.quantize(state, 64)
+        np.testing.assert_array_equal(sizes, [16, 16, 16, 16])
+
+    def test_sizes_sum_to_global_batch(self):
+        p = Partitioner(strategy="dynamic", n_clouds=3)
+        state = p.init([1.0, 2.0, 3.0])
+        for gb in (12, 48, 96, 256):
+            assert p.quantize(state, gb).sum() == gb
+
+    @given(
+        thr=st.lists(st.floats(0.2, 5.0), min_size=2, max_size=6),
+        gb=st.sampled_from([32, 64, 128, 256]),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_quantize_invariants(self, thr, gb):
+        p = Partitioner(strategy="weighted", n_clouds=len(thr))
+        state = p.init(thr)
+        sizes = p.quantize(state, gb)
+        assert sizes.sum() == gb
+        assert (sizes >= 1).all()
+
+    def test_dynamic_converges_to_throughput_ratio(self):
+        """The §3.1 monitor-adjust cycle: shares → true throughput shares."""
+        true_thr = np.asarray([1.0, 2.0, 4.0])
+        p = Partitioner(strategy="dynamic", n_clouds=3, ema=0.3)
+        state = p.init()
+        for _ in range(40):
+            sizes = p.quantize(state, 112)
+            times = sizes / true_thr  # observed step time per cloud
+            state = p.observe(state, sizes, times)
+        target = true_thr / true_thr.sum()
+        np.testing.assert_allclose(state.shares, target, atol=0.06)
+
+    def test_dynamic_beats_fixed_on_heterogeneous(self):
+        true_thr = np.asarray([1.0, 1.0, 5.0])
+        fixed = Partitioner(strategy="fixed", n_clouds=3)
+        dyn = Partitioner(strategy="dynamic", n_clouds=3)
+        fs, ds = fixed.init(), dyn.init()
+        for _ in range(30):
+            sizes = dyn.quantize(ds, 70)
+            ds = dyn.observe(ds, sizes, sizes / true_thr)
+        t_fixed = Partitioner.round_time(fixed.quantize(fs, 70), true_thr)
+        t_dyn = Partitioner.round_time(dyn.quantize(ds, 70), true_thr)
+        assert t_dyn < t_fixed
+        assert Partitioner.utilization(dyn.quantize(ds, 70), true_thr) > \
+            Partitioner.utilization(fixed.quantize(fs, 70), true_thr)
+
+    def test_granularity_quantizes(self):
+        p = Partitioner(strategy="fixed", n_clouds=3, granule=8)
+        sizes = p.quantize(p.init(), 96)
+        assert (sizes % 8 == 0).all() and sizes.sum() == 96
+
+
+class TestScheduler:
+    def test_fast_cloud_arrives_more_often(self):
+        clouds = [CloudSpec("slow", 1.0), CloudSpec("fast", 4.0)]
+        events = simulate_async_schedule(clouds, local_steps=4, n_rounds=50)
+        fast = sum(1 for e in events if e.cloud == 1)
+        assert fast > 30  # ~4/5 of arrivals
+
+    def test_staleness_nonnegative_and_alpha_discounted(self):
+        clouds = [CloudSpec("a", 1.0), CloudSpec("b", 0.2)]
+        events = simulate_async_schedule(clouds, 4, 40, base_alpha=0.5)
+        for e in events:
+            assert e.staleness >= 0
+            assert e.alpha == pytest.approx(0.5 / (1 + e.staleness))
+        # the slow cloud accumulates staleness
+        assert max(e.staleness for e in events if e.cloud == 1) >= 3
+
+    def test_event_times_monotone(self):
+        clouds = [CloudSpec(f"c{i}", 1.0 + i) for i in range(3)]
+        events = simulate_async_schedule(clouds, 2, 30)
+        times = [e.time for e in events]
+        assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+
+    def test_round_masks(self):
+        clouds = [CloudSpec("a", 1.0), CloudSpec("b", 2.0)]
+        events = simulate_async_schedule(clouds, 2, 10)
+        arrived, alphas = events_to_round_masks(events, 2, 10)
+        assert arrived.shape == (10, 2)
+        assert (arrived.sum(axis=1) == 1).all()  # one arrival per round
+        assert (alphas[arrived] > 0).all()
+
+    def test_sync_round_time_dominated_by_straggler(self):
+        clouds = [CloudSpec("fast", 10.0), CloudSpec("slow", 0.5)]
+        t = sync_round_time(clouds, local_steps=4, step_time=1.0, sync_bytes=0)
+        assert t == pytest.approx(4 / 0.5 + clouds[1].link_latency_s)

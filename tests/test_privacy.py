@@ -1,0 +1,91 @@
+"""Privacy layer tests (§3.1): DP clipping/noise, secure aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import privacy
+from repro.utils.tree import tree_map, tree_norm
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": scale * jax.random.normal(k1, (32, 16)),
+        "b": scale * jax.random.normal(k2, (100,)),
+    }
+
+
+class TestDP:
+    def test_clip_bounds_norm(self, rng):
+        t = _tree(rng, scale=50.0)
+        clipped, norm = privacy.clip_update(t, 1.0)
+        assert float(norm) > 1.0
+        assert float(tree_norm(clipped)) <= 1.0 + 1e-4
+
+    def test_no_clip_below_threshold(self, rng):
+        t = _tree(rng, scale=1e-3)
+        clipped, _ = privacy.clip_update(t, 10.0)
+        for k in t:
+            np.testing.assert_allclose(np.asarray(clipped[k]), np.asarray(t[k]), rtol=1e-5)
+
+    @given(scale=st.floats(0.01, 100.0), clip=st.floats(0.1, 10.0))
+    @settings(max_examples=30, deadline=None)
+    def test_clip_invariant(self, scale, clip):
+        t = _tree(jax.random.PRNGKey(7), scale=scale)
+        clipped, _ = privacy.clip_update(t, clip)
+        assert float(tree_norm(clipped)) <= min(clip, float(tree_norm(t))) * (1 + 1e-3)
+
+    def test_noise_statistics(self, rng):
+        t = {"w": jnp.zeros((100_000,))}
+        out = privacy.add_gaussian_noise(t, rng, stddev=0.5)["w"]
+        assert abs(float(jnp.std(out)) - 0.5) < 0.01
+        assert abs(float(jnp.mean(out))) < 0.01
+
+    def test_noise_stddev_scales_with_clouds(self):
+        assert privacy.dp_noise_stddev(1.0, 2.0, 4) == pytest.approx(0.5)
+
+
+class TestSecureAggregation:
+    def test_masks_cancel_exactly(self, rng):
+        """Σ masked_i == Σ update_i bit-exactly in fixed point."""
+        n = 4
+        updates = [_tree(jax.random.fold_in(rng, i)) for i in range(n)]
+        agg_secure = privacy.secure_aggregate(updates, round_idx=3)
+        plain = updates[0]
+        for u in updates[1:]:
+            plain = tree_map(lambda a, b: a + b, plain, u)
+        for k in plain:
+            # fixed-point quantization error only: n · 2^-17 per element
+            np.testing.assert_allclose(
+                np.asarray(agg_secure[k]), np.asarray(plain[k]),
+                atol=n / privacy.FIXED_POINT_SCALE,
+            )
+
+    def test_individual_update_is_masked(self, rng):
+        """A single masked transmission looks nothing like the raw update."""
+        u = _tree(rng)
+        masked = privacy.mask_update(privacy.to_fixed(u), 0, 3, round_idx=0)
+        raw = privacy.to_fixed(u)
+        # correlation between masked and raw is ~0 (mask is uniform int32)
+        a = np.asarray(masked["a"], np.float64).ravel()
+        b = np.asarray(raw["a"], np.float64).ravel()
+        corr = np.corrcoef(a, b)[0, 1]
+        assert abs(corr) < 0.1
+
+    def test_round_binding(self, rng):
+        """Masks differ between rounds (no replay)."""
+        u = privacy.to_fixed(_tree(rng))
+        m1 = privacy.mask_update(u, 0, 3, round_idx=0)
+        m2 = privacy.mask_update(u, 0, 3, round_idx=1)
+        assert not np.array_equal(np.asarray(m1["a"]), np.asarray(m2["a"]))
+
+    def test_two_clouds_minimum(self, rng):
+        updates = [_tree(jax.random.fold_in(rng, i)) for i in range(2)]
+        out = privacy.secure_aggregate(updates, round_idx=0)
+        plain = tree_map(lambda a, b: a + b, *updates)
+        for k in plain:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(plain[k]), atol=1e-3
+            )

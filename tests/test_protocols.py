@@ -1,0 +1,50 @@
+"""Protocol cost-model tests (§3.2 gRPC/QUIC comparison)."""
+import pytest
+
+from repro.core.protocols import GRPC, QUIC, TCP, Link, sync_wall_time
+
+
+class TestProtocols:
+    def test_quic_wins_on_lossy_links(self):
+        """The paper's claim: QUIC handles high-latency lossy WANs better."""
+        lossy = Link(latency_s=0.05, bandwidth=1e9, loss_rate=1e-3)
+        b = 500e6
+        assert QUIC.transfer_time(b, lossy) < GRPC.transfer_time(b, lossy)
+        assert QUIC.transfer_time(b, lossy) < TCP.transfer_time(b, lossy)
+
+    def test_multiplexing_helps_grpc_and_quic(self):
+        link = Link()
+        b = 1e9
+        for proto in (GRPC, QUIC):
+            t1 = proto.transfer_time(b, link, n_streams=1)
+            t8 = proto.transfer_time(b, link, n_streams=8)
+            assert t8 < t1
+        # plain TCP has no multiplexing gain
+        assert TCP.transfer_time(b, link, 8) == pytest.approx(
+            TCP.transfer_time(b, link, 1)
+        )
+
+    def test_transfer_time_monotone_in_bytes(self):
+        link = Link()
+        times = [GRPC.transfer_time(b, link) for b in (1e6, 1e7, 1e8, 1e9)]
+        assert all(t2 > t1 for t1, t2 in zip(times, times[1:]))
+
+    def test_bandwidth_bound_dominates_large_transfers(self):
+        link = Link(bandwidth=1e9, loss_rate=0.0)
+        b = 10e9
+        t = QUIC.transfer_time(b, link, n_streams=8)
+        wire_floor = b / (link.bandwidth * 0.98)
+        assert t == pytest.approx(wire_floor + link.latency_s, rel=0.1)
+
+    def test_handshake_amortization(self):
+        link = Link()
+        fresh = GRPC.transfer_time(1e6, link, reuse_conn=False)
+        reused = GRPC.transfer_time(1e6, link, reuse_conn=True)
+        assert fresh - reused == pytest.approx(2.5 * 2 * link.latency_s)
+
+    def test_ring_beats_star_for_many_clouds(self):
+        """Ring all-reduce moves 2(n−1)/n·B per link vs 2·B up+down."""
+        link = Link(loss_rate=0.0)
+        star = sync_wall_time(4e9, 8, QUIC, link, topology="star")
+        ring = sync_wall_time(4e9, 8, QUIC, link, topology="ring")
+        assert ring < star

@@ -1,0 +1,101 @@
+"""Sharding-rule tests: parameter partition specs over the production mesh
+shapes (AbstractMesh — no devices needed)."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import mesh as meshlib
+from repro.launch.specs import microbatch_policy
+from repro.configs import get_shape
+
+
+def abstract_mesh(multi_pod=False):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+class TestParamRules:
+    def test_dense_attention_specs(self):
+        cfg = get_config("mistral-nemo-12b")
+        mesh = abstract_mesh()
+        # column parallel qkv
+        s = meshlib.param_spec("layers/attn/wq", (40, 5120, 4096), cfg, mesh)
+        assert s == P(None, "data", "model")  # fsdp on for nemo
+        # row parallel out projection
+        s = meshlib.param_spec("layers/attn/wo", (40, 4096, 5120), cfg, mesh)
+        assert s == P(None, "model", "data")
+        # vocab-parallel embedding
+        s = meshlib.param_spec("embed/tok", (131072, 5120), cfg, mesh)
+        assert s == P("model", "data")
+
+    def test_moe_expert_parallel(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        mesh = abstract_mesh()
+        s = meshlib.param_spec("layers/ffn/w_gate", (94, 128, 4096, 1536), cfg, mesh)
+        assert s == P(None, "model", None, "data")
+        s = meshlib.param_spec("layers/ffn/w_down", (94, 128, 1536, 4096), cfg, mesh)
+        assert s == P(None, "model", "data", None)
+
+    def test_gqa_kv_replicated_when_not_divisible(self):
+        cfg = get_config("recurrentgemma-2b")  # kv_heads=1, head_dim 256
+        mesh = abstract_mesh()
+        # wk: (L, d, 1*256): 256 % 16 == 0 so it CAN shard; check fits logic
+        s = meshlib.param_spec("periods/pos2/mix/wk", (8, 2560, 256), cfg, mesh)
+        assert s == P(None, None, "model")
+        # a dim that does not divide stays replicated
+        s = meshlib.param_spec("layers/attn/wq", (2, 100, 10), cfg, mesh)
+        assert s == P(None, None, None)
+
+    def test_norms_replicated(self):
+        cfg = get_config("stablelm-1.6b")
+        mesh = abstract_mesh()
+        assert meshlib.param_spec("layers/ln1/scale", (24, 2048), cfg, mesh) == P()
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_every_leaf_gets_valid_spec(self, arch):
+        """All full-size configs: every param leaf's spec divides its dims."""
+        from repro.models import build_model
+
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        mesh = abstract_mesh()
+        pspecs = meshlib.params_pspec_tree(params, cfg, mesh)
+        sizes = dict(mesh.shape)
+
+        def check(path, leaf, spec):
+            assert len(spec) <= len(leaf.shape)
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 10):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                total = 1
+                for a in axes:
+                    total *= sizes[a]
+                assert dim % total == 0, f"{path}: {leaf.shape} vs {spec}"
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: check(p, l, s), params, pspecs
+        )
+
+
+class TestMicrobatchPolicy:
+    def test_big_archs_get_chunked(self):
+        assert microbatch_policy(
+            get_config("qwen3-moe-235b-a22b"), get_shape("train_4k")
+        ) >= 8
+        assert microbatch_policy(
+            get_config("xlstm-125m"), get_shape("train_4k")
+        ) <= 2
+
+    def test_decode_never_chunked(self):
+        assert microbatch_policy(
+            get_config("qwen3-moe-235b-a22b"), get_shape("decode_32k")
+        ) == 1
+
+    def test_divides_local_batch(self):
+        for arch in ARCH_IDS:
+            mb = microbatch_policy(get_config(arch), get_shape("train_4k"))
+            assert (256 // 16) % mb == 0

@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests for the cross-cloud federated training system:
+the paper's headline claims, reproduced at smoke scale."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import FederatedConfig, TrainConfig
+from repro.core.federated import FederatedTrainer
+from repro.data import SyntheticCorpus, dirichlet_mixtures, federated_batch
+from repro.models import build_model
+
+
+def train(aggregation, steps=60, beta=0.05, compression="none", seed=0,
+          local_steps=2, lr=3e-3, arch="stablelm-1.6b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, n_domains=4, noise=0.1)
+    mix = dirichlet_mixtures(jax.random.PRNGKey(42), 3, 4, beta=beta)
+    fed = FederatedConfig(
+        n_clouds=3, local_steps=local_steps, aggregation=aggregation,
+        compression=compression, topk_ratio=0.05,
+    )
+    trainer = FederatedTrainer(model, fed, TrainConfig(steps=steps, lr=lr, warmup_steps=5))
+    state = trainer.init_state(jax.random.PRNGKey(seed))
+    step = jax.jit(trainer.train_step)
+    losses, accs = [], []
+    for i in range(steps):
+        batch = federated_batch(
+            corpus, jax.random.fold_in(jax.random.PRNGKey(seed + 1), i), mix, 4, 32
+        )
+        arrived = jnp.asarray([(i // local_steps) % 3 == j for j in range(3)])
+        state, m = step(state, batch, arrived, jnp.full((3,), 0.5))
+        losses.append(float(m["loss"]))
+        accs.append(float(m["accuracy"]))
+    return trainer, state, losses, accs
+
+
+@pytest.mark.slow
+def test_paper_claim_dynamic_beats_fedavg_on_noniid():
+    """Table 3's qualitative claim at smoke scale: dynamic weighted
+    aggregation converges at least as well as FedAvg under non-IID data."""
+    _, _, l_fed, _ = train("fedavg", steps=80)
+    _, _, l_dyn, _ = train("dynamic", steps=80)
+    assert np.mean(l_dyn[-10:]) <= np.mean(l_fed[-10:]) + 0.05
+
+
+def test_paper_claim_compression_cuts_comm_overhead():
+    """Table 2's claim: compressed sync moves far fewer bytes."""
+    t_none, s_none, l_none, _ = train("fedavg", steps=30)
+    t_topk, s_topk, l_topk, _ = train("fedavg", steps=30, compression="topk")
+    b_none = t_none.sync_bytes_per_cloud(s_none["global"]["params"])
+    b_topk = t_topk.sync_bytes_per_cloud(s_topk["global"]["params"])
+    assert b_topk < b_none / 10
+    assert np.isfinite(l_topk[-1])
+
+
+def test_all_aggregators_produce_finite_learning():
+    for aggregation in ("fedavg", "dynamic", "gradient", "async"):
+        _, _, losses, _ = train(aggregation, steps=20)
+        assert all(np.isfinite(l) for l in losses)
+        assert losses[-1] < losses[0] + 0.1
+
+
+def test_train_cli_runs(tmp_path):
+    out = tmp_path / "r.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "stablelm-1.6b",
+         "--steps", "6", "--aggregation", "gradient", "--json-out", str(out)],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert out.exists()
+
+
+def test_serve_cli_runs():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-125m",
+         "--batch", "2", "--prompt-len", "8", "--gen", "4"],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    """The dry-run machinery end-to-end on an 8-device host mesh (fast).
+
+    Patches the production mesh down to (2,2,2)/(2,2) inside the subprocess
+    so the full lower/compile/roofline path runs in seconds."""
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import repro.launch.mesh as meshlib
+meshlib.make_production_mesh = lambda multi_pod=False: (
+    jax.make_mesh((2,2,2), ("pod","data","model")) if multi_pod
+    else jax.make_mesh((2,2), ("data","model")))
+import repro.launch.dryrun as dr
+import repro.configs as C, dataclasses
+# shrink the shape so the smoke config compiles in seconds
+C.base.INPUT_SHAPES["train_4k"] = dataclasses.replace(
+    C.base.INPUT_SHAPES["train_4k"], seq_len=64, global_batch=8)
+import repro.configs.stablelm_1_6b as S
+orig = S.smoke_config
+def patched():
+    return dataclasses.replace(orig(), name="stablelm-1.6b")
+dr.get_config = lambda a: patched()
+rec = dr.dryrun_pair("stablelm-1.6b", "train_4k", multi_pod=False)
+assert rec["roofline"]["compute_s"] > 0
+rec2 = dr.dryrun_pair("stablelm-1.6b", "train_4k", multi_pod=True)
+assert rec2["roofline"]["dcn_link_bytes"] > 0, "no cross-pod traffic found"
+print("DRYRUN_OK")
+"""
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=580,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "DRYRUN_OK" in r.stdout
