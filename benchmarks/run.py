@@ -29,6 +29,7 @@ MODULES = [
     "async_bench",
     "local_steps_bench",
     "kernels_bench",
+    "serve_bench",
 ]
 
 

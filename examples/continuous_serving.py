@@ -1,0 +1,108 @@
+"""Continuous-batching serving demo: slot pool, staggered arrivals,
+immediate backfill.
+
+    PYTHONPATH=src python examples/continuous_serving.py
+
+Eight requests with different prompt/output lengths arrive over ~a second
+and are served through a pool of THREE KV-cache slots. The engine admits
+each request into a free slot the moment one exists (retired sequences are
+backfilled immediately, no batch barrier), interleaves prefill with decode,
+and — the property the test suite pins — produces exactly the tokens the
+sequential single-batch oracle would have produced for every request.
+
+The second half re-runs the same trace with a sliding-window ring cache and
+with the Pallas flash-decode kernel (interpret mode on CPU) to show both
+thread through the engine unchanged.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticCorpus
+from repro.launch.engine import Request, ServeEngine
+from repro.models import build_model
+
+ARCH = "stablelm-1.6b"
+SLOTS = 3
+
+
+def build_trace(cfg, n=8, seed=0):
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, n_domains=4, noise=0.0)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for r in range(n):
+        plen = int(rng.choice([8, 16, 24]))
+        gen = int(rng.choice([4, 8, 12]))
+        prompt = np.asarray(
+            corpus.sample(jax.random.PRNGKey(seed + r), np.ones(4) / 4, 1, plen)[
+                "tokens"
+            ][0],
+            np.int32,
+        )
+        reqs.append(
+            Request(
+                uid=r, prompt=prompt, max_new_tokens=gen,
+                arrival_time=float(r) * 0.15,
+            )
+        )
+    return reqs
+
+
+def serve(engine, reqs, label):
+    t0 = time.time()
+    outs = engine.run(reqs, realtime=True)
+    wall = time.time() - t0
+    total = sum(len(o.tokens) for o in outs)
+    print(f"\n=== {label} ===")
+    print(
+        f"{len(outs)} requests, {total} tokens, {engine.steps} engine steps, "
+        f"{wall:.2f}s ({total / max(wall, 1e-9):.1f} tok/s)"
+    )
+    for o in outs:
+        print(
+            f"  req {o.uid}: slot {o.slot}  prompt {len(o.prompt):2d}  "
+            f"gen {len(o.tokens):2d} [{o.finish_reason}]  "
+            f"ttft {o.ttft * 1e3:6.1f} ms  latency {o.latency * 1e3:6.1f} ms  "
+            f"tokens {o.tokens[:6]}{'...' if len(o.tokens) > 6 else ''}"
+        )
+    reused = {
+        uid: hist for uid, hist in engine.slot_history.items()
+    }
+    by_slot = {}
+    for uid, hist in sorted(reused.items()):
+        for s in hist:
+            by_slot.setdefault(s, []).append(uid)
+    for s in sorted(by_slot):
+        print(f"  slot {s} served requests {by_slot[s]}")
+    return outs
+
+
+def main():
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = build_trace(cfg)
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+
+    engine = ServeEngine(model, params, num_slots=SLOTS, max_seq=max_seq)
+    base = serve(engine, reqs, f"continuous batching · {SLOTS} slots")
+
+    engine_w = ServeEngine(
+        model, params, num_slots=SLOTS, max_seq=max_seq, window=8
+    )
+    serve(engine_w, build_trace(cfg), "sliding-window ring cache (window=8)")
+
+    engine_k = ServeEngine(
+        model, params, num_slots=SLOTS, max_seq=max_seq, use_kernel=True
+    )
+    kout = serve(engine_k, build_trace(cfg), "Pallas flash-decode kernel")
+    agree = all(
+        a.tokens == b.tokens for a, b in zip(base, kout)
+    )
+    print(f"\nkernel path token-identical to jnp path: {agree}")
+
+
+if __name__ == "__main__":
+    main()

@@ -122,7 +122,10 @@ def swa_decode_attention(
     use_kernel: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
-    """(B, Hkv, G, hd) x ring cache (B, C, Hkv, hd) → (B, Hkv, G, hd)."""
+    """(B, Hkv, G, hd) x ring cache (B, C, Hkv, hd) → (B, Hkv, G, hd).
+
+    ``pos`` is () for a lockstep batch or (B,) for per-slot positions
+    (continuous-batching engine)."""
     if use_kernel:
         return _swa.swa_decode(q, k_cache, v_cache, pos, window, interpret=interpret)
     return _ref.swa_decode_ref(q, k_cache, v_cache, pos, window)

@@ -52,24 +52,26 @@ def swa_decode_ref(
     q: jax.Array,       # (B, Hkv, G, hd)
     k: jax.Array,       # (B, C, Hkv, hd)   ring-buffer cache (rotated keys)
     v: jax.Array,       # (B, C, Hkv, hd)
-    pos: jax.Array,     # ()  tokens already cached; current token index
+    pos: jax.Array,     # () or (B,)  tokens already cached per row
     window: int,        # attention span (0 = all cached)
 ) -> jax.Array:
     """Single-token flash-decode over a ring-buffer KV cache (oracle).
 
     Slot s holds global position  pos - ((pos % C) - s) mod C ; valid slots
-    are those within [max(pos-window+1, 0), pos]."""
+    are those within [max(pos-window+1, 0), pos]. ``pos`` may be scalar
+    (lockstep batch) or (B,) (per-slot positions, continuous batching)."""
     b, c, hkv, hd = k.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # (B,)
     slot = pos % c
     slots = jnp.arange(c)
-    gpos = pos - (slot - slots) % c
-    lo = jnp.maximum(pos - (window - 1) if window > 0 else 0, 0)
-    valid = (gpos >= lo) & (gpos <= pos)
+    gpos = pos[:, None] - (slot[:, None] - slots[None, :]) % c  # (B, C)
+    lo = jnp.maximum(pos - (window - 1), 0) if window > 0 else jnp.zeros_like(pos)
+    valid = (gpos >= lo[:, None]) & (gpos <= pos[:, None])
 
     scores = jnp.einsum(
         "bkgd,bskd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * (hd**-0.5)
-    scores = jnp.where(valid[None, None, None, :], scores, -2.0**30)
+    scores = jnp.where(valid[:, None, None, :], scores, -2.0**30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)

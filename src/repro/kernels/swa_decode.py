@@ -37,7 +37,10 @@ def _swa_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0, 0]
+    # per-row position: pos_ref is (B, 1) in SMEM; grid axis 0 is the batch
+    # row, so each program masks against its own slot's depth (continuous
+    # batching runs every row at a different position).
+    pos = pos_ref[pl.program_id(0), 0]
     q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)         # (CK, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)
@@ -83,7 +86,7 @@ def swa_decode(
     q: jax.Array,          # (B, Hkv, G, hd)
     k_cache: jax.Array,    # (B, C, Hkv, hd)
     v_cache: jax.Array,    # (B, C, Hkv, hd)
-    pos: jax.Array,        # () i32 — tokens already cached
+    pos: jax.Array,        # () or (B,) i32 — tokens already cached per row
     window: int = 0,
     *,
     interpret: bool = True,
@@ -112,4 +115,7 @@ def swa_decode(
             pltpu.VMEM((g, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(pos.reshape(1, 1).astype(jnp.int32), q, k_cache, v_cache)
+    )(
+        jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1)),
+        q, k_cache, v_cache,
+    )

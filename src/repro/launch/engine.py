@@ -1,0 +1,432 @@
+"""Continuous-batching serve engine: slot-based scheduler over a shared
+per-slot ring-buffer KV cache.
+
+The engine turns the single-batch serve path (launch/serve.py, kept as the
+reference oracle) into iteration-level scheduling in the Orca/vLLM style,
+sized for this repo's CPU-verifiable models:
+
+* A fixed pool of ``num_slots`` KV-cache slots — the rows of ONE stacked
+  (L, B, C, Hkv, hd) ring cache with per-slot positions
+  (``models/attention.py``; ``models/transformer.py::init_decode_cache``
+  with ``per_slot=True``). Admitting a request claims a free slot and
+  resets its position; retiring a request frees the slot for immediate
+  backfill. Stale k/v are never cleared — the decode validity mask derives
+  entirely from ``pos``.
+* Requests arrive at arbitrary times with arbitrary prompt/output lengths
+  (mirroring how ``core/scheduler.py`` handles clouds completing at
+  different wall times). A FIFO admission queue feeds free slots in
+  arrival order.
+* Prefill is either **chunked** (the whole prompt in one q-chunked
+  ``attend_full`` forward written into the slot's ring rows —
+  ``prefill_into_slot``) or **interleaved** (prompt tokens teacher-forced
+  one per engine step through the SAME jitted decode step that serves the
+  decoding slots, so a step can simultaneously prefill some slots and
+  decode others). Both are token-identical to the sequential oracle.
+* One jitted decode step per engine iteration advances every live slot by
+  one token; sequences retire on EOS or max-new-tokens. The sliding-window
+  ring cache (``window > 0``) and the Pallas flash-decode kernel
+  (``use_kernel=True``, interpret mode on CPU) thread straight through.
+
+    PYTHONPATH=src python -m repro.launch.serve --continuous \
+        --arch stablelm-1.6b --slots 4 --requests 8
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticCorpus
+from repro.models import attention, build_model
+from repro.models.model import ModelAPI
+from repro.models.transformer import reset_slot
+
+PREFILL_MODES = ("chunked", "interleaved")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival_time`` is seconds relative to the
+    engine clock; the engine never admits a request before it arrives."""
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size > 0, "empty prompt"
+        assert self.max_new_tokens > 0, "max_new_tokens must be positive"
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    uid: int
+    prompt: list[int]
+    tokens: list[int]             # generated ids (greedy), length <= max_new
+    slot: int                     # slot the request was served from
+    finish_reason: str            # "eos" | "length"
+    arrival_time: float
+    admit_time: float
+    first_token_time: float
+    finish_time: float
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from arrival (includes queueing)."""
+        return self.first_token_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one live slot."""
+    req: Request
+    pending: collections.deque    # prompt tokens not yet fed (interleaved)
+    generated: list[int]
+    next_feed: int                # token the next decode step consumes
+    admit_time: float
+    first_token_time: float = -1.0
+
+
+class ServeEngine:
+    """Slot-based continuous-batching scheduler around one jitted decode step.
+
+    Parameters
+    ----------
+    model, params : a ``ModelAPI`` with the slot-cache members (dense / MoE
+        transformer family) and its initialized parameters.
+    num_slots : size of the fixed KV-slot pool == decode batch width.
+    max_seq : ring capacity per slot when ``window == 0``; every request
+        must satisfy prompt_len + max_new_tokens <= max_seq.
+    window : sliding-window span; > 0 shrinks the ring to the window.
+    use_kernel : route decode attention through the Pallas flash-decode
+        kernel (interpret mode on CPU).
+    prefill : "chunked" (whole prompt in one forward at admission) or
+        "interleaved" (teacher-force the prompt through the decode step,
+        one token per engine iteration).
+    eos_id : optional token id that retires a sequence early.
+    time_fn : monotonic clock; injectable for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        model: ModelAPI,
+        params,
+        *,
+        num_slots: int = 4,
+        max_seq: int = 128,
+        window: int = 0,
+        use_kernel: bool = False,
+        prefill: str = "chunked",
+        eos_id: int | None = None,
+        time_fn: Callable[[], float] | None = None,
+    ):
+        if model.init_slot_cache is None or model.prefill_slot is None:
+            raise ValueError(
+                f"arch {model.cfg.name!r} ({model.cfg.arch_type}) has no "
+                "slot-cache API; the engine serves the transformer family"
+            )
+        if prefill not in PREFILL_MODES:
+            raise ValueError(f"prefill {prefill!r} not in {PREFILL_MODES}")
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {max_seq}")
+        self.cfg = model.cfg
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.window = window
+        self.use_kernel = use_kernel
+        self.prefill_mode = prefill
+        self.eos_id = eos_id
+        self._time_fn = time_fn or time.monotonic
+        self._t0 = self._time_fn()
+
+        self.cache = model.init_slot_cache(params, num_slots, max_seq, window=window)
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode(p, c, t, window=window)
+        )
+        self._prefill = jax.jit(
+            lambda p, c, t, s: model.prefill_slot(p, c, t, s, window=window)
+        )
+
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.slots: list[_Slot | None] = [None] * num_slots
+        self.finished: list[RequestOutput] = []
+        self.steps = 0            # decode steps executed
+        self.slot_history: dict[int, list[int]] = {}  # uid -> slots used
+
+    # ------------------------------------------------------------- plumbing
+    def _now(self) -> float:
+        return self._time_fn() - self._t0
+
+    def reset_clock(self) -> None:
+        """Restart the engine clock at 0 — call after warmup so request
+        arrival times (relative to the clock) and latency metrics exclude
+        jit compilation."""
+        self._t0 = self._time_fn()
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    @property
+    def active_slots(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def next_arrival(self) -> float | None:
+        """Earliest arrival among waiting requests, or None."""
+        return min((r.arrival_time for r in self.waiting), default=None)
+
+    def submit(self, req: Request) -> None:
+        if self.window == 0 and len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + gen "
+                f"{req.max_new_tokens} exceeds max_seq {self.max_seq} "
+                "(full-attention ring would overwrite live context)"
+            )
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------ scheduling
+    def _greedy(self, logits_row) -> int:
+        return int(jnp.argmax(logits_row[: self.cfg.vocab_size]))
+
+    def _admit(self, now: float, respect_arrivals: bool) -> None:
+        """Fill free slots from the queue in arrival order."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.waiting:
+            req = self.waiting[0]
+            if respect_arrivals and req.arrival_time > now:
+                break
+            self.waiting.popleft()
+            i = free.pop(0)
+            self.cache = reset_slot(self.cache, i)
+            slot = _Slot(
+                req=req,
+                pending=collections.deque(req.prompt.tolist()),
+                generated=[],
+                next_feed=-1,
+                admit_time=now,
+            )
+            self.slot_history.setdefault(req.uid, []).append(i)
+            if self.prefill_mode == "chunked":
+                self.cache, logits = self._prefill(
+                    self.params, self.cache, jnp.asarray(req.prompt[None, :]), i
+                )
+                slot.pending.clear()
+                g = self._greedy(logits[0])
+                slot.first_token_time = self._now()
+                slot.generated.append(g)
+                slot.next_feed = g
+                if self._done(slot, g):
+                    self._retire(i, slot)
+                    free.append(i)
+                    free.sort()
+                    continue
+            else:  # interleaved: first decode step consumes the first prompt token
+                slot.next_feed = slot.pending.popleft()
+            self.slots[i] = slot
+
+    def _done(self, slot: _Slot, last: int) -> bool:
+        if self.eos_id is not None and last == self.eos_id:
+            return True
+        return len(slot.generated) >= slot.req.max_new_tokens
+
+    def _retire(self, i: int, slot: _Slot) -> None:
+        reason = (
+            "eos"
+            if self.eos_id is not None and slot.generated[-1] == self.eos_id
+            else "length"
+        )
+        self.finished.append(
+            RequestOutput(
+                uid=slot.req.uid,
+                prompt=slot.req.prompt.tolist(),
+                tokens=list(slot.generated),
+                slot=i,
+                finish_reason=reason,
+                arrival_time=slot.req.arrival_time,
+                admit_time=slot.admit_time,
+                first_token_time=slot.first_token_time,
+                finish_time=self._now(),
+            )
+        )
+        self.slots[i] = None
+
+    def step(self, *, respect_arrivals: bool = False) -> list[RequestOutput]:
+        """One engine iteration: admit → one batched decode step → retire.
+
+        Returns the requests that finished during this iteration. With
+        ``respect_arrivals`` the admission gate compares each request's
+        ``arrival_time`` against the engine clock; otherwise the queue
+        drains in arrival order as slots free up (virtual time).
+        """
+        n_done = len(self.finished)
+        attention.set_decode_kernel(self.use_kernel)
+        try:
+            self._admit(self._now(), respect_arrivals)
+            live = [i for i, s in enumerate(self.slots) if s is not None]
+            if live:
+                feed = np.zeros((self.num_slots, 1), np.int32)
+                for i in live:
+                    feed[i, 0] = self.slots[i].next_feed
+                self.cache, logits = self._decode(
+                    self.params, self.cache, jnp.asarray(feed)
+                )
+                self.steps += 1
+                # one batched argmax + host transfer per step, not per slot
+                greedy = np.asarray(
+                    jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+                )
+                now = self._now()
+                for i in live:
+                    slot = self.slots[i]
+                    if slot.pending:  # mid-prefill: logits are teacher-forced
+                        slot.next_feed = slot.pending.popleft()
+                        continue
+                    g = int(greedy[i])
+                    if slot.first_token_time < 0:
+                        slot.first_token_time = now
+                    slot.generated.append(g)
+                    slot.next_feed = g
+                    if self._done(slot, g):
+                        self._retire(i, slot)  # freed; backfilled next admit
+        finally:
+            attention.set_decode_kernel(False)
+        return self.finished[n_done:]
+
+    def run(
+        self, requests=(), *, realtime: bool = False
+    ) -> list[RequestOutput]:
+        """Drain ``requests`` (plus anything already queued) to completion.
+
+        ``realtime=True`` honors arrival times against the wall clock,
+        sleeping while all slots are idle and the next arrival is in the
+        future — the benchmark's Poisson-trace mode. ``realtime=False``
+        replays the queue in arrival order at full speed (deterministic)."""
+        for req in sorted(requests, key=lambda r: r.arrival_time):
+            self.submit(req)
+        outs: list[RequestOutput] = []
+        while self.has_work:
+            if realtime and self.active_slots == 0:
+                nxt = self.next_arrival()
+                if nxt is not None:
+                    delay = nxt - self._now()
+                    if delay > 0:
+                        time.sleep(delay)
+            outs.extend(self.step(respect_arrivals=realtime))
+        return sorted(outs, key=lambda o: o.uid)
+
+
+# ----------------------------------------------------------------- helpers
+def make_requests(
+    cfg,
+    *,
+    n_requests: int,
+    prompt_len: int,
+    gen_tokens: int,
+    seed: int = 0,
+    stagger: float = 0.0,
+) -> list[Request]:
+    """Synthetic request trace with the serve oracle's prompt distribution:
+    row r of the (n_requests, prompt_len) corpus sample is request r, so the
+    uid-r output is directly comparable against ``serve_batch`` row r."""
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, n_domains=4, noise=0.0)
+    prompts = corpus.sample(
+        jax.random.PRNGKey(seed + 1), jnp.ones(4) / 4, n_requests, prompt_len
+    )["tokens"]
+    prompts = np.asarray(prompts, np.int32)
+    return [
+        Request(
+            uid=r,
+            prompt=prompts[r],
+            max_new_tokens=gen_tokens,
+            arrival_time=r * stagger,
+        )
+        for r in range(n_requests)
+    ]
+
+
+def serve_continuous(
+    arch: str,
+    *,
+    smoke: bool = True,
+    num_slots: int = 4,
+    n_requests: int = 8,
+    prompt_len: int = 32,
+    gen_tokens: int = 32,
+    window: int = 0,
+    use_kernel: bool = False,
+    prefill: str = "chunked",
+    seed: int = 0,
+    stagger: float = 0.0,
+    log_fn=print,
+) -> dict:
+    """Build a model + engine, serve a synthetic trace, report throughput."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    engine = ServeEngine(
+        model,
+        params,
+        num_slots=num_slots,
+        max_seq=prompt_len + gen_tokens,
+        window=window,
+        use_kernel=use_kernel,
+        prefill=prefill,
+    )
+    reqs = make_requests(
+        cfg, n_requests=n_requests, prompt_len=prompt_len,
+        gen_tokens=gen_tokens, seed=seed, stagger=stagger,
+    )
+    # trace prefill + decode outside the measured window so the reported
+    # throughput/latency are steady-state, not jit compilation
+    engine.run(
+        [Request(uid=-1, prompt=np.zeros(prompt_len, np.int32),
+                 max_new_tokens=min(2, gen_tokens))]
+    )
+    engine.finished.clear()
+    engine.slot_history.clear()
+    engine.steps = 0
+    engine.reset_clock()
+    t0 = time.time()
+    outs = engine.run(reqs, realtime=stagger > 0)
+    wall = time.time() - t0
+    total = sum(len(o.tokens) for o in outs)
+    lat = [o.latency for o in outs] or [0.0]
+    result = {
+        "arch": cfg.name,
+        "num_slots": num_slots,
+        "n_requests": n_requests,
+        "prompt_len": prompt_len,
+        "gen_tokens": gen_tokens,
+        "window": window,
+        "use_kernel": use_kernel,
+        "prefill": prefill,
+        "engine_steps": engine.steps,
+        "wall_seconds": wall,
+        "tokens_per_second": total / max(wall, 1e-9),
+        "generated": [o.tokens for o in outs],
+        "slots": [o.slot for o in outs],
+        "latency_p50": float(np.percentile(lat, 50)),
+        "latency_p95": float(np.percentile(lat, 95)),
+    }
+    log_fn(
+        f"{cfg.name}: {n_requests} reqs × {gen_tokens} tok over "
+        f"{num_slots} slots in {engine.steps} steps, {wall:.2f}s "
+        f"({result['tokens_per_second']:.1f} tok/s, "
+        f"p50 {result['latency_p50']:.2f}s p95 {result['latency_p95']:.2f}s)"
+    )
+    return result

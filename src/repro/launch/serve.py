@@ -1,11 +1,20 @@
-"""Serving driver: batched prefill + decode with the cached serve path.
+"""Serving CLI: single-batch oracle path and the continuous-batching engine.
 
-CPU-sized demonstration of the same serve_step the dry-run lowers for
-decode_32k / long_500k. Supports the Pallas flash-decode kernel
+``serve_batch`` is the sequential reference path (one fixed batch, lockstep
+teacher-forced prefill + greedy decode) — it is the oracle the engine's
+continuous-batching output is pinned against token-for-token. The
+``--continuous`` mode dispatches to ``launch/engine.py``: slot-based
+admission, interleaved/chunked prefill, EOS/max-token retirement with
+immediate backfill. Both support the Pallas flash-decode kernel
 (--use-kernel, interpret mode on CPU) and sliding-window ring caches.
 
+    # oracle (single fixed batch)
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --batch 4 --prompt-len 32 --gen 32
+
+    # continuous batching (slot pool + request queue)
+    PYTHONPATH=src python -m repro.launch.serve --continuous \
+        --arch stablelm-1.6b --slots 4 --requests 8 --stagger 0.05
 """
 from __future__ import annotations
 
@@ -102,19 +111,44 @@ def serve_batch(
     return result
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--window", type=int, default=0)
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window span (0 = full attention)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas flash-decode kernel (interpret mode on CPU)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    serve_batch(
+    # oracle mode
+    ap.add_argument("--batch", type=int, default=4,
+                    help="[oracle] fixed lockstep batch size")
+    # continuous mode
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine instead of the oracle")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[continuous] KV-cache slot pool size")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="[continuous] number of queued requests")
+    ap.add_argument("--prefill", choices=("chunked", "interleaved"),
+                    default="chunked", help="[continuous] prompt admission mode")
+    ap.add_argument("--stagger", type=float, default=0.0,
+                    help="[continuous] inter-arrival spacing in seconds")
+    args = ap.parse_args(argv)
+    if args.continuous:
+        from repro.launch.engine import serve_continuous
+
+        return serve_continuous(
+            args.arch, smoke=args.smoke, num_slots=args.slots,
+            n_requests=args.requests, prompt_len=args.prompt_len,
+            gen_tokens=args.gen, window=args.window,
+            use_kernel=args.use_kernel, prefill=args.prefill,
+            seed=args.seed, stagger=args.stagger,
+        )
+    return serve_batch(
         args.arch, smoke=args.smoke, batch=args.batch,
         prompt_len=args.prompt_len, gen_tokens=args.gen,
         window=args.window, use_kernel=args.use_kernel, seed=args.seed,

@@ -82,6 +82,22 @@ def cache_specs(
     return jax.eval_shape(mk, params, dec_batch)
 
 
+def slot_cache_specs(
+    model: ModelAPI, num_slots: int, max_seq: int, window: int = 0
+) -> Pytree:
+    """ShapeDtypeStructs for the continuous-batching engine's per-slot cache
+    (per-row positions, shape (num_slots,)) — lets the dry-run size/lower the
+    engine decode step without allocating."""
+    if model.init_slot_cache is None:
+        raise ValueError(f"{model.cfg.name}: no slot-cache API for this arch")
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def mk(params):
+        return model.init_slot_cache(params, num_slots, max_seq, window=window)
+
+    return jax.eval_shape(mk, params)
+
+
 def layers_for_memory(cfg: ModelConfig) -> int:
     n = cfg.n_layers
     if cfg.arch_type == "audio":

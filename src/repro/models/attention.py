@@ -190,16 +190,30 @@ def attend_full(
 
 # ------------------------------------------------------------------- caches
 def init_cache(
-    cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0, dtype=None
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    *,
+    window: int = 0,
+    dtype=None,
+    per_slot: bool = False,
 ) -> dict:
-    """Ring-buffer KV cache. capacity = window if window>0 else max_seq."""
+    """Ring-buffer KV cache. capacity = window if window>0 else max_seq.
+
+    ``per_slot=True`` gives every batch row its own write position (shape
+    (B,) instead of scalar), turning rows into independently resettable
+    *slots* for the continuous-batching serve engine: a finished request's
+    slot is recycled by zeroing its ``pos`` entry — stale k/v need no
+    clearing because the validity mask is derived from ``pos``.
+    """
     cap = window if (0 < window < max_seq) else max_seq
     hd = cfg.resolved_head_dim
     dtype = dtype or cfg.dtype
+    pos_shape = (batch,) if per_slot else ()
     return {
         "k": jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),  # number of tokens already written
+        "pos": jnp.zeros(pos_shape, jnp.int32),  # tokens already written
     }
 
 
@@ -212,10 +226,13 @@ def fill_cache(cache: dict, k: jax.Array, v: jax.Array, start: int = 0) -> dict:
     cap = cache_capacity(cache)
     s = k.shape[1]
     if s >= cap:
-        # only the last `cap` tokens survive; ring layout slot = pos % cap
+        # only the last `cap` tokens survive; ring layout slot = pos % cap.
+        # tail_k[i] holds global position first_pos + i and must land at
+        # slot (first_pos + i) % cap — a roll by +first_pos (the seed
+        # rolled by -first_pos, scrambling any wrap-around prefill).
         tail_k, tail_v = k[:, s - cap :], v[:, s - cap :]
         first_pos = start + s - cap
-        roll = -((first_pos) % cap)
+        roll = first_pos % cap
         new_k = jnp.roll(tail_k, roll, axis=1)
         new_v = jnp.roll(tail_v, roll, axis=1)
     else:
@@ -239,6 +256,11 @@ def decode_attend(
     The cache is a ring buffer; ``window`` is the attention span (0 = all
     cached tokens). Keys are stored rotated, the validity mask reconstructs
     each slot's global position from ``pos``.
+
+    ``cache["pos"]`` may be a scalar (all rows in lockstep — the classic
+    single-batch serve path) or shape (B,) (per-slot positions — the
+    continuous-batching engine, where each row is an independent request
+    at its own depth).
     """
     hd = cfg.resolved_head_dim
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
@@ -246,12 +268,13 @@ def decode_attend(
     b = x.shape[0]
     cap = cache_capacity(cache)
     pos = cache["pos"]  # tokens already cached; current token index == pos
+    per_slot = pos.ndim == 1
 
     q = _split_heads(x @ params["wq"], hq, hd)
     k = _split_heads(x @ params["wk"], hkv, hd)
     v = _split_heads(x @ params["wv"], hkv, hd)
     if rope:
-        pos_b = jnp.broadcast_to(pos[None], (b, 1))
+        pos_b = pos[:, None] if per_slot else jnp.broadcast_to(pos[None], (b, 1))
         q = apply_rope(q, pos_b, cfg.rope_theta)
         k = apply_rope(k, pos_b, cfg.rope_theta)
 
@@ -264,8 +287,14 @@ def decode_attend(
     # stablelm-12b decode_32k — instead of one token's worth).
     k = constrain(k, "batch", None, "kv_heads", None)
     v = constrain(v, "batch", None, "kv_heads", None)
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    if per_slot:
+        # each row writes at its own ring offset — batched scatter
+        rows = jnp.arange(b)
+        new_k = cache["k"].at[rows, slot].set(k[:, 0])
+        new_v = cache["v"].at[rows, slot].set(v[:, 0])
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
     new_k = constrain(new_k, "batch", "cache_seq", "kv_heads", None)
     new_v = constrain(new_v, "batch", "cache_seq", "kv_heads", None)
 
@@ -278,13 +307,20 @@ def decode_attend(
     else:
         # global position held by each slot after the write
         slots = jnp.arange(cap)
-        gpos = pos - (slot - slots) % cap  # == pos at slot==slot, wraps mod cap
-        lo = pos - (window - 1) if window > 0 else 0
-        valid = (gpos >= jnp.maximum(lo, 0)) & (gpos <= pos)
+        pos_c = pos[:, None] if per_slot else pos  # (B,1) or ()
+        slot_c = slot[:, None] if per_slot else slot
+        gpos = pos_c - (slot_c - slots) % cap  # == pos at the write slot
+        lo = pos_c - (window - 1) if window > 0 else 0
+        valid = (gpos >= jnp.maximum(lo, 0)) & (gpos <= pos_c)
+        mask = (
+            valid[:, None, None, None, :]
+            if per_slot
+            else valid[None, None, None, None, :]
+        )
 
         q = q.reshape(b, 1, hkv, g, hd)
         scores = _gqa_scores(q, new_k) * (hd**-0.5)  # (B,Hkv,G,1,cap)
-        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+        scores = jnp.where(mask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out = _gqa_out(probs, new_v, x.dtype)  # (B,1,H*hd)
     out = out @ params["wo"]

@@ -37,6 +37,11 @@ class ModelAPI:
     init_cache: Callable[..., Any]     # (params, batch, max_seq, window=) -> cache
     decode: Callable[..., tuple[Any, jax.Array]]   # (params, cache, tokens, window=)
     prefill: Callable[..., tuple[Any, jax.Array]]  # (params, batch, window=, cache_window=)
+    # Continuous-batching slot API (None where the arch doesn't support it):
+    # init_slot_cache(params, num_slots, max_seq, window=) -> per-slot cache
+    # prefill_slot(params, cache, tokens (1,S), slot, window=) -> (cache, logits)
+    init_slot_cache: Callable[..., Any] | None = None
+    prefill_slot: Callable[..., tuple[Any, jax.Array]] | None = None
 
 
 def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
@@ -62,7 +67,20 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
             cache_window=cache_window,
         )
 
-    return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
+    def init_slot_cache(params, num_slots, max_seq, *, window=0):
+        return transformer.init_decode_cache(
+            cfg, num_slots, max_seq, window=window, per_slot=True
+        )
+
+    def prefill_slot(params, cache, tokens, slot, *, window=0):
+        return transformer.prefill_into_slot(
+            cfg, params, cache, tokens, slot, ffn=ffn, window=window
+        )
+
+    return ModelAPI(
+        cfg, init, loss, forward, init_cache, decode, prefill,
+        init_slot_cache=init_slot_cache, prefill_slot=prefill_slot,
+    )
 
 
 def _vlm_api(cfg: ModelConfig) -> ModelAPI:

@@ -135,17 +135,29 @@ def loss_fn(
 
 # -------------------------------------------------------------------- decode
 def init_decode_cache(
-    cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0
+    cfg: ModelConfig, batch: int, max_seq: int, *, window: int = 0,
+    per_slot: bool = False,
 ) -> dict:
+    """Stacked (L, B, C, Hkv, hd) ring caches. ``per_slot=True`` gives each
+    batch row an independent position (shape (B,)) so rows act as recyclable
+    request slots for the continuous-batching engine."""
     cap = window if (0 < window < max_seq) else max_seq
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers, batch, cap, cfg.n_kv_heads, hd)
     return {
         "k": jnp.zeros(shape, cfg.dtype),
         "v": jnp.zeros(shape, cfg.dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_slot else (), jnp.int32),
         "window": jnp.asarray(window, jnp.int32),
     }
+
+
+def reset_slot(cache: dict, slot) -> dict:
+    """Recycle one slot of a per-slot cache: zero its position. Stale k/v
+    rows need no clearing — the decode validity mask derives entirely from
+    ``pos``, so a reset slot attends to nothing until rewritten."""
+    assert cache["pos"].ndim == 1, "reset_slot requires a per-slot cache"
+    return {**cache, "pos": cache["pos"].at[slot].set(0)}
 
 
 def decode_step(
@@ -228,3 +240,65 @@ def prefill(
         "window": jnp.asarray(cache_window, jnp.int32),
     }
     return cache, logits
+
+
+def prefill_into_slot(
+    cfg: ModelConfig,
+    params: Params,
+    cache: dict,
+    tokens: jax.Array,
+    slot: jax.Array,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+) -> tuple[dict, jax.Array]:
+    """Chunked prefill of ONE request into row ``slot`` of a shared per-slot
+    decode cache (continuous batching: other slots keep their live state).
+
+    tokens: (1, S) — the request's prompt. The full prompt runs through one
+    q-chunked ``attend_full`` forward (compute-efficient prefill), and the
+    resulting rotated k/v are written into the slot's ring rows; positions
+    restart at 0 for the slot. Returns (cache', last-position logits (1, Vp)).
+    """
+    assert cache["pos"].ndim == 1, "prefill_into_slot requires a per-slot cache"
+    b1, s = tokens.shape
+    assert b1 == 1, "prefill_into_slot admits one request at a time"
+    q_chunk = default_q_chunk(s)
+    x = embed_tokens(params["embed"], tokens)
+    pos = positions_for(tokens)
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def body(h, sl):
+        lp, ck, cv = sl  # ck/cv: (B, C, Hkv, hd) — one layer, all slots
+        a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
+        a = attn.attend_full(
+            lp["attn"], a, pos, cfg, causal=True, window=window, q_chunk=q_chunk
+        )
+        h = h + a
+        f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        f, _ = ffn.apply(lp["ffn"], f, cfg)
+        # ring-write the prompt kv into this slot's row only
+        row = attn.fill_cache(
+            {
+                "k": jax.lax.dynamic_slice_in_dim(ck, slot, 1, axis=0),
+                "v": jax.lax.dynamic_slice_in_dim(cv, slot, 1, axis=0),
+                "pos": jnp.zeros((), jnp.int32),
+            },
+            k,
+            v,
+        )
+        nk = jax.lax.dynamic_update_slice_in_dim(ck, row["k"], slot, axis=0)
+        nv = jax.lax.dynamic_update_slice_in_dim(cv, row["v"], slot, axis=0)
+        return h + f, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+    new_cache = {
+        "k": nk,
+        "v": nv,
+        "pos": cache["pos"].at[slot].set(s),
+        "window": cache["window"],
+    }
+    return new_cache, logits

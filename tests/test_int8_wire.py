@@ -1,6 +1,7 @@
 """int8-on-the-wire cross-pod aggregation (beyond-paper): must match the
 dense weighted average within int8 quantization error, and the compiled HLO
 must carry the payload as s8. Runs in a subprocess with 8 virtual devices."""
+import os
 import subprocess
 import sys
 
@@ -48,7 +49,11 @@ def test_int8_wire_matches_dense_average():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": os.environ.get("HOME", "/tmp"),
+             # pin CPU: containers with libtpu installed otherwise probe
+             # the (absent) TPU via GCP metadata HTTP retries for minutes
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-2000:]

@@ -1,7 +1,7 @@
 """Partitioning (§3.1) and async scheduler tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.partition import Partitioner
 from repro.core.scheduler import (

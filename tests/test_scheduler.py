@@ -1,0 +1,102 @@
+"""Coverage for core/scheduler.py — the heterogeneity/asynchrony simulator
+(§3.2/§3.3): event ordering, the α₀/(1+s) staleness rule, round-mask
+bucketing, and synchronous-mode round latency."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (
+    CloudSpec,
+    events_to_round_masks,
+    simulate_async_schedule,
+    sync_round_time,
+)
+
+
+def _clouds():
+    return [
+        CloudSpec("aws", speed=1.0, link_latency_s=0.05, link_bandwidth=1e9),
+        CloudSpec("gcp", speed=0.5, link_latency_s=0.20, link_bandwidth=5e8),
+        CloudSpec("azure", speed=2.0, link_latency_s=0.10, link_bandwidth=2e9),
+    ]
+
+
+class TestAsyncSchedule:
+    def test_event_times_non_decreasing(self):
+        events = simulate_async_schedule(
+            _clouds(), local_steps=4, n_rounds=30, sync_bytes=1e8
+        )
+        times = [e.time for e in events]
+        assert times == sorted(times), "async merges must replay in wall order"
+
+    def test_staleness_alpha_rule(self):
+        """α_i(s) = α₀/(1+s) for every event, for two different α₀."""
+        for base in (0.5, 0.9):
+            events = simulate_async_schedule(
+                _clouds(), local_steps=4, n_rounds=25, base_alpha=base
+            )
+            for e in events:
+                assert e.alpha == pytest.approx(base / (1.0 + e.staleness))
+
+    def test_staleness_counts_merges_since_pull(self):
+        """With one fast and one slow cloud, the slow cloud's merge sees
+        exactly the number of fast merges that landed while it computed."""
+        clouds = [CloudSpec("fast", speed=4.0), CloudSpec("slow", speed=1.0)]
+        events = simulate_async_schedule(clouds, local_steps=1, n_rounds=10)
+        slow_events = [e for e in events if e.cloud == 1]
+        assert slow_events, "slow cloud must eventually merge"
+        # fast finishes at 0.25, 0.5, 0.75 before slow's 1.0 → staleness 3
+        assert slow_events[0].staleness == 3
+        fast_first = [e for e in events if e.cloud == 0][0]
+        assert fast_first.staleness == 0
+
+    def test_homogeneous_clouds_zero_initial_staleness(self):
+        events = simulate_async_schedule(
+            [CloudSpec("a"), CloudSpec("b")], local_steps=2, n_rounds=2
+        )
+        # both finish their first round before either pulls again
+        assert {e.staleness for e in events[:2]} <= {0, 1}
+        assert events[0].staleness == 0
+
+
+class TestRoundMasks:
+    def test_one_hot_rows_consistent_with_trace(self):
+        events = simulate_async_schedule(_clouds(), local_steps=4, n_rounds=20)
+        arrived, alphas = events_to_round_masks(events, 3, rounds=20)
+        assert arrived.shape == (20, 3) and alphas.shape == (20, 3)
+        # each round applies exactly one cloud's update…
+        np.testing.assert_array_equal(arrived.sum(axis=1), np.ones(20))
+        for k, ev in enumerate(events[:20]):
+            assert arrived[k, ev.cloud], "mask row must match the event trace"
+            assert alphas[k, ev.cloud] == pytest.approx(ev.alpha)
+        # …and alphas vanish exactly where nothing arrived
+        assert (alphas[~arrived] == 0).all()
+
+    def test_truncates_to_requested_rounds(self):
+        events = simulate_async_schedule(_clouds(), local_steps=4, n_rounds=30)
+        arrived, _ = events_to_round_masks(events, 3, rounds=10)
+        assert arrived.shape == (10, 3)
+        np.testing.assert_array_equal(arrived.sum(axis=1), np.ones(10))
+
+
+class TestSyncRoundTime:
+    def test_slowest_compute_plus_slowest_transfer(self):
+        clouds = _clouds()
+        local_steps, step_time, sync_bytes = 8, 1.0, 2e9
+        t = sync_round_time(clouds, local_steps, step_time, sync_bytes)
+        compute = max(local_steps * step_time / c.speed for c in clouds)
+        xfer = max(
+            c.link_latency_s + sync_bytes / c.link_bandwidth for c in clouds
+        )
+        assert t == pytest.approx(compute + xfer)
+        # the slow straggler (gcp, speed 0.5) dominates compute
+        assert t >= 8 / 0.5
+
+    def test_sync_slower_than_fastest_async_merge(self):
+        """The async motivation in one assert: the first async merge always
+        lands no later than the synchronous barrier round."""
+        clouds = _clouds()
+        events = simulate_async_schedule(
+            clouds, local_steps=8, n_rounds=1, sync_bytes=2e9
+        )
+        t_sync = sync_round_time(clouds, 8, 1.0, 2e9)
+        assert events[0].time <= t_sync

@@ -1,5 +1,6 @@
 """End-to-end behaviour tests for the cross-cloud federated training system:
 the paper's headline claims, reproduced at smoke scale."""
+import os
 import subprocess
 import sys
 
@@ -72,7 +73,12 @@ def test_train_cli_runs(tmp_path):
         [sys.executable, "-m", "repro.launch.train", "--arch", "stablelm-1.6b",
          "--steps", "6", "--aggregation", "gradient", "--json-out", str(out)],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": os.environ.get("HOME", "/tmp"),
+             # containers with libtpu installed: without this pin the
+             # subprocess probes the (absent) TPU via GCP metadata HTTP
+             # retries for minutes before falling back to CPU
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-2000:]
@@ -84,7 +90,12 @@ def test_serve_cli_runs():
         [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-125m",
          "--batch", "2", "--prompt-len", "8", "--gen", "4"],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": os.environ.get("HOME", "/tmp"),
+             # containers with libtpu installed: without this pin the
+             # subprocess probes the (absent) TPU via GCP metadata HTTP
+             # retries for minutes before falling back to CPU
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-2000:]
@@ -124,7 +135,12 @@ print("DRYRUN_OK")
     r = subprocess.run(
         [sys.executable, "-c", script],
         capture_output=True, text=True, timeout=580,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": os.environ.get("HOME", "/tmp"),
+             # containers with libtpu installed: without this pin the
+             # subprocess probes the (absent) TPU via GCP metadata HTTP
+             # retries for minutes before falling back to CPU
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
