@@ -1,5 +1,5 @@
 """Continuous-batching serve benchmark: Poisson arrivals → tokens/sec and
-p50/p95 request latency.
+p50/p95 request latency; burst arrivals → prefill-dispatch count and TTFT.
 
 Drives ``launch/engine.py`` with a Poisson request trace (exponential
 inter-arrival times, mixed prompt lengths) in realtime mode, and contrasts
@@ -13,7 +13,13 @@ as back-to-back fixed batches. The headline numbers:
   whole previous batch)
 * ``ttft_p50`` — arrival→first-token seconds
 
+``--burst N`` switches to a burst-arrival trace (N simultaneous arrivals
+per burst) and runs the engine twice — batched multi-slot prefill vs.
+one-dispatch-per-request — reporting ``prefill_dispatches`` and TTFT
+p50/p95 for both. ``--smoke`` is the CI-sized burst run (JSON artifact).
+
     PYTHONPATH=src python -m benchmarks.serve_bench --requests 12 --rate 2.0
+    PYTHONPATH=src python -m benchmarks.serve_bench --burst 4 --requests 12
 """
 from __future__ import annotations
 
@@ -71,18 +77,9 @@ def bench_engine(args) -> dict:
         prompt_lens=tuple(args.prompt_lens), gen_tokens=args.gen,
         seed=args.seed,
     )
-    # warm the jit caches outside the timed region (one prefill per distinct
-    # prompt length + at least one decode step) so the trace measures steady
-    # state, not compilation
-    warm = [
-        Request(uid=-1 - i, prompt=np.zeros(p, np.int32), max_new_tokens=2)
-        for i, p in enumerate(sorted(set(args.prompt_lens)))
-    ]
-    engine.run(warm)
-    engine.finished.clear()
-    engine.slot_history.clear()
-    engine.steps = 0  # per-step metric must only count the timed trace
-    engine.reset_clock()
+    # warm the jit caches outside the timed region so the trace measures
+    # steady state, not compilation
+    engine.warm(args.prompt_lens)
 
     t0 = time.time()
     outs = engine.run(reqs, realtime=True)
@@ -106,6 +103,97 @@ def bench_engine(args) -> dict:
         "latency_p50": float(np.percentile(lat, 50)),
         "latency_p95": float(np.percentile(lat, 95)),
         "ttft_p50": float(np.percentile(ttft, 50)),
+    }
+
+
+def burst_trace(
+    cfg, *, n_requests: int, burst_size: int, gap: float,
+    prompt_lens: tuple[int, ...], gen_tokens: int, seed: int,
+) -> list[Request]:
+    """Bursts of ``burst_size`` simultaneous arrivals, ``gap`` seconds apart
+    — the arrival pattern iteration-level batched admission exists for."""
+    rng = np.random.default_rng(seed)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, n_domains=4, noise=0.0)
+    reqs = []
+    for r in range(n_requests):
+        plen = int(rng.choice(prompt_lens))
+        prompt = np.asarray(
+            corpus.sample(
+                jax.random.PRNGKey(seed + 100 + r), np.ones(4) / 4, 1, plen
+            )["tokens"][0],
+            np.int32,
+        )
+        reqs.append(
+            Request(
+                uid=r, prompt=prompt, max_new_tokens=gen_tokens,
+                arrival_time=(r // burst_size) * gap,
+            )
+        )
+    return reqs
+
+
+def bench_burst(args) -> dict:
+    """Burst arrivals through the engine, batched vs. per-request prefill.
+
+    The load-bearing numbers: ``prefill_dispatches`` (one per admission
+    round when batched — a burst of N costs 1 forward, not N) and TTFT
+    p50/p95 (the per-request path serializes N prefills before the burst's
+    last request sees its first token). With the default ``--burst-gap 0``
+    everything arrives at t=0 and runs in virtual time — deterministic and
+    CI-safe; a positive gap switches to realtime so arrival-relative TTFT
+    stays meaningful."""
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_seq = max(args.prompt_lens) + args.gen
+    out = {}
+    for label, batched in (("batched", True), ("per_request", False)):
+        engine = ServeEngine(
+            model, params, num_slots=args.slots, max_seq=max_seq,
+            window=args.window, use_kernel=args.use_kernel, prefill="chunked",
+            batch_prefill=batched,
+        )
+        reqs = burst_trace(
+            cfg, n_requests=args.requests, burst_size=args.burst,
+            gap=args.burst_gap, prompt_lens=tuple(args.prompt_lens),
+            gen_tokens=args.gen, seed=args.seed,
+        )
+        # warm every shape a round can dispatch outside the measured window
+        # (jit compilation is not a scheduling effect)
+        engine.warm(args.prompt_lens)
+        t0 = time.time()
+        # gap 0 (default): virtual time, deterministic. gap > 0: honor
+        # arrivals against the wall clock so TTFT-from-arrival stays
+        # meaningful (virtual time would race ahead of future arrivals and
+        # report negative TTFT).
+        outs = engine.run(reqs, realtime=args.burst_gap > 0)
+        wall = time.time() - t0
+        total = sum(len(o.tokens) for o in outs)
+        ttft = np.asarray([o.ttft for o in outs])
+        out[label] = {
+            "prefill_dispatches": engine.prefill_dispatches,
+            "engine_steps": engine.steps,
+            "wall_seconds": wall,
+            "tokens_per_second": total / max(wall, 1e-9),
+            "ttft_p50": float(np.percentile(ttft, 50)),
+            "ttft_p95": float(np.percentile(ttft, 95)),
+            "generated": [o.tokens for o in outs],
+        }
+    assert out["batched"]["generated"] == out["per_request"]["generated"], (
+        "batched admission changed greedy output"
+    )
+    for m in out.values():
+        del m["generated"]
+    return {
+        "mode": "burst",
+        "slots": args.slots,
+        "requests": args.requests,
+        "burst_size": args.burst,
+        "burst_gap": args.burst_gap,
+        "prompt_lens": list(args.prompt_lens),
+        "gen_tokens": args.gen,
+        "window": args.window,
+        **out,
     }
 
 
@@ -145,12 +233,39 @@ def _parser():
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-oracle", action="store_true")
+    ap.add_argument("--burst", type=int, default=0,
+                    help="burst-arrival mode: simultaneous arrivals per "
+                    "burst (0 = Poisson trace)")
+    ap.add_argument("--burst-gap", type=float, default=0.0,
+                    help="seconds between bursts (0 = all at t=0 in "
+                    "virtual time; > 0 runs realtime, honoring arrivals)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized burst run: 8 requests in bursts of 4 "
+                    "through 4 slots, single prompt length")
     return ap
 
 
 def run(argv: list[str] | None = None):
     """Entry point for benchmarks/run.py (and the CLI)."""
     args = _parser().parse_args(argv if argv is not None else [])
+    if args.smoke:
+        args.burst = args.burst or 4
+        args.requests = min(args.requests, 8)
+        args.prompt_lens = [16]
+        args.gen = 8
+
+    if args.burst > 0:
+        res = bench_burst(args)
+        b, p = res["batched"], res["per_request"]
+        emit(
+            "serve_burst_prefill",
+            1e6 * b["wall_seconds"] / max(b["engine_steps"], 1),
+            f"dispatches {b['prefill_dispatches']} (batched) vs "
+            f"{p['prefill_dispatches']} (per-request); ttft95 "
+            f"{b['ttft_p95']:.3f}s vs {p['ttft_p95']:.3f}s",
+        )
+        save_results("serve_bench_burst", res)
+        return res
 
     res = bench_engine(args)
     emit(

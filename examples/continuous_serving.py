@@ -12,7 +12,9 @@ sequential single-batch oracle would have produced for every request.
 
 The second half re-runs the same trace with a sliding-window ring cache and
 with the Pallas flash-decode kernel (interpret mode on CPU) to show both
-thread through the engine unchanged.
+thread through the engine unchanged, then serves a burst of simultaneous
+arrivals with batched multi-slot prefill (one forward per admission round)
+and per-request temperature/top-k/top-p sampling.
 """
 import time
 
@@ -22,6 +24,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.data import SyntheticCorpus
 from repro.launch.engine import Request, ServeEngine
+from repro.launch.sampling import SamplingParams
 from repro.models import build_model
 
 ARCH = "stablelm-1.6b"
@@ -102,6 +105,22 @@ def main():
         a.tokens == b.tokens for a, b in zip(base, kout)
     )
     print(f"\nkernel path token-identical to jnp path: {agree}")
+
+    # burst: every request arrives at t=0; batched admission prefills each
+    # scheduling round in ONE forward, and each request samples its
+    # continuation on its own PRNG stream (engine seed + uid)
+    burst = build_trace(cfg)
+    for r in burst:
+        r.arrival_time = 0.0
+        r.sampling = SamplingParams(temperature=0.8, top_k=40, top_p=0.95)
+    engine_s = ServeEngine(
+        model, params, num_slots=SLOTS, max_seq=max_seq, seed=1
+    )
+    souts = serve(engine_s, burst, "burst arrivals · batched prefill + sampling")
+    print(
+        f"\nprefill dispatches for {len(souts)} burst requests: "
+        f"{engine_s.prefill_dispatches} (batched multi-slot prefill)"
+    )
 
 
 if __name__ == "__main__":

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticCorpus
+from repro.launch.sampling import SamplingParams, sample_token
 from repro.models import attention, build_model
 from repro.models.model import ModelAPI
 from repro.models.transformer import reset_slot
@@ -53,11 +54,13 @@ PREFILL_MODES = ("chunked", "interleaved")
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival_time`` is seconds relative to the
-    engine clock; the engine never admits a request before it arrives."""
+    engine clock; the engine never admits a request before it arrives.
+    ``sampling=None`` (or temperature 0) decodes greedily."""
     uid: int
     prompt: np.ndarray            # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival_time: float = 0.0
+    sampling: SamplingParams | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -69,7 +72,7 @@ class Request:
 class RequestOutput:
     uid: int
     prompt: list[int]
-    tokens: list[int]             # generated ids (greedy), length <= max_new
+    tokens: list[int]             # generated ids (greedy or sampled), <= max_new
     slot: int                     # slot the request was served from
     finish_reason: str            # "eos" | "length"
     arrival_time: float
@@ -96,6 +99,7 @@ class _Slot:
     next_feed: int                # token the next decode step consumes
     admit_time: float
     first_token_time: float = -1.0
+    key: jax.Array | None = None  # per-REQUEST sampling stream (None = greedy)
 
 
 class ServeEngine:
@@ -114,7 +118,15 @@ class ServeEngine:
     prefill : "chunked" (whole prompt in one forward at admission) or
         "interleaved" (teacher-force the prompt through the decode step,
         one token per engine iteration).
+    batch_prefill : chunked mode only — prefill ALL slots admitted in one
+        scheduling round through ONE ``prefill_slots`` forward (prompts
+        right-padded to the round's max length) instead of one dispatch per
+        request. Greedy output is token-identical either way; a burst of N
+        arrivals costs 1 prefill dispatch instead of N.
     eos_id : optional token id that retires a sequence early.
+    seed : engine-level sampling seed; requests without an explicit
+        ``SamplingParams.seed`` draw from PRNGKey(seed) folded with their
+        uid, so slot reuse never reuses a stream.
     time_fn : monotonic clock; injectable for deterministic tests.
     """
 
@@ -128,7 +140,9 @@ class ServeEngine:
         window: int = 0,
         use_kernel: bool = False,
         prefill: str = "chunked",
+        batch_prefill: bool = True,
         eos_id: int | None = None,
+        seed: int = 0,
         time_fn: Callable[[], float] | None = None,
     ):
         if model.init_slot_cache is None or model.prefill_slot is None:
@@ -150,7 +164,12 @@ class ServeEngine:
         self.window = window
         self.use_kernel = use_kernel
         self.prefill_mode = prefill
+        self.batch_prefill = (
+            batch_prefill and prefill == "chunked"
+            and model.prefill_slots is not None
+        )
         self.eos_id = eos_id
+        self.seed = seed
         self._time_fn = time_fn or time.monotonic
         self._t0 = self._time_fn()
 
@@ -161,11 +180,42 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, c, t, s: model.prefill_slot(p, c, t, s, window=window)
         )
+        self._prefill_slots = (
+            jax.jit(
+                lambda p, c, t, l, s: model.prefill_slots(
+                    p, c, t, l, s, window=window
+                )
+            )
+            if model.prefill_slots is not None
+            else None
+        )
+        self._sample = jax.jit(
+            lambda key, row, t, k, p: sample_token(
+                key, row, t, k, p, model.cfg.vocab_size
+            )
+        )
+
+        # batched per-step sampler: split each slot's stream and draw, one
+        # dispatch + one host transfer for ALL sampled slots (mirrors the
+        # batched-argmax discipline of the greedy path). Always called at
+        # the full (num_slots, Vp) width — greedy/pending rows get dummy
+        # keys and their draws are discarded — so it compiles exactly once
+        # instead of once per live sampled-slot count.
+        def _rows(keys, rows, t, k, p):
+            def one(key, row, t1, k1, p1):
+                nk, sub = jax.random.split(key)
+                return nk, sample_token(sub, row, t1, k1, p1, model.cfg.vocab_size)
+
+            return jax.vmap(one)(keys, rows, t, k, p)
+
+        self._sample_rows = jax.jit(_rows)
+        self._dummy_key = jax.random.PRNGKey(0)
 
         self.waiting: collections.deque[Request] = collections.deque()
         self.slots: list[_Slot | None] = [None] * num_slots
         self.finished: list[RequestOutput] = []
         self.steps = 0            # decode steps executed
+        self.prefill_dispatches = 0   # chunked-prefill forwards launched
         self.slot_history: dict[int, list[int]] = {}  # uid -> slots used
 
     # ------------------------------------------------------------- plumbing
@@ -177,6 +227,36 @@ class ServeEngine:
         arrival times (relative to the clock) and latency metrics exclude
         jit compilation."""
         self._t0 = self._time_fn()
+
+    def reset_metrics(self) -> None:
+        """Drop warmup outputs and counters and restart the clock, so a
+        subsequent trace measures steady state, not jit compilation."""
+        self.finished.clear()
+        self.slot_history.clear()
+        self.steps = 0
+        self.prefill_dispatches = 0
+        self.reset_clock()
+
+    def warm(self, prompt_lens, *, gen_tokens: int = 2,
+             sampling: SamplingParams | None = None) -> None:
+        """Compile every shape a trace can dispatch, then reset metrics.
+
+        Batched admission specializes ``prefill_slots`` per (round width,
+        padded prompt length) — and a mixed round pads to its max length,
+        always one of ``prompt_lens`` — so warm each (width, length) pair;
+        per-request / interleaved admission only ever sees width 1. Pass
+        ``sampling`` when the trace will sample, so the (fixed-width)
+        batched sampler compiles here too."""
+        widths = range(1, self.num_slots + 1) if self.batch_prefill else [1]
+        for p in sorted(set(prompt_lens)):
+            for w in widths:
+                self.run([
+                    Request(uid=-1 - j, prompt=np.zeros(p, np.int32),
+                            max_new_tokens=max(gen_tokens, 1),
+                            sampling=sampling)
+                    for j in range(w)
+                ])
+        self.reset_metrics()
 
     @property
     def has_work(self) -> bool:
@@ -203,41 +283,107 @@ class ServeEngine:
     def _greedy(self, logits_row) -> int:
         return int(jnp.argmax(logits_row[: self.cfg.vocab_size]))
 
+    def _request_key(self, req: Request) -> jax.Array | None:
+        """Per-REQUEST sampling stream. Keyed by the request (explicit seed,
+        or engine seed + uid), never by the slot: backfilling a retired
+        request's slot can't resume the previous occupant's stream."""
+        sp = req.sampling
+        if sp is None or sp.is_greedy:
+            return None
+        if sp.seed is not None:
+            return jax.random.PRNGKey(sp.seed)
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), req.uid)
+
+    def _next_token(self, slot: _Slot, logits_row) -> int:
+        """First/next token for a slot from its row of logits (greedy or
+        temperature/top-k/top-p sampling on the request's own stream)."""
+        if slot.key is None:
+            return self._greedy(logits_row)
+        sp = slot.req.sampling
+        slot.key, sub = jax.random.split(slot.key)
+        return int(self._sample(sub, logits_row, sp.temperature, sp.top_k, sp.top_p))
+
     def _admit(self, now: float, respect_arrivals: bool) -> None:
-        """Fill free slots from the queue in arrival order."""
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        while free and self.waiting:
-            req = self.waiting[0]
-            if respect_arrivals and req.arrival_time > now:
-                break
-            self.waiting.popleft()
-            i = free.pop(0)
-            self.cache = reset_slot(self.cache, i)
-            slot = _Slot(
-                req=req,
-                pending=collections.deque(req.prompt.tolist()),
-                generated=[],
-                next_feed=-1,
-                admit_time=now,
-            )
-            self.slot_history.setdefault(req.uid, []).append(i)
-            if self.prefill_mode == "chunked":
-                self.cache, logits = self._prefill(
-                    self.params, self.cache, jnp.asarray(req.prompt[None, :]), i
+        """Fill free slots from the queue in arrival order.
+
+        Chunked mode prefills every request claimed in a round through ONE
+        batched ``prefill_slots`` forward (or one dispatch each with
+        ``batch_prefill=False``). A request that finishes on its very first
+        token frees its slot immediately, so the round loop re-admits into
+        it before the next decode step — same backfill behavior as the old
+        one-at-a-time path."""
+        while True:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            claimed: list[int] = []
+            while free and self.waiting:
+                req = self.waiting[0]
+                if respect_arrivals and req.arrival_time > now:
+                    break
+                self.waiting.popleft()
+                i = free.pop(0)
+                self.cache = reset_slot(self.cache, i)
+                slot = _Slot(
+                    req=req,
+                    pending=collections.deque(req.prompt.tolist()),
+                    generated=[],
+                    next_feed=-1,
+                    admit_time=now,
+                    key=self._request_key(req),
                 )
-                slot.pending.clear()
-                g = self._greedy(logits[0])
-                slot.first_token_time = self._now()
-                slot.generated.append(g)
-                slot.next_feed = g
-                if self._done(slot, g):
-                    self._retire(i, slot)
-                    free.append(i)
-                    free.sort()
-                    continue
-            else:  # interleaved: first decode step consumes the first prompt token
-                slot.next_feed = slot.pending.popleft()
-            self.slots[i] = slot
+                self.slot_history.setdefault(req.uid, []).append(i)
+                self.slots[i] = slot
+                if self.prefill_mode == "chunked":
+                    claimed.append(i)
+                else:  # interleaved: decode step consumes prompt tokens
+                    slot.next_feed = slot.pending.popleft()
+            if not claimed:
+                return
+            retired = self._prefill_claimed(claimed)
+            if not retired:
+                return  # no slot freed, nothing more to admit this round
+
+    def _prefill_claimed(self, claimed: list[int]) -> bool:
+        """Chunked-prefill the claimed slots; returns True if any retired.
+
+        ``first_token_time`` is stamped per slot AFTER its token is
+        extracted (``_next_token``'s host transfer forces the async jax
+        dispatch), so TTFT includes the prefill compute it waited on."""
+        retired = False
+
+        def emit(i, row):
+            nonlocal retired
+            slot = self.slots[i]
+            slot.pending.clear()
+            g = self._next_token(slot, row)
+            slot.first_token_time = self._now()
+            slot.generated.append(g)
+            slot.next_feed = g
+            if self._done(slot, g):
+                self._retire(i, slot)
+                retired = True
+
+        if self.batch_prefill:
+            prompts = [self.slots[i].req.prompt for i in claimed]
+            lengths = np.asarray([p.size for p in prompts], np.int32)
+            tokens = np.zeros((len(claimed), int(lengths.max())), np.int32)
+            for j, p in enumerate(prompts):
+                tokens[j, : p.size] = p
+            self.cache, logits = self._prefill_slots(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(claimed, np.int32),
+            )
+            self.prefill_dispatches += 1
+            for j, i in enumerate(claimed):
+                emit(i, logits[j])
+        else:
+            for i in claimed:
+                self.cache, lg = self._prefill(
+                    self.params, self.cache,
+                    jnp.asarray(self.slots[i].req.prompt[None, :]), i,
+                )
+                self.prefill_dispatches += 1
+                emit(i, lg[0])
+        return retired
 
     def _done(self, slot: _Slot, last: int) -> bool:
         if self.eos_id is not None and last == self.eos_id:
@@ -287,16 +433,55 @@ class ServeEngine:
                 )
                 self.steps += 1
                 # one batched argmax + host transfer per step, not per slot
-                greedy = np.asarray(
-                    jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+                # (skipped entirely when every emitting slot samples)
+                need_greedy = any(
+                    self.slots[i].key is None and not self.slots[i].pending
+                    for i in live
                 )
+                greedy = (
+                    np.asarray(jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1))
+                    if need_greedy
+                    else None
+                )
+                # sampled slots batch the same way: split every stream and
+                # draw in ONE fixed-width dispatch (dummy rows for greedy /
+                # mid-prefill slots), then one host transfer
+                samp = [
+                    i for i in live
+                    if self.slots[i].key is not None and not self.slots[i].pending
+                ]
+                sampled: dict[int, int] = {}
+                if samp:
+                    keys, temps, ks, ps = [], [], [], []
+                    for i in range(self.num_slots):
+                        if i in samp:
+                            sp = self.slots[i].req.sampling
+                            keys.append(self.slots[i].key)
+                            temps.append(sp.temperature)
+                            ks.append(sp.top_k)
+                            ps.append(sp.top_p)
+                        else:
+                            keys.append(self._dummy_key)
+                            temps.append(1.0)
+                            ks.append(1)
+                            ps.append(1.0)
+                    new_keys, toks = self._sample_rows(
+                        jnp.stack(keys), logits,
+                        jnp.asarray(temps, jnp.float32),
+                        jnp.asarray(ks, jnp.int32),
+                        jnp.asarray(ps, jnp.float32),
+                    )
+                    toks = np.asarray(toks)
+                    for i in samp:
+                        self.slots[i].key = new_keys[i]
+                        sampled[i] = int(toks[i])
                 now = self._now()
                 for i in live:
                     slot = self.slots[i]
                     if slot.pending:  # mid-prefill: logits are teacher-forced
                         slot.next_feed = slot.pending.popleft()
                         continue
-                    g = int(greedy[i])
+                    g = sampled[i] if slot.key is not None else int(greedy[i])
                     if slot.first_token_time < 0:
                         slot.first_token_time = now
                     slot.generated.append(g)
@@ -370,6 +555,8 @@ def serve_continuous(
     window: int = 0,
     use_kernel: bool = False,
     prefill: str = "chunked",
+    batch_prefill: bool = True,
+    sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
     log_fn=print,
@@ -386,21 +573,23 @@ def serve_continuous(
         window=window,
         use_kernel=use_kernel,
         prefill=prefill,
+        batch_prefill=batch_prefill,
+        seed=seed,
     )
     reqs = make_requests(
         cfg, n_requests=n_requests, prompt_len=prompt_len,
         gen_tokens=gen_tokens, seed=seed, stagger=stagger,
     )
+    if sampling is not None and not sampling.is_greedy:
+        for r in reqs:
+            # distinct stream per request even under a shared CLI seed
+            r.sampling = dataclasses.replace(
+                sampling,
+                seed=None if sampling.seed is None else sampling.seed + r.uid,
+            )
     # trace prefill + decode outside the measured window so the reported
     # throughput/latency are steady-state, not jit compilation
-    engine.run(
-        [Request(uid=-1, prompt=np.zeros(prompt_len, np.int32),
-                 max_new_tokens=min(2, gen_tokens))]
-    )
-    engine.finished.clear()
-    engine.slot_history.clear()
-    engine.steps = 0
-    engine.reset_clock()
+    engine.warm([prompt_len], gen_tokens=min(2, gen_tokens), sampling=sampling)
     t0 = time.time()
     outs = engine.run(reqs, realtime=stagger > 0)
     wall = time.time() - t0
@@ -415,7 +604,10 @@ def serve_continuous(
         "window": window,
         "use_kernel": use_kernel,
         "prefill": prefill,
+        "batch_prefill": engine.batch_prefill,
+        "sampling": None if sampling is None else dataclasses.asdict(sampling),
         "engine_steps": engine.steps,
+        "prefill_dispatches": engine.prefill_dispatches,
         "wall_seconds": wall,
         "tokens_per_second": total / max(wall, 1e-9),
         "generated": [o.tokens for o in outs],
@@ -425,7 +617,8 @@ def serve_continuous(
     }
     log_fn(
         f"{cfg.name}: {n_requests} reqs × {gen_tokens} tok over "
-        f"{num_slots} slots in {engine.steps} steps, {wall:.2f}s "
+        f"{num_slots} slots in {engine.steps} steps "
+        f"+ {engine.prefill_dispatches} prefill dispatches, {wall:.2f}s "
         f"({result['tokens_per_second']:.1f} tok/s, "
         f"p50 {result['latency_p50']:.2f}s p95 {result['latency_p95']:.2f}s)"
     )

@@ -1,0 +1,76 @@
+"""Per-request sampling for the serve engine: temperature / top-k / top-p.
+
+``SamplingParams`` travels on each ``Request``; ``sample_token`` is the
+jit-friendly single-row sampler the engine calls after its batched decode
+step. Filters follow the standard serving order (temperature scale → top-k
+rank cut → top-p nucleus cut → categorical draw); ``top_k`` and ``top_p``
+are traced scalars so one compiled sampler serves every request mix without
+respecialization.
+
+Stream discipline: the engine derives one PRNG key per REQUEST (from
+``SamplingParams.seed``, or the engine seed folded with the request uid),
+never per slot — retiring a request and backfilling its slot can therefore
+never resume or reuse the previous occupant's stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    temperature: 0 means greedy (argmax; top-k/top-p ignored).
+    top_k: keep the k highest-probability tokens; 0 disables the cut.
+    top_p: keep the smallest prefix of the sorted distribution with
+        cumulative probability >= top_p; 1.0 disables the cut.
+    seed: explicit PRNG seed for this request's stream. None lets the
+        engine derive a stream from its own seed + the request uid.
+    """
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0, "temperature must be >= 0"
+        assert self.top_k >= 0, "top_k must be >= 0"
+        assert 0.0 < self.top_p <= 1.0, "top_p must be in (0, 1]"
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def sample_token(
+    key: jax.Array,
+    logits: jax.Array,
+    temperature: jax.Array,
+    top_k: jax.Array,
+    top_p: jax.Array,
+    vocab_size: int,
+) -> jax.Array:
+    """Draw one token id from a single row of logits.
+
+    logits: (Vp,) fp32 (padded-vocab columns already masked to NEG_INF).
+    temperature > 0 (greedy is the caller's fast path), top_k/top_p as in
+    ``SamplingParams`` but traced, so a single jit covers all requests.
+    """
+    logits = logits[:vocab_size].astype(jnp.float32)
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    order = jnp.argsort(-logits)  # descending
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(vocab_size))
+    logits = jnp.where((top_k > 0) & (ranks >= top_k), NEG_INF, logits)
+    # nucleus cut on the post-top-k distribution: keep rank i iff the mass
+    # strictly before it is < top_p (the best token always survives)
+    probs_sorted = jax.nn.softmax(logits[order])
+    before = jnp.cumsum(probs_sorted) - probs_sorted
+    keep_sorted = (before < top_p) | (top_p >= 1.0)
+    logits = jnp.where(keep_sorted[ranks], logits, NEG_INF)
+    return jax.random.categorical(key, logits)

@@ -4,9 +4,12 @@
 teacher-forced prefill + greedy decode) — it is the oracle the engine's
 continuous-batching output is pinned against token-for-token. The
 ``--continuous`` mode dispatches to ``launch/engine.py``: slot-based
-admission, interleaved/chunked prefill, EOS/max-token retirement with
-immediate backfill. Both support the Pallas flash-decode kernel
-(--use-kernel, interpret mode on CPU) and sliding-window ring caches.
+admission, interleaved/chunked prefill (batched multi-slot by default —
+every request admitted in a scheduling round shares ONE prefill forward),
+EOS/max-token retirement with immediate backfill, and per-request
+temperature/top-k/top-p sampling (--temperature 0 = greedy). Both support
+the Pallas flash-decode kernel (--use-kernel, interpret mode on CPU) and
+sliding-window ring caches.
 
     # oracle (single fixed batch)
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
@@ -135,17 +138,43 @@ def main(argv=None):
                     help="[continuous] number of queued requests")
     ap.add_argument("--prefill", choices=("chunked", "interleaved"),
                     default="chunked", help="[continuous] prompt admission mode")
+    ap.add_argument("--no-batch-prefill", dest="batch_prefill",
+                    action="store_false",
+                    help="[continuous] one prefill dispatch per request "
+                    "instead of one per admission round")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
+    # sampling (0 temperature = greedy; per-request streams derive from
+    # --seed + uid so every request samples independently)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="[continuous] sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="[continuous] keep the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="[continuous] nucleus sampling mass (1.0 = off)")
     args = ap.parse_args(argv)
+    if args.temperature <= 0 and (args.top_k > 0 or args.top_p < 1.0):
+        ap.error("--top-k/--top-p require --temperature > 0 "
+                 "(temperature 0 is greedy decoding)")
+    if args.temperature > 0 and not args.continuous:
+        ap.error("sampling flags require --continuous "
+                 "(the serve_batch oracle is greedy by construction)")
     if args.continuous:
         from repro.launch.engine import serve_continuous
+        from repro.launch.sampling import SamplingParams
 
+        sampling = None
+        if args.temperature > 0:
+            sampling = SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.seed,
+            )
         return serve_continuous(
             args.arch, smoke=args.smoke, num_slots=args.slots,
             n_requests=args.requests, prompt_len=args.prompt_len,
             gen_tokens=args.gen, window=args.window,
             use_kernel=args.use_kernel, prefill=args.prefill,
+            batch_prefill=args.batch_prefill, sampling=sampling,
             seed=args.seed, stagger=args.stagger,
         )
     return serve_batch(

@@ -242,6 +242,41 @@ def fill_cache(cache: dict, k: jax.Array, v: jax.Array, start: int = 0) -> dict:
     return {"k": new_k, "v": new_v, "pos": jnp.asarray(start + s, jnp.int32)}
 
 
+def fill_cache_rows(
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched per-row ring write for multi-slot prefill.
+
+    Row r writes its first ``lengths[r]`` tokens of k/v (already rotated)
+    into its own ring row, leaving the ring in the exact state lengths[r]
+    sequential one-token writes (slot = pos % cap) would — i.e. the batched
+    sibling of ``fill_cache`` with per-row prompt lengths. Implemented as a
+    gather (for each ring slot c, the LAST prompt index landing on c), not a
+    scatter: scatters with duplicate indices (wrap-around) have unspecified
+    winners.
+
+    cache_k/v: (n, C, Hkv, hd) the n target ring rows; k/v: (n, S, Hkv, hd)
+    right-padded prompts; lengths: (n,) true lengths. Ring entries a row
+    never reaches (c >= lengths[r] when the prompt fits) keep their old
+    value. Returns (new_k, new_v).
+    """
+    cap = cache_k.shape[1]
+    c = jnp.arange(cap)[None, :]                      # (1, C)
+    last = jnp.asarray(lengths, jnp.int32)[:, None] - 1  # (n, 1)
+    # largest prompt index j < lengths[r] with j ≡ c (mod cap)
+    j_star = c + cap * ((last - c) // cap)            # (n, C)
+    written = c <= last
+    j_safe = jnp.clip(j_star, 0, k.shape[1] - 1)[:, :, None, None]
+    gk = jnp.take_along_axis(k, j_safe, axis=1)       # (n, C, Hkv, hd)
+    gv = jnp.take_along_axis(v, j_safe, axis=1)
+    keep = written[:, :, None, None]
+    return jnp.where(keep, gk, cache_k), jnp.where(keep, gv, cache_v)
+
+
 def decode_attend(
     params: Params,
     x: jax.Array,

@@ -40,8 +40,12 @@ class ModelAPI:
     # Continuous-batching slot API (None where the arch doesn't support it):
     # init_slot_cache(params, num_slots, max_seq, window=) -> per-slot cache
     # prefill_slot(params, cache, tokens (1,S), slot, window=) -> (cache, logits)
+    # prefill_slots(params, cache, tokens (n,S), lengths (n,), slots (n,),
+    #               window=) -> (cache, logits (n, Vp)) — batched admission:
+    #               n right-padded prompts into n distinct slots, one forward
     init_slot_cache: Callable[..., Any] | None = None
     prefill_slot: Callable[..., tuple[Any, jax.Array]] | None = None
+    prefill_slots: Callable[..., tuple[Any, jax.Array]] | None = None
 
 
 def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
@@ -77,9 +81,15 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
             cfg, params, cache, tokens, slot, ffn=ffn, window=window
         )
 
+    def prefill_slots(params, cache, tokens, lengths, slots, *, window=0):
+        return transformer.prefill_slots(
+            cfg, params, cache, tokens, lengths, slots, ffn=ffn, window=window
+        )
+
     return ModelAPI(
         cfg, init, loss, forward, init_cache, decode, prefill,
         init_slot_cache=init_slot_cache, prefill_slot=prefill_slot,
+        prefill_slots=prefill_slots,
     )
 
 

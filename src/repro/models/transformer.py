@@ -302,3 +302,58 @@ def prefill_into_slot(
         "window": cache["window"],
     }
     return new_cache, logits
+
+
+def prefill_slots(
+    cfg: ModelConfig,
+    params: Params,
+    cache: dict,
+    tokens: jax.Array,
+    lengths: jax.Array,
+    slots: jax.Array,
+    *,
+    ffn: FFNHooks = DENSE_FFN,
+    window: int = 0,
+) -> tuple[dict, jax.Array]:
+    """Batched chunked prefill: N newly admitted requests in ONE forward.
+
+    tokens: (n, S) prompts right-padded to the batch max; lengths: (n,) true
+    prompt lengths; slots: (n,) DISTINCT rows of the shared per-slot decode
+    cache. Causal masking makes tail padding invisible to valid positions,
+    so each row's activations equal its solo ``prefill_into_slot`` run; row
+    r's rotated k/v land in its slot's ring rows (per-row wrap-around via
+    ``fill_cache_rows``) and its logits come from position lengths[r]-1.
+    Returns (cache', last-valid-position logits (n, Vp)).
+    """
+    assert cache["pos"].ndim == 1, "prefill_slots requires a per-slot cache"
+    n, s = tokens.shape
+    q_chunk = default_q_chunk(s)
+    x = embed_tokens(params["embed"], tokens)
+    pos = positions_for(tokens)
+    slots = jnp.asarray(slots, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    def body(h, sl):
+        lp, ck, cv = sl  # ck/cv: (B, C, Hkv, hd) — one layer, all slots
+        a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
+        a = attn.attend_full(
+            lp["attn"], a, pos, cfg, causal=True, window=window, q_chunk=q_chunk
+        )
+        h = h + a
+        f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        f, _ = ffn.apply(lp["ffn"], f, cfg)
+        rows_k, rows_v = attn.fill_cache_rows(ck[slots], cv[slots], k, v, lengths)
+        return h + f, (ck.at[slots].set(rows_k), cv.at[slots].set(rows_v))
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+    logits = lm_logits(params["embed"], last, cfg)[:, 0]
+    new_cache = {
+        "k": nk,
+        "v": nv,
+        "pos": cache["pos"].at[slots].set(lengths),
+        "window": cache["window"],
+    }
+    return new_cache, logits

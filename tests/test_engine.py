@@ -30,7 +30,7 @@ def oracle():
 
 
 def _build(num_slots=2, window=0, use_kernel=False, prefill="chunked",
-           max_seq=P + G):
+           max_seq=P + G, batch_prefill=True, time_fn=None):
     cfg = get_smoke_config(ARCH)
     model_params = getattr(_build, "_cache", None)
     if model_params is None:
@@ -44,6 +44,7 @@ def _build(num_slots=2, window=0, use_kernel=False, prefill="chunked",
     return ServeEngine(
         _build._cache[0], _build._cache[1], num_slots=num_slots,
         max_seq=max_seq, window=window, use_kernel=use_kernel, prefill=prefill,
+        batch_prefill=batch_prefill, time_fn=time_fn,
     )
 
 
@@ -225,3 +226,105 @@ def test_request_timing_fields_monotone():
     for o in outs:
         assert o.arrival_time <= o.admit_time <= o.first_token_time <= o.finish_time
         assert o.latency >= 0 and o.ttft >= 0
+
+
+# ------------------------------------------------- batched multi-slot prefill
+def test_burst_one_prefill_dispatch_per_admission_round(oracle):
+    """4 simultaneous arrivals through 4 slots: ONE batched prefill_slots
+    forward (not 4 per-request dispatches), token-identical to the oracle."""
+    cfg = get_smoke_config(ARCH)
+    engine = _build(num_slots=4)
+    # slice a 5-row draw: rows 0..3 are the oracle fixture's rows 0..3
+    reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)[:4]
+    outs = engine.run(reqs)
+    assert engine.prefill_dispatches == 1, (
+        f"burst of 4 must cost one dispatch, got {engine.prefill_dispatches}"
+    )
+    for o in outs:
+        assert o.tokens == oracle["generated"][o.uid]
+
+
+def test_batched_prefill_matches_per_request_prefill(oracle):
+    """batch_prefill on/off is invisible in the greedy output; only the
+    dispatch count changes (5 requests / 2 slots: 3 rounds vs 5)."""
+    cfg = get_smoke_config(ARCH)
+    outs, dispatches = {}, {}
+    for batched in (True, False):
+        engine = _build(num_slots=2, batch_prefill=batched)
+        reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)
+        outs[batched] = engine.run(reqs)
+        dispatches[batched] = engine.prefill_dispatches
+    assert dispatches[False] == 5
+    assert dispatches[True] < dispatches[False]
+    for a, b in zip(outs[True], outs[False]):
+        assert a.uid == b.uid and a.tokens == b.tokens
+        assert a.tokens == oracle["generated"][a.uid]
+
+
+def test_batched_prefill_mixed_prompt_lengths():
+    """A round with heterogeneous prompt lengths (padded batch) produces the
+    same tokens as per-request prefill of the same requests."""
+    cfg = get_smoke_config(ARCH)
+    base = make_requests(cfg, n_requests=3, prompt_len=P, gen_tokens=G, seed=0)
+    lens = [3, P, 5]
+
+    def reqs():
+        return [
+            Request(uid=r.uid, prompt=r.prompt[: lens[r.uid]], max_new_tokens=G)
+            for r in base
+        ]
+
+    engine = _build(num_slots=3, batch_prefill=True)
+    ref = _build(num_slots=3, batch_prefill=False)
+    a = engine.run(reqs())
+    b = ref.run(reqs())
+    assert engine.prefill_dispatches == 1 and ref.prefill_dispatches == 3
+    for oa, ob in zip(a, b):
+        assert oa.tokens == ob.tokens, f"uid {oa.uid}"
+
+
+@pytest.mark.parametrize("prefill", ["chunked", "interleaved"])
+def test_prompt_plus_gen_equals_max_seq_completes(oracle, prefill):
+    """Boundary: prompt_len + max_new_tokens == max_seq must be admitted and
+    finish full-length with oracle-identical tokens — the full-attention
+    ring's last row is written but never wrapped onto a live row."""
+    cfg = get_smoke_config(ARCH)
+    engine = _build(num_slots=2, max_seq=P + G, prefill=prefill)
+    reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)
+    outs = engine.run(reqs)
+    for o in outs:
+        assert o.finish_reason == "length" and len(o.tokens) == G
+        assert o.tokens == oracle["generated"][o.uid]
+    # a dedicated slot's write head stops exactly at max_seq - 1: the last
+    # token was generated without a write to (nonexistent) row max_seq.
+    # (In the pooled run above, a retired slot's pos keeps drifting while
+    # other slots decode — dead rows, validity-masked on reuse.)
+    solo = _build(num_slots=1, max_seq=P + G, prefill=prefill)
+    souts = solo.run(
+        make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)[:1]
+    )
+    assert souts[0].tokens == oracle["generated"][0]
+    assert int(solo.cache["pos"][0]) == P + G - 1
+
+
+def test_first_token_time_stamps(oracle):
+    """first_token_time marks the first GENERATED token: at admission for
+    chunked prefill (step 0), after prompt_len teacher-forced decode steps
+    for interleaved — never on a teacher-forced prompt step. Measured on a
+    step-indexed clock (time_fn counts executed decode steps)."""
+    cfg = get_smoke_config(ARCH)
+    for prefill, expect in (("chunked", 0.0), ("interleaved", float(P))):
+        holder = {}
+        engine = _build(
+            num_slots=1, prefill=prefill,
+            time_fn=lambda: float(holder["e"].steps) if "e" in holder else 0.0,
+        )
+        holder["e"] = engine
+        # row 0 of the 5-row draw == the oracle fixture's row 0
+        reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)[:1]
+        out = engine.run(reqs)[0]
+        assert out.tokens == oracle["generated"][0]
+        assert out.first_token_time == expect, (
+            f"{prefill}: first token stamped at step {out.first_token_time}, "
+            f"expected {expect}"
+        )

@@ -1,0 +1,132 @@
+"""Batched multi-slot prefill (``transformer.prefill_slots``) property tests.
+
+The contract is BITWISE: prefilling n right-padded prompts into n slots in
+one forward must leave the cache and last-position logits exactly equal to
+looping ``prefill_slot`` over the same prompts — rows are independent under
+causal masking, so padding is invisible and equality is exact, not close.
+Runs on the ``tests/_hypothesis_compat.py`` shim (seeded random examples
+when hypothesis is absent).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import attention as attn
+from repro.models import build_model
+
+from tests._hypothesis_compat import given, settings, st
+
+ARCH = "stablelm-1.6b"
+MAX_SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32) for l in lens]
+
+
+def _run_both(cfg, model, params, lens, window, seed=0):
+    n = len(lens)
+    num_slots = n + 1  # one live-looking extra row that must stay untouched
+    prompts = _prompts(cfg, lens, seed)
+    smax = max(lens)
+    toks = np.zeros((n, smax), np.int32)
+    for j, p in enumerate(prompts):
+        toks[j, : p.size] = p
+    # spread rows over non-contiguous, unordered slots to exercise the scatter
+    slots = np.asarray(
+        np.random.default_rng(seed + 1).permutation(num_slots)[:n], np.int32
+    )
+
+    cache_b = model.init_slot_cache(params, num_slots, MAX_SEQ, window=window)
+    cache_l = model.init_slot_cache(params, num_slots, MAX_SEQ, window=window)
+    cache_b, lg_b = model.prefill_slots(
+        params, cache_b, jnp.asarray(toks), jnp.asarray(lens, jnp.int32),
+        jnp.asarray(slots), window=window,
+    )
+    rows = []
+    for j, p in enumerate(prompts):
+        cache_l, lg = model.prefill_slot(
+            params, cache_l, jnp.asarray(p[None, :]), int(slots[j]), window=window
+        )
+        rows.append(lg[0])
+    return cache_b, lg_b, cache_l, jnp.stack(rows)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    lens=st.lists(st.integers(1, MAX_SEQ - 2), min_size=1, max_size=4),
+    window=st.sampled_from([0, 5]),
+)
+def test_batched_prefill_bitwise_matches_looped(model_and_params, lens, window):
+    """Random prompt-length mixes, with and without a sliding window (ring
+    wrap-around when a length exceeds the window): cache k/v, per-slot pos,
+    and last-position logits are bitwise identical to the per-slot loop."""
+    cfg, model, params = model_and_params
+    cache_b, lg_b, cache_l, lg_l = _run_both(
+        cfg, model, params, lens, window, seed=sum(lens) * 31 + window
+    )
+    np.testing.assert_array_equal(np.asarray(cache_b["k"]), np.asarray(cache_l["k"]))
+    np.testing.assert_array_equal(np.asarray(cache_b["v"]), np.asarray(cache_l["v"]))
+    np.testing.assert_array_equal(
+        np.asarray(cache_b["pos"]), np.asarray(cache_l["pos"])
+    )
+    np.testing.assert_array_equal(np.asarray(lg_b), np.asarray(lg_l))
+
+
+def test_fill_cache_rows_matches_sequential_writes(rng):
+    """``fill_cache_rows`` leaves every ring row in the exact state that
+    row's length sequential one-token writes would — across no-wrap, exact
+    fit, and multi-wrap lengths in one padded batch."""
+    cfg = get_smoke_config(ARCH)
+    cap = 6
+    lens = [1, cap - 1, cap, cap + 1, 2 * cap + 3]
+    n, smax = len(lens), max(lens)
+    hd = cfg.resolved_head_dim
+    k = jax.random.normal(rng, (n, smax, cfg.n_kv_heads, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(rng, 1), k.shape, jnp.float32)
+    old_k = jax.random.normal(jax.random.fold_in(rng, 2), (n, cap, cfg.n_kv_heads, hd), jnp.float32)
+    old_v = jax.random.normal(jax.random.fold_in(rng, 3), old_k.shape, jnp.float32)
+
+    new_k, new_v = attn.fill_cache_rows(old_k, old_v, k, v, jnp.asarray(lens))
+
+    for r, s in enumerate(lens):
+        seq = {"k": old_k[r : r + 1], "v": old_v[r : r + 1],
+               "pos": jnp.zeros((), jnp.int32)}
+        for i in range(s):
+            seq = attn.fill_cache(
+                seq, k[r : r + 1, i : i + 1], v[r : r + 1, i : i + 1], start=i
+            )
+        np.testing.assert_array_equal(np.asarray(new_k[r]), np.asarray(seq["k"][0]))
+        np.testing.assert_array_equal(np.asarray(new_v[r]), np.asarray(seq["v"][0]))
+
+
+def test_prefill_slots_leaves_other_slots_untouched(model_and_params):
+    """Live rows outside the admitted set keep their k/v and pos bitwise."""
+    cfg, model, params = model_and_params
+    cache = model.init_slot_cache(params, 3, MAX_SEQ, window=0)
+    # make slot 1 "live" first
+    p_live = _prompts(cfg, [7], seed=9)[0]
+    cache, _ = model.prefill_slot(params, cache, jnp.asarray(p_live[None, :]), 1)
+    before_k = np.asarray(cache["k"][:, 1])
+    # batched-prefill slots 0 and 2 around it
+    ps = _prompts(cfg, [4, 11], seed=10)
+    toks = np.zeros((2, 11), np.int32)
+    for j, p in enumerate(ps):
+        toks[j, : p.size] = p
+    cache, _ = model.prefill_slots(
+        params, cache, jnp.asarray(toks), jnp.asarray([4, 11], jnp.int32),
+        jnp.asarray([0, 2], jnp.int32),
+    )
+    np.testing.assert_array_equal(np.asarray(cache["k"][:, 1]), before_k)
+    assert int(cache["pos"][1]) == 7
+    assert int(cache["pos"][0]) == 4 and int(cache["pos"][2]) == 11

@@ -1,0 +1,138 @@
+"""Ring-cache wrap-around audit across the non-transformer cache consumers.
+
+The seed's ``fill_cache`` rolled the surviving tail the wrong direction when
+a prompt exceeded the ring capacity; the transformer path is regression-
+pinned in ``test_engine.py``. These tests pin the OTHER consumers ROADMAP
+flags — the Griffin hybrid's local-attention ring (``rglru.py``) and the
+whisper decoder self-attention cache (``whisper.py``, including its
+``offset`` sinusoidal-position decode path) — by checking prefill-then-
+decode against all-decode (sequential single-token writes) with prompts
+that wrap the ring, at the exact-capacity boundary, and across multiple
+wraps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import rglru, whisper
+
+W = 6          # ring/window capacity — smaller than most prompts below
+GEN = 3        # decode continuation length
+# prompt lengths: no wrap, exact fit, wrap by one, multi-wrap
+PROMPT_LENS = [5, 6, 7, 15]
+
+
+def _logits_close(a, b, vocab):
+    a = np.asarray(a, np.float32)[..., :vocab]
+    b = np.asarray(b, np.float32)[..., :vocab]
+    np.testing.assert_array_equal(a.argmax(-1), b.argmax(-1))
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+@pytest.fixture(scope="module")
+def rglru_parts():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    return cfg, rglru.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def whisper_parts():
+    cfg = get_smoke_config("whisper-medium")
+    params = whisper.init_params(cfg, jax.random.PRNGKey(0))
+    audio = jax.random.normal(
+        jax.random.PRNGKey(2), (2, cfg.encoder_seq, cfg.d_model), cfg.dtype
+    )
+    return cfg, params, audio
+
+
+@pytest.mark.parametrize("s", PROMPT_LENS)
+def test_rglru_prefill_matches_sequential_decode_writes(rglru_parts, s):
+    """Griffin hybrid: chunked prefill (ring filled via ``fill_cache``, LRU
+    state via the associative scan) continued by decode must match teacher-
+    forcing the whole prompt through single-token decode steps — including
+    prompts that wrap the local-attention ring (s > window)."""
+    cfg, params = rglru_parts
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s + GEN), 0, cfg.vocab_size)
+    dec = jax.jit(
+        lambda p, c, t: rglru.decode_step(cfg, p, c, t, window=W)
+    )
+
+    cache = rglru.init_decode_cache(cfg, 2, s + GEN, window=W)
+    seq_logits = []
+    for i in range(s + GEN):
+        cache, lg = dec(params, cache, toks[:, i : i + 1])
+        seq_logits.append(lg)
+
+    cache2, lg0 = rglru.prefill(
+        cfg, params, toks[:, :s], window=W, cache_window=s + GEN
+    )
+    pf_logits = [lg0]
+    for i in range(s, s + GEN):
+        cache2, lg = dec(params, cache2, toks[:, i : i + 1])
+        pf_logits.append(lg)
+
+    _logits_close(
+        jnp.stack(seq_logits[s - 1 :], 1), jnp.stack(pf_logits, 1), cfg.vocab_size
+    )
+
+
+@pytest.mark.parametrize("s", PROMPT_LENS)
+def test_whisper_prefill_matches_sequential_decode_writes(whisper_parts, s):
+    """Whisper decoder: prefill (self-attn ring via ``fill_cache``, sinusoid
+    positions from 0) continued by decode (``offset=pos`` positional path)
+    must match all-decode — including prompts that wrap the window ring."""
+    cfg, params, audio = whisper_parts
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s + GEN), 0, cfg.vocab_size)
+    dec = jax.jit(
+        lambda p, c, t: whisper.decode_step(cfg, p, c, t, window=W)
+    )
+
+    cache = whisper.init_decode_cache(cfg, params, audio, s + GEN, window=W)
+    seq_logits = []
+    for i in range(s + GEN):
+        cache, lg = dec(params, cache, toks[:, i : i + 1])
+        seq_logits.append(lg)
+
+    cache2, lg0 = whisper.prefill(
+        cfg, params, {"tokens": toks[:, :s], "audio_embeds": audio},
+        window=W, cache_window=W,
+    )
+    pf_logits = [lg0]
+    for i in range(s, s + GEN):
+        cache2, lg = dec(params, cache2, toks[:, i : i + 1])
+        pf_logits.append(lg)
+
+    _logits_close(
+        jnp.stack(seq_logits[s - 1 :], 1), jnp.stack(pf_logits, 1), cfg.vocab_size
+    )
+
+
+def test_whisper_offset_positions_continue_prompt_positions(whisper_parts):
+    """The decode-side ``sinusoid_positions(1, d, offset=pos)`` must continue
+    exactly where the prefill-side dense positions stopped."""
+    cfg = whisper_parts[0]
+    d = cfg.d_model
+    dense = whisper.sinusoid_positions(10, d)
+    for pos in (0, 3, 9):
+        step = whisper.sinusoid_positions(1, d, offset=pos)
+        np.testing.assert_allclose(
+            np.asarray(step[0]), np.asarray(dense[pos]), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_whisper_full_attention_ring_headroom(whisper_parts):
+    """window=0 with cache_window headroom (ring never wraps): prefill's
+    last logits equal the teacher-forced decode path bitwise."""
+    cfg, params, audio = whisper_parts
+    s = 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, s), 0, cfg.vocab_size)
+    cache, lg_pf = whisper.prefill(
+        cfg, params, {"tokens": toks, "audio_embeds": audio}, cache_window=s + 2
+    )
+    cache2 = whisper.init_decode_cache(cfg, params, audio, s + 2)
+    lg = None
+    for i in range(s):
+        cache2, lg = whisper.decode_step(cfg, params, cache2, toks[:, i : i + 1])
+    _logits_close(lg_pf, lg, cfg.vocab_size)
+    assert int(cache["pos"]) == int(cache2["pos"]) == s
