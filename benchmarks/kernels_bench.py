@@ -2,9 +2,16 @@
 CPU production path) and derived TPU-side arithmetic-intensity estimates for
 each Pallas kernel. Interpret-mode timings are not meaningful hardware
 numbers, so the derived column reports the kernel's bytes/elem roofline
-character instead."""
+character instead — EXCEPT the paged-decode occupancy sweep, where the
+paged/unpaged ratio at fixed occupancy is the point: page skipping removes
+whole grid steps, which interpret mode reproduces faithfully.
+
+``--smoke`` shrinks sizes/iters to the CI budget (runs in CI next to
+``serve_bench --smoke``).
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -23,9 +30,101 @@ def bench(fn, *args, iters=20):
     return (time.time() - t0) / iters * 1e6
 
 
-def run() -> dict:
+def bench_min(fn, *args, iters=5):
+    """Min-of-N wall time (µs): the robust estimator for the noisy
+    interpret-mode kernel timings the occupancy sweep compares."""
+    jax.block_until_ready(fn(*args))  # compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best * 1e6
+
+
+def decode_occupancy_sweep(
+    occupancies: dict, *, slots: int = 4, cap: int = 4096, hkv: int = 2,
+    g: int = 2, hd: int = 64, iters: int = 5,
+) -> dict:
+    """SHARED probe (also driven by serve_bench): time the paged and the
+    unpaged decode kernel over each ``occupancies[label]`` position vector,
+    returning ``{f"{paged|unpaged}_{label}_us": µs}``.
+
+    The paged kernel's win scales with how much of the ring the live spans
+    leave dead; the unpaged kernel streams cap slots per row regardless,
+    so the low-occupancy rows are the load-bearing comparison. At full
+    occupancy both kernels visit every page — any residual gap there is
+    interpret-mode dispatch overhead, not page skipping, and should be
+    read as noise. The cap must split into several auto-sized (512-slot)
+    pages for skipping to exist at all."""
     key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (slots, hkv, g, hd), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (slots, cap, hkv, hd), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (slots, cap, hkv, hd), jnp.bfloat16)
+    # one jitted fn per variant, shared across labels — pos shape/dtype is
+    # identical for every label, so each compiles exactly once
+    fns = {
+        paged: jax.jit(
+            lambda p, paged=paged: ops.swa_decode_attention(
+                q, kc, vc, p, 0, use_kernel=True, paged=paged, interpret=True
+            )
+        )
+        for paged in (True, False)
+    }
+    out = {}
+    for label, pos in occupancies.items():
+        pos = jnp.asarray(pos, jnp.int32)
+        for paged, fn in fns.items():
+            us = bench_min(fn, pos, iters=iters)
+            out[f"{'paged' if paged else 'unpaged'}_{label}_us"] = us
+    return out
+
+
+def bench_decode_occupancy(rows: dict, *, smoke: bool) -> None:
+    """Paged vs. unpaged decode kernel across ring occupancy levels.
+
+    Two axes: every-slot depth (all shallow vs. all past wrap) and MIXED
+    occupancy (one deep slot among freshly reset ones — the continuous-
+    batching engine's steady state right after a backfill)."""
+    slots, cap = 4, (2048 if smoke else 4096)
+    iters = 3 if smoke else 8
+    shallow = 16
+    occupancies = {
+        "1live": [cap + 5] + [shallow] * (slots - 1),
+        "alllive": [cap + 5] * slots,
+        "allshallow": [shallow] * slots,
+    }
+    sweep = decode_occupancy_sweep(
+        occupancies, slots=slots, cap=cap, iters=iters
+    )
+    for key, us in sweep.items():
+        variant, label, _ = key.split("_", 2)
+        name = f"decode_{variant}_{label}"
+        rows[name] = us
+        emit(
+            f"kernels/{name}", us,
+            f"cap={cap};pages_live={'mixed' if label == '1live' else label}",
+        )
+
+
+def run(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: ONLY the paged-decode occupancy "
+                    "sweep, at smaller shapes/iters")
+    args = ap.parse_args(argv if argv is not None else [])
+
     rows = {}
+    if args.smoke:
+        # CI cares about the paged/unpaged occupancy contrast; the legacy
+        # full-size rows (1M-element refs, 8k-ring decode, flash prefill)
+        # would dominate the step's wall time for no signal
+        bench_decode_occupancy(rows, smoke=True)
+        save_results("kernels_smoke", rows)
+        return rows
+
+    key = jax.random.PRNGKey(0)
 
     x = jax.random.normal(key, (1 << 20,))  # 1M-element gradient leaf
     us = bench(jax.jit(lambda v: ops.topk_sparsify_leaf(v, 0.01)), x)
@@ -53,6 +152,8 @@ def run() -> dict:
     rows["swa_decode_ref_8k_window"] = us
     emit("kernels/swa_decode_8k", us, "hbm-bound:2·C·Hkv·hd·2B/token")
 
+    bench_decode_occupancy(rows, smoke=False)
+
     # flash prefill attention (causal GQA): ref oracle at CPU-feasible size.
     # HBM model: flash = O(Q+K+V+O) vs naive = O(S²·H) probs materialized.
     qf = jax.random.normal(key, (2, 512, 4, 4, 64), jnp.bfloat16)
@@ -70,4 +171,6 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    run(sys.argv[1:])

@@ -14,9 +14,18 @@ as back-to-back fixed batches. The headline numbers:
 * ``ttft_p50`` — arrival→first-token seconds
 
 ``--burst N`` switches to a burst-arrival trace (N simultaneous arrivals
-per burst) and runs the engine twice — batched multi-slot prefill vs.
-one-dispatch-per-request — reporting ``prefill_dispatches`` and TTFT
-p50/p95 for both. ``--smoke`` is the CI-sized burst run (JSON artifact).
+per burst) and runs the engine three ways — shape-bucketed batched prefill
+(production default), unbucketed batched, and one-dispatch-per-request —
+reporting ``prefill_dispatches``, ``prefill_compiles`` (jit
+specializations; the bucketed engine's are bounded by the bucket ladder),
+latency p50/p95 and TTFT p50/p95 for each. Burst mode also probes the
+paged decode kernel in isolation: mean decode-step time at low vs. full
+ring occupancy, paged vs. unpaged (page skipping only helps rows far from
+wrap, so the low-occupancy row is where the win shows).
+
+``--smoke`` is the CI-sized burst run. Besides the usual
+``benchmarks/results.json`` entry it writes ``BENCH_serve.json`` at the
+repo root — the perf-trajectory seed future PRs diff against.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --requests 12 --rate 2.0
     PYTHONPATH=src python -m benchmarks.serve_bench --burst 4 --requests 12
@@ -24,6 +33,8 @@ p50/p95 for both. ``--smoke`` is the CI-sized burst run (JSON artifact).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -35,6 +46,11 @@ from repro.data import SyntheticCorpus
 from repro.launch.engine import Request, ServeEngine
 from repro.launch.serve import serve_batch
 from repro.models import build_model
+
+BENCH_SEED_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json",
+)
 
 
 def poisson_trace(
@@ -132,13 +148,51 @@ def burst_trace(
     return reqs
 
 
+def bench_decode_occupancy(
+    *, slots: int = 4, cap: int = 4096, iters: int = 5, shallow_pos: int = 16,
+) -> dict:
+    """Isolated decode-attention step time vs. ring occupancy, paged vs.
+    unpaged kernel (interpret mode — relative, not absolute, numbers;
+    shared probe in ``benchmarks.kernels_bench.decode_occupancy_sweep``).
+
+    ``cap`` must be large enough to split into several pages (auto page is
+    512), or there is nothing to skip: 4096 → 8 pages. ``low`` occupancy
+    parks every slot at ``shallow_pos`` (one live page of the ring);
+    ``full`` parks every slot past wrap (every page live). The paged
+    kernel must win at LOW occupancy — that pair is the acceptance
+    comparison. At full occupancy both kernels visit every page; any gap
+    in the full rows is interpret-mode dispatch overhead, kept in the seed
+    only as a noise floor for diffing the low rows against."""
+    from benchmarks.kernels_bench import decode_occupancy_sweep
+
+    sweep = decode_occupancy_sweep(
+        {
+            "low": [shallow_pos] * slots,
+            "full": [cap + shallow_pos] * slots,
+        },
+        slots=slots, cap=cap, iters=iters,
+    )
+    return {"cap": cap, "slots": slots, "shallow_pos": shallow_pos, **sweep}
+
+
+BURST_VARIANTS = (
+    # label, batch_prefill, bucket_prefill
+    ("batched", True, True),             # production default
+    ("batched_unbucketed", True, False),  # pre-bucketing contrast
+    ("per_request", False, False),       # one dispatch per request
+)
+
+
 def bench_burst(args) -> dict:
-    """Burst arrivals through the engine, batched vs. per-request prefill.
+    """Burst arrivals through the engine: bucketed-batched vs. unbucketed-
+    batched vs. per-request prefill.
 
     The load-bearing numbers: ``prefill_dispatches`` (one per admission
-    round when batched — a burst of N costs 1 forward, not N) and TTFT
-    p50/p95 (the per-request path serializes N prefills before the burst's
-    last request sees its first token). With the default ``--burst-gap 0``
+    round when batched — a burst of N costs 1 forward, not N),
+    ``prefill_compiles`` (shape bucketing bounds jit specializations by the
+    bucket ladder instead of the trace's shape diversity) and TTFT p50/p95
+    (the per-request path serializes N prefills before the burst's last
+    request sees its first token). With the default ``--burst-gap 0``
     everything arrives at t=0 and runs in virtual time — deterministic and
     CI-safe; a positive gap switches to realtime so arrival-relative TTFT
     stays meaningful."""
@@ -147,11 +201,11 @@ def bench_burst(args) -> dict:
     params = model.init(jax.random.PRNGKey(args.seed))
     max_seq = max(args.prompt_lens) + args.gen
     out = {}
-    for label, batched in (("batched", True), ("per_request", False)):
+    for label, batched, bucketed in BURST_VARIANTS:
         engine = ServeEngine(
             model, params, num_slots=args.slots, max_seq=max_seq,
             window=args.window, use_kernel=args.use_kernel, prefill="chunked",
-            batch_prefill=batched,
+            batch_prefill=batched, bucket_prefill=bucketed,
         )
         reqs = burst_trace(
             cfg, n_requests=args.requests, burst_size=args.burst,
@@ -159,7 +213,9 @@ def bench_burst(args) -> dict:
             gen_tokens=args.gen, seed=args.seed,
         )
         # warm every shape a round can dispatch outside the measured window
-        # (jit compilation is not a scheduling effect)
+        # (jit compilation is not a scheduling effect). Compile counters
+        # intentionally KEEP the warm traces — total specializations is the
+        # number bucketing bounds.
         engine.warm(args.prompt_lens)
         t0 = time.time()
         # gap 0 (default): virtual time, deterministic. gap > 0: honor
@@ -170,20 +226,30 @@ def bench_burst(args) -> dict:
         wall = time.time() - t0
         total = sum(len(o.tokens) for o in outs)
         ttft = np.asarray([o.ttft for o in outs])
+        lat = np.asarray([o.latency for o in outs])
         out[label] = {
             "prefill_dispatches": engine.prefill_dispatches,
+            "prefill_compiles": engine.prefill_compiles,
+            "compiles": engine.compiles,
             "engine_steps": engine.steps,
             "wall_seconds": wall,
             "tokens_per_second": total / max(wall, 1e-9),
+            "latency_p50": float(np.percentile(lat, 50)),
+            "latency_p95": float(np.percentile(lat, 95)),
             "ttft_p50": float(np.percentile(ttft, 50)),
             "ttft_p95": float(np.percentile(ttft, 95)),
             "generated": [o.tokens for o in outs],
         }
-    assert out["batched"]["generated"] == out["per_request"]["generated"], (
-        "batched admission changed greedy output"
-    )
-    for m in out.values():
+    ref = out["batched"]["generated"]
+    for label, m in out.items():
+        assert m["generated"] == ref, (
+            f"{label} admission changed greedy output"
+        )
         del m["generated"]
+    assert (
+        out["batched"]["prefill_compiles"]
+        <= out["batched_unbucketed"]["prefill_compiles"]
+    ), "bucketed engine must not compile more than the unbucketed one"
     return {
         "mode": "burst",
         "slots": args.slots,
@@ -193,8 +259,44 @@ def bench_burst(args) -> dict:
         "prompt_lens": list(args.prompt_lens),
         "gen_tokens": args.gen,
         "window": args.window,
+        "decode_occupancy": bench_decode_occupancy(slots=args.slots),
         **out,
     }
+
+
+def write_bench_seed(res: dict) -> None:
+    """Persist the perf-trajectory seed at the repo root. Schema is flat so
+    future PRs can diff field-by-field."""
+    b = res["batched"]
+    occ = res["decode_occupancy"]
+    seed = {
+        "schema": 1,
+        "mode": res["mode"],
+        "slots": res["slots"],
+        "requests": res["requests"],
+        "prompt_lens": res["prompt_lens"],
+        "gen_tokens": res["gen_tokens"],
+        "tokens_per_second": b["tokens_per_second"],
+        "latency_p50": b["latency_p50"],
+        "latency_p95": b["latency_p95"],
+        "ttft_p95": b["ttft_p95"],
+        "prefill_dispatches": b["prefill_dispatches"],
+        "prefill_dispatches_per_request": res["per_request"][
+            "prefill_dispatches"
+        ],
+        "prefill_compiles": b["prefill_compiles"],
+        "prefill_compiles_unbucketed": res["batched_unbucketed"][
+            "prefill_compiles"
+        ],
+        "compiles": b["compiles"],
+        "decode_step_paged_low_us": occ["paged_low_us"],
+        "decode_step_unpaged_low_us": occ["unpaged_low_us"],
+        "decode_step_paged_full_us": occ["paged_full_us"],
+        "decode_step_unpaged_full_us": occ["unpaged_full_us"],
+    }
+    with open(BENCH_SEED_PATH, "w") as f:
+        json.dump(seed, f, indent=1)
+        f.write("\n")
 
 
 def bench_oracle(args) -> dict:
@@ -241,7 +343,8 @@ def _parser():
                     "virtual time; > 0 runs realtime, honoring arrivals)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized burst run: 8 requests in bursts of 4 "
-                    "through 4 slots, single prompt length")
+                    "through 4 slots, mixed prompt lengths; writes the "
+                    "BENCH_serve.json perf-trajectory seed at the repo root")
     return ap
 
 
@@ -251,20 +354,34 @@ def run(argv: list[str] | None = None):
     if args.smoke:
         args.burst = args.burst or 4
         args.requests = min(args.requests, 8)
-        args.prompt_lens = [16]
+        # mixed lengths so admission rounds span several shapes — the
+        # prefill_compiles contrast (bucketed vs. not) needs diversity
+        args.prompt_lens = [5, 9, 16]
         args.gen = 8
 
     if args.burst > 0:
         res = bench_burst(args)
-        b, p = res["batched"], res["per_request"]
+        b, u, p = res["batched"], res["batched_unbucketed"], res["per_request"]
+        occ = res["decode_occupancy"]
         emit(
             "serve_burst_prefill",
             1e6 * b["wall_seconds"] / max(b["engine_steps"], 1),
             f"dispatches {b['prefill_dispatches']} (batched) vs "
-            f"{p['prefill_dispatches']} (per-request); ttft95 "
-            f"{b['ttft_p95']:.3f}s vs {p['ttft_p95']:.3f}s",
+            f"{p['prefill_dispatches']} (per-request); compiles "
+            f"{b['prefill_compiles']} (bucketed) vs {u['prefill_compiles']} "
+            f"(unbucketed); ttft95 {b['ttft_p95']:.3f}s vs "
+            f"{p['ttft_p95']:.3f}s",
+        )
+        emit(
+            "serve_decode_occupancy",
+            occ["paged_low_us"],
+            f"paged low-occ {occ['paged_low_us']:.0f}us vs unpaged "
+            f"{occ['unpaged_low_us']:.0f}us; full-occ "
+            f"{occ['paged_full_us']:.0f}us vs {occ['unpaged_full_us']:.0f}us",
         )
         save_results("serve_bench_burst", res)
+        if args.smoke:
+            write_bench_seed(res)
         return res
 
     res = bench_engine(args)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dp_clip as _dp
+from repro.kernels import paged_decode as _paged
 from repro.kernels import quantize as _quant
 from repro.kernels import ref as _ref
 from repro.kernels import swa_decode as _swa
@@ -120,14 +121,23 @@ def swa_decode_attention(
     window: int = 0,
     *,
     use_kernel: bool = False,
+    paged: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
     """(B, Hkv, G, hd) x ring cache (B, C, Hkv, hd) → (B, Hkv, G, hd).
 
     ``pos`` is () for a lockstep batch or (B,) for per-slot positions
-    (continuous-batching engine)."""
+    (continuous-batching engine). ``paged=True`` selects the length-aware
+    paged variant (kernels/paged_decode.py): rows far from ring wrap skip
+    dead KV pages entirely — bitwise-identical output, less work."""
     if use_kernel:
+        if paged:
+            return _paged.paged_decode(
+                q, k_cache, v_cache, pos, window, interpret=interpret
+            )
         return _swa.swa_decode(q, k_cache, v_cache, pos, window, interpret=interpret)
+    if paged:
+        return _ref.paged_decode_ref(q, k_cache, v_cache, pos, window)
     return _ref.swa_decode_ref(q, k_cache, v_cache, pos, window)
 
 

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: length-aware paged flash-decode over ring-buffer KV.
+
+``swa_decode`` streams EVERY cache chunk for every batch row, so a slot
+holding 8 tokens in a 512-slot ring pays the same HBM traffic and MXU time
+as a full slot. This kernel is its paged sibling for the continuous-batching
+engine, where rows (slots) sit at wildly different depths: the ring is cut
+into pages of ``page`` slots, the per-row number of LIVE pages
+
+    live_pages[b] = ceil(min(pos[b] + 1, C) / page)
+
+is scalar-prefetched (``pltpu.PrefetchScalarGridSpec``), and the grid is
+(B, Hkv, C/page) where dead pages are skipped two ways:
+
+* the k/v index map clamps the page index to ``live_pages[b] - 1``, so a
+  dead page issues NO new DMA (it re-reads the already-resident last live
+  page — the standard paged-attention trick);
+* the kernel body runs under ``pl.when(j < live_pages[b])``, so the MXU
+  work is skipped outright.
+
+A page is dead exactly when every one of its slots fails the ring validity
+mask, which happens iff the ring has not wrapped past it (slot index >
+pos): skipping it is therefore BITWISE identical to the unpaged kernel —
+a fully-masked chunk contributes exp(NEG − m) == 0.0 to the online-softmax
+state (and a leading garbage chunk is annihilated exactly by
+``alpha = exp(NEG − m_new) == 0.0`` at the first live chunk). Tests pin
+paged == unpaged bitwise and both against the jnp oracle.
+
+Note ``live_pages`` depends on ``pos`` only through ``min(pos + 1, C)``:
+once a row's ring wraps, every page is live and the kernel degrades to
+exactly ``swa_decode``. The win is the engine's common case — short or
+freshly admitted slots far from wrap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.swa_decode import _chunk
+
+NEG = -2.0**30
+
+
+def _paged_kernel(
+    pos_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, page: int, cap: int, window: int, scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_pages = cap // page
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < pages_ref[b])
+    def _live_page():
+        pos = pos_ref[b]
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (G, page)
+
+        slots = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        slot_w = pos % cap
+        gpos = pos - (slot_w - slots) % cap
+        lo = jnp.maximum(pos - (window - 1), 0) if window > 0 else 0
+        valid = (gpos >= lo) & (gpos <= pos)           # (1, page)
+        s = jnp.where(valid, s, NEG)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                          # (G, page)
+        alpha = jnp.exp(m_prev - m_new)                 # (G, 1)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )                                               # (G, hd)
+        acc_new = acc_prev * alpha + pv
+        m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "page", "interpret"))
+def paged_decode(
+    q: jax.Array,          # (B, Hkv, G, hd)
+    k_cache: jax.Array,    # (B, C, Hkv, hd)
+    v_cache: jax.Array,    # (B, C, Hkv, hd)
+    pos: jax.Array,        # () or (B,) i32 — tokens already cached per row
+    window: int = 0,
+    *,
+    page: int = 0,         # 0 = auto (largest of 512/256/128/64 dividing C)
+    interpret: bool = True,
+) -> jax.Array:
+    b, hkv, g, hd = q.shape
+    cap = k_cache.shape[1]
+    pg = page or _chunk(cap)
+    assert cap % pg == 0, f"cap {cap} not divisible by page {pg}"
+    scale = hd**-0.5
+    n_pages = cap // pg
+
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    # pages holding at least one slot the ring head has reached
+    live = jnp.minimum(pos_b + 1, cap)
+    pages = jnp.clip((live + pg - 1) // pg, 1, n_pages)
+
+    kernel = functools.partial(
+        _paged_kernel, page=pg, cap=cap, window=window, scale=scale
+    )
+
+    def kv_map(b_, h, j, pos_ref, pages_ref):
+        # dead pages re-read the last live page: no fresh DMA
+        return (b_, jnp.minimum(j, pages_ref[b_] - 1), h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, pg, 1, hd), kv_map),
+            pl.BlockSpec((1, pg, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(pos_b, pages, q, k_cache, v_cache)

@@ -77,6 +77,41 @@ def swa_decode_ref(
     return out.astype(q.dtype)
 
 
+def paged_decode_ref(
+    q: jax.Array,       # (B, Hkv, G, hd)
+    k: jax.Array,       # (B, C, Hkv, hd)   ring-buffer cache (rotated keys)
+    v: jax.Array,       # (B, C, Hkv, hd)
+    pos: jax.Array,     # () or (B,)  tokens already cached per row
+    window: int,        # attention span (0 = all cached)
+) -> jax.Array:
+    """Length-aware paged decode oracle (kernels/paged_decode.py).
+
+    Identical to ``swa_decode_ref`` with an explicit per-row live-span mask
+    ``slot < min(pos + 1, C)`` intersected in. A slot beyond the live span
+    is already invalid under the ring-position mask (its reconstructed
+    global position is negative), so the intersection equals the original
+    valid set and the output is BITWISE equal to ``swa_decode_ref`` — the
+    paged kernel's page skipping must be invisible, and this oracle states
+    that in jnp terms."""
+    b, c, hkv, hd = k.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # (B,)
+    slot = pos % c
+    slots = jnp.arange(c)
+    gpos = pos[:, None] - (slot[:, None] - slots[None, :]) % c  # (B, C)
+    lo = jnp.maximum(pos - (window - 1), 0) if window > 0 else jnp.zeros_like(pos)
+    live = jnp.minimum(pos + 1, c)                              # (B,)
+    valid = (gpos >= lo[:, None]) & (gpos <= pos[:, None])
+    valid &= slots[None, :] < live[:, None]                     # page mask
+
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd**-0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, -2.0**30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def flash_prefill_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     window: int = 0,

@@ -26,6 +26,13 @@ sized for this repo's CPU-verifiable models:
   one token; sequences retire on EOS or max-new-tokens. The sliding-window
   ring cache (``window > 0``) and the Pallas flash-decode kernel
   (``use_kernel=True``, interpret mode on CPU) thread straight through.
+* Hot-path perf, all default-on and output-invisible: admission rounds are
+  padded to SHAPE BUCKETS (pow2 width × geometric length ladder) so
+  ``prefill_slots`` compiles O(buckets) not O(distinct round shapes) — the
+  ``compiles`` counters prove the bound; the KV cache is DONATED through
+  every jitted step (no per-step full-cache copy); and with the kernel on,
+  decode runs the PAGED variant (``kernels/paged_decode.py``) so each slot
+  skips ring pages beyond its live span.
 
     PYTHONPATH=src python -m repro.launch.serve --continuous \
         --arch stablelm-1.6b --slots 4 --requests 8
@@ -49,6 +56,32 @@ from repro.models.model import ModelAPI
 from repro.models.transformer import reset_slot
 
 PREFILL_MODES = ("chunked", "interleaved")
+
+# Smallest padded prompt length the bucket ladder produces. Rounds pad up to
+# the next power of two from here, so ``prefill_slots`` compiles at most
+# O(log(max_prompt / LEN_BUCKET_MIN)) distinct lengths instead of one per
+# distinct round maximum.
+LEN_BUCKET_MIN = 8
+
+
+def bucket_width(n: int, num_slots: int) -> int:
+    """Round an admission-round width up to a power of two, capped at the
+    slot-pool size — the extra rows are no-op padding rows (length 0)."""
+    w = 1
+    while w < n:
+        w *= 2
+    return min(w, num_slots)
+
+
+def bucket_length(s: int, floor: int = LEN_BUCKET_MIN) -> int:
+    """Round a padded prompt length up the geometric ladder
+    floor, 2·floor, 4·floor, … — right-padding is invisible to the
+    causally-masked prefill, and ring writes stop at each row's true
+    length."""
+    length = floor
+    while length < s:
+        length *= 2
+    return length
 
 
 @dataclasses.dataclass
@@ -123,6 +156,23 @@ class ServeEngine:
         right-padded to the round's max length) instead of one dispatch per
         request. Greedy output is token-identical either way; a burst of N
         arrivals costs 1 prefill dispatch instead of N.
+    bucket_prefill : pad each batched admission round to a SHAPE BUCKET —
+        width to the next power of two (capped at ``num_slots``, extra rows
+        are length-0 no-op padding), padded prompt length to the geometric
+        ladder ``LEN_BUCKET_MIN · 2^k`` — so ``prefill_slots`` compiles
+        O(log num_slots · log max_prompt) times instead of once per distinct
+        (round width, round max length). Token-identical to the unbucketed
+        path; the ``compiles`` counters prove the bound.
+    paged_decode : with ``use_kernel``, route decode attention through the
+        length-aware paged kernel (``kernels/paged_decode.py``): each slot
+        skips KV pages beyond its live span, so freshly admitted /
+        short-prompt slots stop paying full-ring attention cost. Output is
+        bitwise-identical to the unpaged kernel.
+    donate_cache : donate the KV-cache pytree through the jitted decode and
+        prefill steps (``jax.jit(..., donate_argnums=...)``) so XLA updates
+        the ring buffers in place instead of copying the full cache through
+        every step. The engine never re-reads a donated buffer: ``.cache``
+        is rebound to the step's output before any other access.
     eos_id : optional token id that retires a sequence early.
     seed : engine-level sampling seed; requests without an explicit
         ``SamplingParams.seed`` draw from PRNGKey(seed) folded with their
@@ -141,6 +191,9 @@ class ServeEngine:
         use_kernel: bool = False,
         prefill: str = "chunked",
         batch_prefill: bool = True,
+        bucket_prefill: bool = True,
+        paged_decode: bool = True,
+        donate_cache: bool = True,
         eos_id: int | None = None,
         seed: int = 0,
         time_fn: Callable[[], float] | None = None,
@@ -168,27 +221,41 @@ class ServeEngine:
             batch_prefill and prefill == "chunked"
             and model.prefill_slots is not None
         )
+        self.bucket_prefill = bucket_prefill and self.batch_prefill
+        self.paged_decode = paged_decode
+        self.donate_cache = donate_cache
         self.eos_id = eos_id
         self.seed = seed
         self._time_fn = time_fn or time.monotonic
         self._t0 = self._time_fn()
 
         self.cache = model.init_slot_cache(params, num_slots, max_seq, window=window)
-        self._decode = jax.jit(
-            lambda p, c, t: model.decode(p, c, t, window=window)
-        )
-        self._prefill = jax.jit(
-            lambda p, c, t, s: model.prefill_slot(p, c, t, s, window=window)
-        )
-        self._prefill_slots = (
-            jax.jit(
-                lambda p, c, t, l, s: model.prefill_slots(
-                    p, c, t, l, s, window=window
-                )
-            )
-            if model.prefill_slots is not None
-            else None
-        )
+        # Every hot-path jit donates the cache pytree (argument 1): the ring
+        # buffers are updated in place instead of being functionally copied
+        # through each step. Each wrapper body runs exactly once per input
+        # shape signature — at trace time — so the trace counters below ARE
+        # compile counters (``self.compiles``).
+        self._compiles = {"decode": 0, "prefill": 0, "prefill_slots": 0}
+        donate = (1,) if donate_cache else ()
+
+        def _decode_fn(p, c, t):
+            self._compiles["decode"] += 1
+            return model.decode(p, c, t, window=window)
+
+        def _prefill_fn(p, c, t, s):
+            self._compiles["prefill"] += 1
+            return model.prefill_slot(p, c, t, s, window=window)
+
+        self._decode = jax.jit(_decode_fn, donate_argnums=donate)
+        self._prefill = jax.jit(_prefill_fn, donate_argnums=donate)
+        if model.prefill_slots is not None:
+            def _prefill_slots_fn(p, c, t, l, s):
+                self._compiles["prefill_slots"] += 1
+                return model.prefill_slots(p, c, t, l, s, window=window)
+
+            self._prefill_slots = jax.jit(_prefill_slots_fn, donate_argnums=donate)
+        else:
+            self._prefill_slots = None
         self._sample = jax.jit(
             lambda key, row, t, k, p: sample_token(
                 key, row, t, k, p, model.cfg.vocab_size
@@ -244,12 +311,23 @@ class ServeEngine:
         Batched admission specializes ``prefill_slots`` per (round width,
         padded prompt length) — and a mixed round pads to its max length,
         always one of ``prompt_lens`` — so warm each (width, length) pair;
-        per-request / interleaved admission only ever sees width 1. Pass
+        per-request / interleaved admission only ever sees width 1. With
+        shape bucketing, many (width, length) pairs collapse onto one bucket
+        shape, so only one representative per bucket is traced. Pass
         ``sampling`` when the trace will sample, so the (fixed-width)
         batched sampler compiles here too."""
         widths = range(1, self.num_slots + 1) if self.batch_prefill else [1]
+        seen: set[tuple[int, int]] = set()
         for p in sorted(set(prompt_lens)):
             for w in widths:
+                shape = (
+                    (bucket_width(w, self.num_slots), bucket_length(p))
+                    if self.bucket_prefill
+                    else (w, p)
+                )
+                if shape in seen:
+                    continue
+                seen.add(shape)
                 self.run([
                     Request(uid=-1 - j, prompt=np.zeros(p, np.int32),
                             max_new_tokens=max(gen_tokens, 1),
@@ -257,6 +335,20 @@ class ServeEngine:
                     for j in range(w)
                 ])
         self.reset_metrics()
+
+    @property
+    def compiles(self) -> dict[str, int]:
+        """Jit specializations per hot-path entry point since construction.
+        NOT reset by ``reset_metrics`` — compiled code outlives a metrics
+        window, and the whole point of shape bucketing is keeping these
+        bounded as traffic diversity grows."""
+        return dict(self._compiles)
+
+    @property
+    def prefill_compiles(self) -> int:
+        """`prefill_slots`` + per-request prefill specializations — the
+        number the recompile-guard test bounds by the bucket-ladder size."""
+        return self._compiles["prefill_slots"] + self._compiles["prefill"]
 
     @property
     def has_work(self) -> bool:
@@ -364,13 +456,29 @@ class ServeEngine:
 
         if self.batch_prefill:
             prompts = [self.slots[i].req.prompt for i in claimed]
-            lengths = np.asarray([p.size for p in prompts], np.int32)
-            tokens = np.zeros((len(claimed), int(lengths.max())), np.int32)
-            for j, p in enumerate(prompts):
+            round_len = max(p.size for p in prompts)
+            if self.bucket_prefill:
+                width = bucket_width(len(claimed), self.num_slots)
+                padded_len = bucket_length(round_len)
+            else:
+                width = len(claimed)
+                padded_len = round_len
+            tokens = np.zeros((width, padded_len), np.int32)
+            lengths = np.zeros(width, np.int32)
+            slot_ids = np.zeros(width, np.int32)
+            for j, (i, p) in enumerate(zip(claimed, prompts)):
                 tokens[j, : p.size] = p
+                lengths[j] = p.size
+                slot_ids[j] = i
+            if width > len(claimed):
+                # width-bucket padding rows: length 0 (prefill_slots writes
+                # nothing for them), aimed at DISTINCT slots outside the
+                # claimed set — width <= num_slots guarantees enough spares.
+                spare = [i for i in range(self.num_slots) if i not in set(claimed)]
+                slot_ids[len(claimed):] = spare[: width - len(claimed)]
             self.cache, logits = self._prefill_slots(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(claimed, np.int32),
+                jnp.asarray(lengths), jnp.asarray(slot_ids),
             )
             self.prefill_dispatches += 1
             for j, i in enumerate(claimed):
@@ -420,7 +528,7 @@ class ServeEngine:
         drains in arrival order as slots free up (virtual time).
         """
         n_done = len(self.finished)
-        attention.set_decode_kernel(self.use_kernel)
+        attention.set_decode_kernel(self.use_kernel, paged=self.paged_decode)
         try:
             self._admit(self._now(), respect_arrivals)
             live = [i for i, s in enumerate(self.slots) if s is not None]
@@ -556,6 +664,9 @@ def serve_continuous(
     use_kernel: bool = False,
     prefill: str = "chunked",
     batch_prefill: bool = True,
+    bucket_prefill: bool = True,
+    paged_decode: bool = True,
+    donate_cache: bool = True,
     sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
@@ -574,6 +685,9 @@ def serve_continuous(
         use_kernel=use_kernel,
         prefill=prefill,
         batch_prefill=batch_prefill,
+        bucket_prefill=bucket_prefill,
+        paged_decode=paged_decode,
+        donate_cache=donate_cache,
         seed=seed,
     )
     reqs = make_requests(
@@ -605,9 +719,13 @@ def serve_continuous(
         "use_kernel": use_kernel,
         "prefill": prefill,
         "batch_prefill": engine.batch_prefill,
+        "bucket_prefill": engine.bucket_prefill,
+        "paged_decode": engine.paged_decode,
+        "donate_cache": engine.donate_cache,
         "sampling": None if sampling is None else dataclasses.asdict(sampling),
         "engine_steps": engine.steps,
         "prefill_dispatches": engine.prefill_dispatches,
+        "compiles": engine.compiles,
         "wall_seconds": wall,
         "tokens_per_second": total / max(wall, 1e-9),
         "generated": [o.tokens for o in outs],

@@ -142,6 +142,18 @@ def main(argv=None):
                     action="store_false",
                     help="[continuous] one prefill dispatch per request "
                     "instead of one per admission round")
+    ap.add_argument("--no-bucket-prefill", dest="bucket_prefill",
+                    action="store_false",
+                    help="[continuous] disable shape-bucketed admission "
+                    "rounds (compile one prefill per distinct round shape)")
+    ap.add_argument("--no-paged-decode", dest="paged_decode",
+                    action="store_false",
+                    help="[continuous] with --use-kernel, use the unpaged "
+                    "flash-decode kernel (full-ring attention per slot)")
+    ap.add_argument("--no-donate-cache", dest="donate_cache",
+                    action="store_false",
+                    help="[continuous] functionally copy the KV cache "
+                    "through each step instead of donating it in place")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
     # sampling (0 temperature = greedy; per-request streams derive from
@@ -174,7 +186,10 @@ def main(argv=None):
             n_requests=args.requests, prompt_len=args.prompt_len,
             gen_tokens=args.gen, window=args.window,
             use_kernel=args.use_kernel, prefill=args.prefill,
-            batch_prefill=args.batch_prefill, sampling=sampling,
+            batch_prefill=args.batch_prefill,
+            bucket_prefill=args.bucket_prefill,
+            paged_decode=args.paged_decode,
+            donate_cache=args.donate_cache, sampling=sampling,
             seed=args.seed, stagger=args.stagger,
         )
     return serve_batch(

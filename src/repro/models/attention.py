@@ -36,6 +36,14 @@ NEG_INF = -2.0**30  # large finite negative; avoids NaN from all-masked rows
 # The jnp path below IS the kernel's oracle; tests pin them equal.
 USE_DECODE_KERNEL = False
 
+# When True (and USE_DECODE_KERNEL), decode_attend uses the length-aware
+# paged kernel (repro.kernels.paged_decode): per-slot live lengths are
+# scalar-prefetched and KV pages beyond each row's live span are skipped —
+# no DMA, no MXU work. Output is bitwise-identical to the unpaged kernel
+# (tests/test_paged_decode.py pins it), so flipping this is purely a perf
+# decision.
+USE_PAGED_DECODE = False
+
 # When True, attend_full runs the Pallas flash-attention kernel
 # (repro.kernels.flash_prefill) for training/prefill instead of the jnp
 # chunked path. The kernel keeps the softmax state in VMEM — the jnp path
@@ -45,9 +53,10 @@ USE_DECODE_KERNEL = False
 USE_PREFILL_KERNEL = False
 
 
-def set_decode_kernel(enabled: bool) -> None:
-    global USE_DECODE_KERNEL
+def set_decode_kernel(enabled: bool, *, paged: bool = False) -> None:
+    global USE_DECODE_KERNEL, USE_PAGED_DECODE
     USE_DECODE_KERNEL = enabled
+    USE_PAGED_DECODE = paged
 
 
 def set_prefill_kernel(enabled: bool) -> None:
@@ -337,7 +346,10 @@ def decode_attend(
         from repro.kernels.ops import swa_decode_attention
 
         q_k = q.reshape(b, hkv, g, hd)
-        out = swa_decode_attention(q_k, new_k, new_v, pos, window, use_kernel=True)
+        out = swa_decode_attention(
+            q_k, new_k, new_v, pos, window,
+            use_kernel=True, paged=USE_PAGED_DECODE,
+        )
         out = out.reshape(b, 1, hkv * g * hd).astype(x.dtype)
     else:
         # global position held by each slot after the write

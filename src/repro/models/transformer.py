@@ -324,6 +324,12 @@ def prefill_slots(
     r's rotated k/v land in its slot's ring rows (per-row wrap-around via
     ``fill_cache_rows``) and its logits come from position lengths[r]-1.
     Returns (cache', last-valid-position logits (n, Vp)).
+
+    A row with ``lengths[r] == 0`` is a shape-bucket PADDING row (engine
+    width bucketing): it writes nothing — ``fill_cache_rows`` writes no ring
+    entries and the pos update keeps the slot's previous value — so its
+    ``slots[r]`` may name any slot not otherwise in this call, even a live
+    one. Its logits row is garbage; callers discard it.
     """
     assert cache["pos"].ndim == 1, "prefill_slots requires a per-slot cache"
     n, s = tokens.shape
@@ -348,12 +354,15 @@ def prefill_slots(
 
     x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
     x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
-    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+    last = jnp.take_along_axis(x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
     logits = lm_logits(params["embed"], last, cfg)[:, 0]
     new_cache = {
         "k": nk,
         "v": nv,
-        "pos": cache["pos"].at[slots].set(lengths),
+        # padding rows (length 0) must not touch their slot's position
+        "pos": cache["pos"].at[slots].set(
+            jnp.where(lengths > 0, lengths, cache["pos"][slots])
+        ),
         "window": cache["window"],
     }
     return new_cache, logits

@@ -1,0 +1,231 @@
+"""Hot-path perf machinery of the serve engine: shape-bucketed prefill
+(bounded jit specializations), zero-copy donated cache stepping, and the
+paged decode kernel threaded end-to-end.
+
+Everything here is behavior-pinned the same way as test_engine.py: the
+optimizations must be INVISIBLE in the tokens — only the compile counters,
+buffer lifetimes, and dispatch counts may change."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import (
+    Request,
+    ServeEngine,
+    bucket_length,
+    bucket_width,
+    make_requests,
+)
+
+ARCH = "stablelm-1.6b"
+G = 4  # generated tokens per request
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _build(model_and_params, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_seq", 32)
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(cfg, lens, *, uid0=0, gen=G, seed=0):
+    """One request per entry of ``lens``, sliced from a shared corpus draw."""
+    base = make_requests(
+        cfg, n_requests=len(lens), prompt_len=max(lens), gen_tokens=gen,
+        seed=seed,
+    )
+    return [
+        Request(uid=uid0 + j, prompt=r.prompt[: lens[j]], max_new_tokens=gen)
+        for j, r in enumerate(base)
+    ]
+
+
+# ------------------------------------------------------------ bucket helpers
+def test_bucket_ladders():
+    assert [bucket_width(n, 4) for n in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    assert [bucket_width(n, 6) for n in (1, 3, 5, 6)] == [1, 4, 6, 6]
+    assert [bucket_length(s) for s in (1, 8, 9, 16, 17, 100)] == [
+        8, 8, 16, 16, 32, 128,
+    ]
+
+
+# ------------------------------------------------------------ recompile guard
+def test_recompile_guard_many_round_shapes(model_and_params):
+    """≥ 20 distinct (round width, round max length) admission shapes must
+    compile ``prefill_slots`` at most bucket-ladder-many times."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, num_slots=4)
+    lens = [3, 5, 7, 9, 11, 13]
+    shapes = [(w, l) for w in (1, 2, 3, 4) for l in lens][:21]
+    assert len(shapes) >= 20
+    uid = 0
+    for w, l in shapes:
+        # exactly one admission round of width w (all slots free each run)
+        engine.run(_reqs(cfg, [l] * w, uid0=uid))
+        uid += w
+    n_buckets = len(
+        {(bucket_width(w, 4), bucket_length(l)) for w, l in shapes}
+    )
+    compiled = engine.compiles["prefill_slots"]
+    assert compiled <= n_buckets, (
+        f"{len(shapes)} round shapes compiled prefill_slots {compiled} "
+        f"times; bucket ladder allows {n_buckets}"
+    )
+    assert compiled < len(shapes)  # the unbucketed path would hit this
+    # decode stays one specialization throughout
+    assert engine.compiles["decode"] == 1
+
+    # warm() has already covered every bucket: more traffic, zero new traces
+    before = engine.compiles["prefill_slots"]
+    engine.run(_reqs(cfg, [4, 6, 12], uid0=uid))
+    assert engine.compiles["prefill_slots"] == before
+
+
+def test_unbucketed_engine_compiles_per_shape(model_and_params):
+    """Contrast fixture: bucket_prefill=False really does specialize per
+    distinct round shape (the pre-bucketing behavior the guard exists for)."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, num_slots=4, bucket_prefill=False)
+    shapes = [(1, 3), (1, 5), (2, 3), (2, 5), (3, 7)]
+    for j, (w, l) in enumerate(shapes):
+        engine.run(_reqs(cfg, [l] * w, uid0=100 * j))
+    assert engine.compiles["prefill_slots"] == len(shapes)
+
+
+# ------------------------------------------------------- bucket boundaries
+@pytest.mark.parametrize("lens", [
+    [8],            # exactly at the ladder floor
+    [16],           # exactly at a ladder edge (no padding added)
+    [9],            # one past an edge (max padding)
+    [8, 16, 9],     # mixed round: pads to bucket_length(16) == 16
+])
+def test_bucketed_tokens_identical_at_ladder_edges(model_and_params, lens):
+    cfg, _, _ = model_and_params
+    a = _build(model_and_params).run(_reqs(cfg, lens))
+    b = _build(model_and_params, bucket_prefill=False).run(_reqs(cfg, lens))
+    for oa, ob in zip(a, b):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens, f"uid {oa.uid}"
+
+
+def test_one_row_rounds_identical(model_and_params):
+    """Width-1 rounds pad to width bucket 1 — no padding rows at all — and
+    staggered singleton admissions stay token-identical."""
+    cfg, _, _ = model_and_params
+    lens = [5, 11, 7]
+    outs = {}
+    for bucketed in (True, False):
+        engine = _build(model_and_params, num_slots=1, bucket_prefill=bucketed)
+        outs[bucketed] = engine.run(_reqs(cfg, lens))
+    for oa, ob in zip(outs[True], outs[False]):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens
+
+
+def test_rounds_larger_than_slot_pool_identical(model_and_params):
+    """More simultaneous requests than slots: rounds cap at the free-slot
+    count, retirement backfills, and bucketing stays invisible."""
+    cfg, _, _ = model_and_params
+    lens = [3, 8, 5, 16, 9, 12, 7]  # 7 requests through 2 slots
+    outs = {}
+    for bucketed in (True, False):
+        engine = _build(model_and_params, num_slots=2, bucket_prefill=bucketed)
+        outs[bucketed] = engine.run(_reqs(cfg, lens))
+        assert engine.cache["k"].shape[1] == 2  # pool never grew
+    for oa, ob in zip(outs[True], outs[False]):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens
+
+
+def test_padding_rows_leave_live_slots_untouched(model_and_params):
+    """A width-bucketed round (3 claimed → width 4) aims its padding row at
+    a live slot; that slot's pos and ring rows must not move."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, num_slots=4)
+    # occupy slot 0 with a long-running request
+    engine.submit(_reqs(cfg, [6], gen=16)[0])
+    engine.step()
+    pos_before = int(engine.cache["pos"][0])
+    k_before = np.asarray(engine.cache["k"][:, 0])
+    # burst of 3 → claimed slots 1,2,3, width bucket 4 → padding row on slot 0
+    for r in _reqs(cfg, [5, 5, 5], uid0=10, gen=1):
+        engine.submit(r)
+    engine._admit(engine._now(), respect_arrivals=False)
+    assert int(engine.cache["pos"][0]) == pos_before
+    np.testing.assert_array_equal(np.asarray(engine.cache["k"][:, 0]), k_before)
+    engine.run()  # drain cleanly
+
+
+# ------------------------------------------------------------- donation audit
+def test_donated_cache_buffers_die_each_step(model_and_params):
+    """Zero-copy stepping: the pre-step k/v buffers are consumed by the
+    jitted step (donated), not kept alive as copy sources."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params)
+    engine.submit(_reqs(cfg, [6], gen=3)[0])
+    old_k, old_v = engine.cache["k"], engine.cache["v"]
+    engine.step()  # admission round: donated prefill_slots consumes them
+    assert old_k.is_deleted() and old_v.is_deleted()
+    old_k, old_v = engine.cache["k"], engine.cache["v"]
+    engine.step()  # decode step: donated decode consumes them
+    assert old_k.is_deleted() and old_v.is_deleted()
+    engine.run()
+
+
+def test_no_donate_keeps_buffers(model_and_params):
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, donate_cache=False)
+    engine.submit(_reqs(cfg, [6], gen=2)[0])
+    old_k = engine.cache["k"]
+    engine.step()
+    assert not old_k.is_deleted()
+    engine.run()
+
+
+def test_donation_is_invisible_in_tokens(model_and_params):
+    cfg, _, _ = model_and_params
+    lens = [5, 9, 13, 7, 11]
+    a = _build(model_and_params, num_slots=2).run(_reqs(cfg, lens))
+    b = _build(model_and_params, num_slots=2, donate_cache=False).run(
+        _reqs(cfg, lens)
+    )
+    for oa, ob in zip(a, b):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens
+
+
+# -------------------------------------------------------- paged decode engine
+def test_paged_engine_matches_unpaged_kernel_engine(model_and_params):
+    """use_kernel + paged_decode end-to-end == the unpaged kernel engine —
+    slots at mixed depths (staggered admissions) exercise per-slot spans."""
+    cfg, _, _ = model_and_params
+    lens = [4, 12, 6, 16, 9]
+    outs = {}
+    for paged in (True, False):
+        engine = _build(
+            model_and_params, num_slots=2, use_kernel=True, paged_decode=paged
+        )
+        outs[paged] = engine.run(_reqs(cfg, lens, gen=G))
+    for oa, ob in zip(outs[True], outs[False]):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens
+
+
+def test_paged_engine_matches_jnp_engine_windowed(model_and_params):
+    """Sliding-window ring (wrap during prefill) through the paged kernel
+    matches the jnp production path token-for-token."""
+    cfg, _, _ = model_and_params
+    lens = [8, 5, 8, 7]
+    kern = _build(
+        model_and_params, num_slots=2, window=6, use_kernel=True,
+        paged_decode=True,
+    ).run(_reqs(cfg, lens))
+    ref = _build(model_and_params, num_slots=2, window=6).run(_reqs(cfg, lens))
+    for oa, ob in zip(kern, ref):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens

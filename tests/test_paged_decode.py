@@ -1,0 +1,163 @@
+"""Paged length-aware decode kernel (kernels/paged_decode.py) validation.
+
+The contract has two layers, both pinned here:
+
+* BITWISE: the paged kernel skips only pages whose every slot is invalid
+  under the ring mask, and a fully-masked chunk contributes exactly zero to
+  the online-softmax state — so paged output == unpaged ``swa_decode``
+  output bit for bit, across no-wrap / exact-fit / wrap / multi-wrap,
+  sliding-window and full attention, scalar and per-slot positions. The jnp
+  paged oracle (``ref.paged_decode_ref``) is likewise bitwise equal to the
+  plain oracle (``ref.swa_decode_ref``) — its extra live-span mask is a
+  subset of the slots the ring mask already kills.
+* NUMERIC: paged kernel vs. the jnp oracle within flash-attention
+  tolerance (online softmax reassociates the reduction).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.kernels import ops, ref
+from repro.kernels.paged_decode import paged_decode
+from repro.kernels.swa_decode import swa_decode
+
+# (cap, positions, window) covering every ring regime in one batch:
+# no-wrap (pos+1 < cap), exact-fit (pos+1 == cap), wrap (cap <= pos < 2cap),
+# multi-wrap (pos >= 2cap), and the first token (pos == 0). Caps <= 512 are
+# SINGLE-page (auto page == cap): they pin the degenerate grid. The
+# cap-1024 entries split into 2 auto pages, so rows with pos < 512 really
+# take the skip path (index-map clamp + pl.when gate + the pages >= 1
+# clip at pos == 0) — without them no bitwise pin would ever execute a
+# skipped page.
+CASES = [
+    (256, [0, 10, 255, 300, 1000], 0),     # full attention
+    (256, [0, 10, 255, 300, 1000], 64),    # sliding window < cap
+    (512, [3, 511, 512, 700, 1537], 128),  # window, incl. exact-fit + wraps
+    (128, [0, 64, 127, 128, 900], 128),    # window == cap (engine layout)
+    (1024, [0, 10, 511, 512, 1023, 1024, 2500], 0),   # multi-page skipping
+    (1024, [0, 10, 511, 512, 1023, 1024, 2500], 256),  # … with a window
+]
+
+
+def _rand(key, cap, n, hkv=2, g=4, hd=64, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (n, hkv, g, hd), dtype)
+    kc = jax.random.normal(ks[1], (n, cap, hkv, hd), dtype)
+    vc = jax.random.normal(ks[2], (n, cap, hkv, hd), dtype)
+    return q, kc, vc
+
+
+class TestPagedBitwise:
+    @pytest.mark.parametrize("cap,poss,window", CASES)
+    def test_kernel_bitwise_matches_unpaged_kernel(self, cap, poss, window):
+        """Page skipping must be invisible: same bits as full-ring streaming."""
+        q, kc, vc = _rand(jax.random.PRNGKey(cap + window), cap, len(poss))
+        pos = jnp.asarray(poss, jnp.int32)
+        paged = paged_decode(q, kc, vc, pos, window)
+        unpaged = swa_decode(q, kc, vc, pos, window)
+        np.testing.assert_array_equal(np.asarray(paged), np.asarray(unpaged))
+
+    @pytest.mark.parametrize("cap,poss,window", CASES)
+    def test_ref_bitwise_matches_plain_ref(self, cap, poss, window):
+        """The jnp paged oracle's live-span mask changes nothing."""
+        q, kc, vc = _rand(jax.random.PRNGKey(7 * cap + window), cap, len(poss))
+        pos = jnp.asarray(poss, jnp.int32)
+        a = ref.paged_decode_ref(q, kc, vc, pos, window)
+        b = ref.swa_decode_ref(q, kc, vc, pos, window)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_scalar_pos_broadcasts(self):
+        """Lockstep batches (scalar pos) take the same paged path."""
+        cap = 128
+        q, kc, vc = _rand(jax.random.PRNGKey(3), cap, 3)
+        for pos in (0, 40, 127, 128, 500):
+            paged = paged_decode(q, kc, vc, jnp.asarray(pos), 0)
+            unpaged = swa_decode(q, kc, vc, jnp.asarray(pos), 0)
+            np.testing.assert_array_equal(np.asarray(paged), np.asarray(unpaged))
+
+
+class TestPagedVsOracle:
+    @pytest.mark.parametrize("cap,poss,window", CASES)
+    def test_kernel_close_to_ref(self, cap, poss, window):
+        q, kc, vc = _rand(jax.random.PRNGKey(13 * cap + window), cap, len(poss))
+        pos = jnp.asarray(poss, jnp.int32)
+        out = paged_decode(q, kc, vc, pos, window)
+        expected = ref.swa_decode_ref(q, kc, vc, pos, window)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expected), rtol=3e-5, atol=3e-5
+        )
+
+    def test_bf16(self):
+        cap = 128
+        q, kc, vc = _rand(jax.random.PRNGKey(9), cap, 2, dtype=jnp.bfloat16)
+        pos = jnp.asarray([17, 400], jnp.int32)
+        out = paged_decode(q, kc, vc, pos, 64)
+        unpaged = swa_decode(q, kc, vc, pos, 64)
+        np.testing.assert_array_equal(
+            np.asarray(out, np.float32), np.asarray(unpaged, np.float32)
+        )
+
+    def test_explicit_page_size(self):
+        """A non-default page size partitions differently but values match —
+        chunk boundaries never change which slots are valid. page=64 over a
+        256-ring is 4 pages, so the row at pos=30 skips three of them."""
+        cap = 256
+        q, kc, vc = _rand(jax.random.PRNGKey(21), cap, 2)
+        pos = jnp.asarray([30, 700], jnp.int32)
+        a = paged_decode(q, kc, vc, pos, 0, page=64)
+        b = paged_decode(q, kc, vc, pos, 0, page=256)
+        ora = ref.swa_decode_ref(q, kc, vc, pos, 0)
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(ora), rtol=3e-5, atol=3e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5
+        )
+
+    def test_skipped_pages_bitwise_per_depth(self):
+        """Direct pin on the skip machinery: at cap 1024 (2 auto pages), a
+        batch whose rows live in 1 vs 2 pages must equal, bit for bit, the
+        unpaged kernel AND solo single-row runs of themselves (page counts
+        of OTHER rows can't leak across rows)."""
+        cap = 1024
+        q, kc, vc = _rand(jax.random.PRNGKey(33), cap, 4)
+        pos = jnp.asarray([7, 500, 600, 1500], jnp.int32)  # 1,1,2,2 pages
+        batched = paged_decode(q, kc, vc, pos, 0)
+        unpaged = swa_decode(q, kc, vc, pos, 0)
+        np.testing.assert_array_equal(np.asarray(batched), np.asarray(unpaged))
+        for r in range(4):
+            solo = paged_decode(
+                q[r : r + 1], kc[r : r + 1], vc[r : r + 1], pos[r : r + 1], 0
+            )
+            np.testing.assert_array_equal(
+                np.asarray(solo[0]), np.asarray(batched[r])
+            )
+
+    @given(pos=st.integers(0, 2000), window=st.sampled_from([0, 32, 128]))
+    @settings(max_examples=20, deadline=None)
+    def test_property_ring_positions(self, pos, window):
+        """Paged kernel == unpaged kernel for arbitrary ring positions."""
+        key = jax.random.PRNGKey(pos + 31 * window)
+        q = jax.random.normal(key, (1, 1, 2, 64))
+        kc = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 1, 64))
+        vc = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 1, 64))
+        paged = paged_decode(q, kc, vc, jnp.asarray(pos), window)
+        unpaged = swa_decode(q, kc, vc, jnp.asarray(pos), window)
+        np.testing.assert_array_equal(np.asarray(paged), np.asarray(unpaged))
+
+
+class TestOpsRouting:
+    def test_paged_flag_routes_kernel_and_ref(self):
+        cap = 128
+        q, kc, vc = _rand(jax.random.PRNGKey(5), cap, 2)
+        pos = jnp.asarray([9, 300], jnp.int32)
+        k_paged = ops.swa_decode_attention(
+            q, kc, vc, pos, 0, use_kernel=True, paged=True
+        )
+        k_plain = ops.swa_decode_attention(q, kc, vc, pos, 0, use_kernel=True)
+        r_paged = ops.swa_decode_attention(q, kc, vc, pos, 0, paged=True)
+        r_plain = ops.swa_decode_attention(q, kc, vc, pos, 0)
+        np.testing.assert_array_equal(np.asarray(k_paged), np.asarray(k_plain))
+        np.testing.assert_array_equal(np.asarray(r_paged), np.asarray(r_plain))
