@@ -47,8 +47,9 @@ def decode_occupancy_sweep(
     g: int = 2, hd: int = 64, iters: int = 5,
 ) -> dict:
     """SHARED probe (also driven by serve_bench): time the paged and the
-    unpaged decode kernel over each ``occupancies[label]`` position vector,
-    returning ``{f"{paged|unpaged}_{label}_us": µs}``.
+    unpaged decode kernel, plus the PAGE-TABLE kernel over an equivalent
+    shared pool, for each ``occupancies[label]`` position vector, returning
+    ``{f"{paged|unpaged|table}_{label}_us": µs}``.
 
     The paged kernel's win scales with how much of the ring the live spans
     leave dead; the unpaged kernel streams cap slots per row regardless,
@@ -56,28 +57,61 @@ def decode_occupancy_sweep(
     occupancy both kernels visit every page — any residual gap there is
     interpret-mode dispatch overhead, not page skipping, and should be
     read as noise. The cap must split into several auto-sized (512-slot)
-    pages for skipping to exist at all."""
+    pages for skipping to exist at all.
+
+    The ``table_*`` rows run the page-table mode (kernels/paged_decode.py
+    pool layout) with each slot's pages deliberately SCATTERED across the
+    pool — the indirection cost on top of ring-paged skipping is exactly
+    the table_* − paged_* gap."""
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (slots, hkv, g, hd), jnp.bfloat16)
     kc = jax.random.normal(ks[1], (slots, cap, hkv, hd), jnp.bfloat16)
     vc = jax.random.normal(ks[2], (slots, cap, hkv, hd), jnp.bfloat16)
+    # page-table layout of the SAME values: slot s's logical page j lands
+    # at pool page 1 + j·slots + s (strided interleave — every logical
+    # step jumps ``slots`` pages, the worst case for a contiguous reader;
+    # pool page 0 is the reserved scratch page)
+    # same page size the contiguous paged kernel auto-picks (_chunk), so
+    # the table_* − paged_* gap isolates indirection, not partitioning
+    from repro.kernels.swa_decode import _chunk
+
+    page = _chunk(cap)
+    t_w = cap // page
+    flat_k = kc.reshape(slots * t_w, page, hkv, hd)   # row s·t_w + j
+    flat_v = vc.reshape(slots * t_w, page, hkv, hd)
+    idx = jnp.arange(slots * t_w)
+    dest = 1 + (idx % t_w) * slots + idx // t_w       # (s, j) → 1 + j·slots + s
+    pool_shape = (1 + slots * t_w, page, hkv, hd)
+    pool_k = jnp.zeros(pool_shape, jnp.bfloat16).at[dest].set(flat_k)
+    pool_v = jnp.zeros(pool_shape, jnp.bfloat16).at[dest].set(flat_v)
+    table = dest.reshape(slots, t_w).astype(jnp.int32)
     # one jitted fn per variant, shared across labels — pos shape/dtype is
     # identical for every label, so each compiles exactly once
     fns = {
-        paged: jax.jit(
-            lambda p, paged=paged: ops.swa_decode_attention(
-                q, kc, vc, p, 0, use_kernel=True, paged=paged, interpret=True
+        "paged": jax.jit(
+            lambda p: ops.swa_decode_attention(
+                q, kc, vc, p, 0, use_kernel=True, paged=True, interpret=True
             )
-        )
-        for paged in (True, False)
+        ),
+        "unpaged": jax.jit(
+            lambda p: ops.swa_decode_attention(
+                q, kc, vc, p, 0, use_kernel=True, paged=False, interpret=True
+            )
+        ),
+        "table": jax.jit(
+            lambda p: ops.swa_decode_attention(
+                q, pool_k, pool_v, p, 0, use_kernel=True, table=table,
+                interpret=True,
+            )
+        ),
     }
     out = {}
     for label, pos in occupancies.items():
         pos = jnp.asarray(pos, jnp.int32)
-        for paged, fn in fns.items():
+        for variant, fn in fns.items():
             us = bench_min(fn, pos, iters=iters)
-            out[f"{'paged' if paged else 'unpaged'}_{label}_us"] = us
+            out[f"{variant}_{label}_us"] = us
     return out
 
 

@@ -14,18 +14,23 @@ as back-to-back fixed batches. The headline numbers:
 * ``ttft_p50`` — arrival→first-token seconds
 
 ``--burst N`` switches to a burst-arrival trace (N simultaneous arrivals
-per burst) and runs the engine three ways — shape-bucketed batched prefill
-(production default), unbucketed batched, and one-dispatch-per-request —
-reporting ``prefill_dispatches``, ``prefill_compiles`` (jit
-specializations; the bucketed engine's are bounded by the bucket ladder),
-latency p50/p95 and TTFT p50/p95 for each. Burst mode also probes the
-paged decode kernel in isolation: mean decode-step time at low vs. full
-ring occupancy, paged vs. unpaged (page skipping only helps rows far from
+per burst) and runs the engine five ways — PAGED KV cache (shared page
+pool + per-slot page tables, the serve-CLI default), paged with a TIGHT
+(oversubscribed) pool that forces watermark admission + youngest-slot
+preemption, ring-cache shape-bucketed batched prefill, unbucketed batched,
+and one-dispatch-per-request — asserting all five emit identical greedy
+tokens and reporting ``prefill_dispatches``, ``prefill_compiles``,
+latency/TTFT percentiles, and (paged variants) pool occupancy +
+preemption counts. Burst mode also probes the paged decode kernel in
+isolation: mean decode-step time at low vs. full ring occupancy, paged
+vs. unpaged vs. page-table mode (page skipping only helps rows far from
 wrap, so the low-occupancy row is where the win shows).
 
 ``--smoke`` is the CI-sized burst run. Besides the usual
-``benchmarks/results.json`` entry it writes ``BENCH_serve.json`` at the
-repo root — the perf-trajectory seed future PRs diff against.
+``benchmarks/results.json`` entry it APPENDS a timestamped entry to
+``BENCH_serve.json`` at the repo root — the perf trajectory future PRs
+diff against (schema 2: ``{"schema": 2, "entries": [...]}``; a schema-1
+file is migrated by wrapping its single snapshot as the first entry).
 
     PYTHONPATH=src python -m benchmarks.serve_bench --requests 12 --rate 2.0
     PYTHONPATH=src python -m benchmarks.serve_bench --burst 4 --requests 12
@@ -33,6 +38,7 @@ repo root — the perf-trajectory seed future PRs diff against.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import time
@@ -87,6 +93,8 @@ def bench_engine(args) -> dict:
     engine = ServeEngine(
         model, params, num_slots=args.slots, max_seq=max_seq,
         window=args.window, use_kernel=args.use_kernel, prefill=args.prefill,
+        paged_cache=args.paged_cache, page_size=args.page_size,
+        num_pages=args.num_pages,
     )
     reqs = poisson_trace(
         cfg, n_requests=args.requests, rate=args.rate,
@@ -119,6 +127,7 @@ def bench_engine(args) -> dict:
         "latency_p50": float(np.percentile(lat, 50)),
         "latency_p95": float(np.percentile(lat, 95)),
         "ttft_p50": float(np.percentile(ttft, 50)),
+        "pool": engine.pool_stats,
     }
 
 
@@ -176,11 +185,16 @@ def bench_decode_occupancy(
 
 
 BURST_VARIANTS = (
-    # label, batch_prefill, bucket_prefill
-    ("batched", True, True),             # production default
-    ("batched_unbucketed", True, False),  # pre-bucketing contrast
-    ("per_request", False, False),       # one dispatch per request
+    # label, batch_prefill, bucket_prefill, paged_cache, tight_pool
+    ("paged", True, True, True, False),            # serve-CLI default
+    ("paged_tight", True, True, True, True),       # oversubscribed pool:
+    #                                                watermark + preemption
+    ("batched", True, True, False, False),         # ring-cache contrast
+    ("batched_unbucketed", True, False, False, False),
+    ("per_request", False, False, False, False),   # one dispatch per request
 )
+
+TIGHT_POOL_FRACTION = 0.5  # tight pool ≈ half of ring-equivalent capacity
 
 
 def bench_burst(args) -> dict:
@@ -200,12 +214,19 @@ def bench_burst(args) -> dict:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     max_seq = max(args.prompt_lens) + args.gen
+    pages_per_ring = -(-max_seq // args.page_size)
+    tight_pages = max(
+        pages_per_ring + 1,
+        int(args.slots * pages_per_ring * TIGHT_POOL_FRACTION),
+    ) + 1
     out = {}
-    for label, batched, bucketed in BURST_VARIANTS:
+    for label, batched, bucketed, paged, tight in BURST_VARIANTS:
         engine = ServeEngine(
             model, params, num_slots=args.slots, max_seq=max_seq,
             window=args.window, use_kernel=args.use_kernel, prefill="chunked",
             batch_prefill=batched, bucket_prefill=bucketed,
+            paged_cache=paged, page_size=args.page_size,
+            num_pages=tight_pages if tight else 0,
         )
         reqs = burst_trace(
             cfg, n_requests=args.requests, burst_size=args.burst,
@@ -238,14 +259,22 @@ def bench_burst(args) -> dict:
             "latency_p95": float(np.percentile(lat, 95)),
             "ttft_p50": float(np.percentile(ttft, 50)),
             "ttft_p95": float(np.percentile(ttft, 95)),
+            "pool": engine.pool_stats,
             "generated": [o.tokens for o in outs],
         }
     ref = out["batched"]["generated"]
     for label, m in out.items():
+        # the paged-vs-ring probe: EVERY variant — paged, tight-pool paged
+        # (preempting), and all three ring admissions — must emit the same
+        # greedy tokens; memory layout and scheduling are invisible
         assert m["generated"] == ref, (
             f"{label} admission changed greedy output"
         )
         del m["generated"]
+    assert (
+        out["paged_tight"]["pool"]["preemptions"] > 0
+        or out["paged_tight"]["pool"]["occupancy_max"] >= 0.5
+    ), "tight pool exercised neither preemption nor high occupancy"
     assert (
         out["batched"]["prefill_compiles"]
         <= out["batched_unbucketed"]["prefill_compiles"]
@@ -265,18 +294,29 @@ def bench_burst(args) -> dict:
 
 
 def write_bench_seed(res: dict) -> None:
-    """Persist the perf-trajectory seed at the repo root. Schema is flat so
-    future PRs can diff field-by-field."""
+    """APPEND a timestamped entry to the perf trajectory at the repo root.
+
+    The file is ``{"schema": 2, "entries": [...]}`` — one entry per
+    ``--smoke`` run, oldest first, so the repo root carries the actual
+    perf history PR over PR instead of a single overwritten snapshot. A
+    legacy schema-1 file (one flat snapshot) is migrated in place: its
+    snapshot becomes the first entry (timestamp null). Entries are flat so
+    future PRs diff field-by-field."""
     b = res["batched"]
+    pg = res["paged"]
+    tight = res["paged_tight"]
     occ = res["decode_occupancy"]
-    seed = {
-        "schema": 1,
+    entry = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
         "mode": res["mode"],
         "slots": res["slots"],
         "requests": res["requests"],
         "prompt_lens": res["prompt_lens"],
         "gen_tokens": res["gen_tokens"],
         "tokens_per_second": b["tokens_per_second"],
+        "tokens_per_second_paged": pg["tokens_per_second"],
         "latency_p50": b["latency_p50"],
         "latency_p95": b["latency_p95"],
         "ttft_p95": b["ttft_p95"],
@@ -289,13 +329,34 @@ def write_bench_seed(res: dict) -> None:
             "prefill_compiles"
         ],
         "compiles": b["compiles"],
+        "pool_occupancy_mean": pg["pool"]["occupancy_mean"],
+        "pool_occupancy_max": pg["pool"]["occupancy_max"],
+        "pool_preemptions": pg["pool"]["preemptions"],
+        "pool_tight_occupancy_max": tight["pool"]["occupancy_max"],
+        "pool_tight_preemptions": tight["pool"]["preemptions"],
         "decode_step_paged_low_us": occ["paged_low_us"],
         "decode_step_unpaged_low_us": occ["unpaged_low_us"],
         "decode_step_paged_full_us": occ["paged_full_us"],
         "decode_step_unpaged_full_us": occ["unpaged_full_us"],
+        "decode_step_table_low_us": occ.get("table_low_us"),
+        "decode_step_table_full_us": occ.get("table_full_us"),
     }
+    trajectory = {"schema": 2, "entries": []}
+    if os.path.exists(BENCH_SEED_PATH):
+        try:
+            with open(BENCH_SEED_PATH) as f:
+                prior = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prior = None
+        if isinstance(prior, dict) and isinstance(prior.get("entries"), list):
+            trajectory = prior
+        elif isinstance(prior, dict):  # schema-1 single snapshot
+            prior.setdefault("timestamp", None)
+            trajectory["entries"].append(prior)
+    trajectory["schema"] = 2
+    trajectory["entries"].append(entry)
     with open(BENCH_SEED_PATH, "w") as f:
-        json.dump(seed, f, indent=1)
+        json.dump(trajectory, f, indent=1)
         f.write("\n")
 
 
@@ -333,6 +394,13 @@ def _parser():
     ap.add_argument("--prefill", choices=("chunked", "interleaved"),
                     default="chunked")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--no-paged-cache", dest="paged_cache",
+                    action="store_false",
+                    help="[poisson] ring KV caches instead of the paged pool")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per physical KV page (paged variants)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="[poisson] pool pages (0 = ring-equivalent)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-oracle", action="store_true")
     ap.add_argument("--burst", type=int, default=0,
@@ -362,6 +430,7 @@ def run(argv: list[str] | None = None):
     if args.burst > 0:
         res = bench_burst(args)
         b, u, p = res["batched"], res["batched_unbucketed"], res["per_request"]
+        pg, tight = res["paged"], res["paged_tight"]
         occ = res["decode_occupancy"]
         emit(
             "serve_burst_prefill",
@@ -371,6 +440,17 @@ def run(argv: list[str] | None = None):
             f"{b['prefill_compiles']} (bucketed) vs {u['prefill_compiles']} "
             f"(unbucketed); ttft95 {b['ttft_p95']:.3f}s vs "
             f"{p['ttft_p95']:.3f}s",
+        )
+        emit(
+            "serve_paged_pool",
+            1e6 * pg["wall_seconds"] / max(pg["engine_steps"], 1),
+            f"paged {pg['tokens_per_second']:.1f} tok/s occ "
+            f"{pg['pool']['occupancy_max']:.0%} "
+            f"{pg['pool']['preemptions']} preempt; tight pool "
+            f"({tight['pool']['allocatable_pages']} pages) occ "
+            f"{tight['pool']['occupancy_max']:.0%} "
+            f"{tight['pool']['preemptions']} preempt — tokens identical "
+            "to ring",
         )
         emit(
             "serve_decode_occupancy",

@@ -15,6 +15,12 @@ with the Pallas flash-decode kernel (interpret mode on CPU) to show both
 thread through the engine unchanged, then serves a burst of simultaneous
 arrivals with batched multi-slot prefill (one forward per admission round)
 and per-request temperature/top-k/top-p sampling.
+
+The finale is the PAGED KV cache: the same trace through a shared page
+pool (token-identical to the ring engine), then an OVERSUBSCRIBED pool —
+half the memory, watermark admission, youngest-slot preemption with
+token-exact resume — plus one request whose prompt+gen exceeds max_seq,
+which ring mode must reject and the paged pool serves.
 """
 import time
 
@@ -120,6 +126,50 @@ def main():
     print(
         f"\nprefill dispatches for {len(souts)} burst requests: "
         f"{engine_s.prefill_dispatches} (batched multi-slot prefill)"
+    )
+
+    # paged KV cache: one shared page pool + per-slot page tables replaces
+    # the per-slot rings — same tokens, bit for bit
+    engine_p = ServeEngine(
+        model, params, num_slots=SLOTS, max_seq=max_seq,
+        paged_cache=True, page_size=8,
+    )
+    pouts = serve(engine_p, build_trace(cfg), "paged KV pool (ring-equivalent)")
+    agree = all(a.tokens == b.tokens for a, b in zip(base, pouts))
+    print(f"\npaged engine token-identical to ring engine: {agree}")
+
+    # oversubscribed: half the pages. Admission throttles on a watermark,
+    # decode OOM preempts the youngest slot back to the queue, and resumed
+    # requests still finish with exactly the same tokens.
+    pages_auto = engine_p.num_pages
+    engine_t = ServeEngine(
+        model, params, num_slots=SLOTS, max_seq=max_seq,
+        paged_cache=True, page_size=8, num_pages=max(4, pages_auto // 2),
+        watermark_pages=1,
+    )
+    touts = serve(
+        engine_t, build_trace(cfg),
+        f"oversubscribed pool · {engine_t.pool.capacity} pages "
+        f"(vs {pages_auto - 1} ring-equivalent)",
+    )
+    agree = all(a.tokens == b.tokens for a, b in zip(base, touts))
+    stats = engine_t.pool_stats
+    print(
+        f"\n{stats['preemptions']} preemptions, peak occupancy "
+        f"{stats['occupancy_max']:.0%} — tokens still identical: {agree}"
+    )
+
+    # beyond ring capacity: prompt + gen > max_seq has no slot to fit in
+    # ring mode (submit raises) but spans the shared pool in paged mode
+    long_req = build_trace(cfg, n=1, seed=7)[0]
+    long_req.max_new_tokens = max_seq  # prompt + gen ≈ 2× max_seq
+    long_req.arrival_time = 0.0
+    louts = engine_p.run([long_req])
+    print(
+        f"\noversized request (prompt {len(long_req.prompt)} + gen "
+        f"{long_req.max_new_tokens} > max_seq {max_seq}): paged engine "
+        f"generated {len(louts[0].tokens)} tokens from a "
+        f"{engine_p.cap}-token logical ring"
     )
 
 

@@ -122,6 +122,7 @@ def swa_decode_attention(
     *,
     use_kernel: bool = False,
     paged: bool = False,
+    table: jax.Array | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     """(B, Hkv, G, hd) x ring cache (B, C, Hkv, hd) → (B, Hkv, G, hd).
@@ -129,7 +130,20 @@ def swa_decode_attention(
     ``pos`` is () for a lockstep batch or (B,) for per-slot positions
     (continuous-batching engine). ``paged=True`` selects the length-aware
     paged variant (kernels/paged_decode.py): rows far from ring wrap skip
-    dead KV pages entirely — bitwise-identical output, less work."""
+    dead KV pages entirely — bitwise-identical output, less work.
+
+    ``table`` switches to page-table mode: k/v are a SHARED physical pool
+    (P, page, Hkv, hd) and ``table`` (B, T) maps each row's logical pages
+    into it (capacity = T·page). The kernel reads the pool through
+    scalar-prefetched table rows; the reference path gathers the pages
+    into contiguous rings first — both bitwise-match the ring semantics."""
+    if table is not None:
+        if use_kernel:
+            return _paged.paged_decode(
+                q, k_cache, v_cache, pos, window, table=table,
+                interpret=interpret,
+            )
+        return _ref.paged_table_decode_ref(q, k_cache, v_cache, pos, table, window)
     if use_kernel:
         if paged:
             return _paged.paged_decode(

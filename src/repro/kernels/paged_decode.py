@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: length-aware paged flash-decode over ring-buffer KV.
+"""Pallas TPU kernel: length-aware paged flash-decode over ring-buffer KV,
+in two flavors — per-row contiguous rings and a SHARED page-table pool.
 
 ``swa_decode`` streams EVERY cache chunk for every batch row, so a slot
 holding 8 tokens in a 512-slot ring pays the same HBM traffic and MXU time
@@ -29,6 +30,23 @@ Note ``live_pages`` depends on ``pos`` only through ``min(pos + 1, C)``:
 once a row's ring wraps, every page is live and the kernel degrades to
 exactly ``swa_decode``. The win is the engine's common case — short or
 freshly admitted slots far from wrap.
+
+Page-table mode (``table`` passed): the KV cache is ONE shared pool of
+physical pages, shape (P, page, Hkv, hd) with no batch dimension, and
+``table`` is a (B, T) int32 map — row b's logical page j lives at pool
+page ``table[b, j]``, so a slot's pages may sit ANYWHERE in the pool
+(vLLM-PagedAttention layout). The table rows are scalar-prefetched along
+with ``pos``/``live_pages`` and drive the k/v DMA index map directly:
+
+    kv_block(b, h, j) = pool[table[b, min(j, live_pages[b]-1)]]
+
+Everything else — the ring-position validity mask over LOGICAL slot
+indices ``j·page + i`` with capacity C = T·page, the live-page gating, the
+online-softmax state — is identical to ring mode, so the output is bitwise
+equal to the contiguous paged kernel at the SAME page size run over the
+gathered cache ``pool[table].reshape(B, C, Hkv, hd)`` (tests pin exactly
+that; comparing against ``swa_decode`` instead is only allclose when the
+page size differs from its auto chunk — online softmax reassociates).
 """
 from __future__ import annotations
 
@@ -45,9 +63,14 @@ NEG = -2.0**30
 
 
 def _paged_kernel(
-    pos_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, page: int, cap: int, window: int, scale: float,
+    *refs, page: int, cap: int, window: int, scale: float,
 ):
+    # refs = (pos_ref, pages_ref, [table_ref,] q_ref, k_ref, v_ref,
+    #         o_ref, m_ref, l_ref, acc_ref) — the optional table_ref (page-
+    #         table mode) is consumed by the kv index maps, not the body:
+    #         the body masks LOGICAL slot indices, identical in both modes.
+    pos_ref, pages_ref = refs[0], refs[1]
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs[-7:]
     b = pl.program_id(0)
     j = pl.program_id(2)
     n_pages = cap // page
@@ -97,15 +120,20 @@ def _paged_kernel(
 @functools.partial(jax.jit, static_argnames=("window", "page", "interpret"))
 def paged_decode(
     q: jax.Array,          # (B, Hkv, G, hd)
-    k_cache: jax.Array,    # (B, C, Hkv, hd)
-    v_cache: jax.Array,    # (B, C, Hkv, hd)
+    k_cache: jax.Array,    # (B, C, Hkv, hd) — or (P, page, Hkv, hd) pool
+    v_cache: jax.Array,    # same layout as k_cache
     pos: jax.Array,        # () or (B,) i32 — tokens already cached per row
     window: int = 0,
     *,
     page: int = 0,         # 0 = auto (largest of 512/256/128/64 dividing C)
+    table: jax.Array | None = None,  # (B, T) i32 page table → pool mode
     interpret: bool = True,
 ) -> jax.Array:
     b, hkv, g, hd = q.shape
+    if table is not None:
+        return _table_decode(
+            q, k_cache, v_cache, pos, table, window=window, interpret=interpret
+        )
     cap = k_cache.shape[1]
     pg = page or _chunk(cap)
     assert cap % pg == 0, f"cap {cap} not divisible by page {pg}"
@@ -146,3 +174,62 @@ def paged_decode(
         grid_spec=grid_spec,
         interpret=interpret,
     )(pos_b, pages, q, k_cache, v_cache)
+
+
+def _table_decode(
+    q: jax.Array,          # (B, Hkv, G, hd)
+    k_pool: jax.Array,     # (P, page, Hkv, hd) shared physical page pool
+    v_pool: jax.Array,     # (P, page, Hkv, hd)
+    pos: jax.Array,        # () or (B,) i32
+    table: jax.Array,      # (B, T) i32 — logical page j of row b lives at
+    #                        pool page table[b, j]; entries past the row's
+    #                        live span are never dereferenced (index map
+    #                        clamps to the last live page first)
+    *,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hkv, g, hd = q.shape
+    p_total, pg = k_pool.shape[0], k_pool.shape[1]
+    t_w = table.shape[1]
+    cap = t_w * pg         # logical ring capacity per row
+    scale = hd**-0.5
+
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    live = jnp.minimum(pos_b + 1, cap)
+    pages = jnp.clip((live + pg - 1) // pg, 1, t_w)
+    table = jnp.asarray(table, jnp.int32)
+
+    kernel = functools.partial(
+        _paged_kernel, page=pg, cap=cap, window=window, scale=scale
+    )
+
+    def kv_map(b_, h, j, pos_ref, pages_ref, table_ref):
+        # page-table indirection: logical page j of row b_ lives wherever
+        # the slot's table row says; dead logical pages re-read the last
+        # live one (clamp BEFORE the table lookup, so an unallocated table
+        # entry — by convention 0, the reserved scratch page — is never
+        # the target of a fresh DMA for a live computation)
+        return (table_ref[b_, jnp.minimum(j, pages_ref[b_] - 1)], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, t_w),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, pg, 1, hd), kv_map),
+            pl.BlockSpec((1, pg, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(pos_b, pages, table, q, k_pool, v_pool)

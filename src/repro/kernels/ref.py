@@ -112,6 +112,38 @@ def paged_decode_ref(
     return out.astype(q.dtype)
 
 
+def gather_pages_ref(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Materialize per-row contiguous ring caches from a shared page pool.
+
+    pool: (P, page, Hkv, hd) physical pages; table: (B, T) i32 page map →
+    (B, T·page, Hkv, hd). This is the layout bridge between the page-table
+    world and every contiguous-ring oracle: logical slot c of row b is
+    ``pool[table[b, c // page], c % page]``."""
+    b, t_w = table.shape
+    page, hkv, hd = pool.shape[1:]
+    return pool[table].reshape(b, t_w * page, hkv, hd)
+
+
+def paged_table_decode_ref(
+    q: jax.Array,       # (B, Hkv, G, hd)
+    k_pool: jax.Array,  # (P, page, Hkv, hd) shared physical page pool
+    v_pool: jax.Array,  # (P, page, Hkv, hd)
+    pos: jax.Array,     # () or (B,)  tokens already cached per row
+    table: jax.Array,   # (B, T) i32 page table
+    window: int,        # attention span (0 = all cached)
+) -> jax.Array:
+    """Page-table decode oracle (kernels/paged_decode.py table mode).
+
+    Gather each row's pages into a contiguous ring, then run the plain ring
+    oracle — page placement is pure layout, so the table kernel must be
+    bitwise equal to ``swa_decode`` over this gathered cache (tests pin
+    it). Capacity is implied by the table width: C = T · page."""
+    return swa_decode_ref(
+        q, gather_pages_ref(k_pool, table), gather_pages_ref(v_pool, table),
+        pos, window,
+    )
+
+
 def flash_prefill_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     window: int = 0,

@@ -33,9 +33,24 @@ sized for this repo's CPU-verifiable models:
   every jitted step (no per-step full-cache copy); and with the kernel on,
   decode runs the PAGED variant (``kernels/paged_decode.py``) so each slot
   skips ring pages beyond its live span.
+* PAGED KV CACHE (``paged_cache=True``): instead of per-slot contiguous
+  rings sized ``num_slots × max_seq``, ONE shared pool of fixed-size
+  physical pages plus per-slot page tables (vLLM-PagedAttention layout).
+  A host-side ``PagePool`` free-list allocator hands pages out at
+  admission (enough for the prompt) and LAZILY one page per slot as
+  decode crosses page boundaries; retirement frees them for immediate
+  reuse. When the pool runs dry mid-decode the YOUNGEST slot is preempted
+  back to the head of the waiting queue (its pages freed, its generated
+  tokens carried in a resume record) and re-admitted later by re-prefilling
+  prompt+generated — token-identical to an uninterrupted run. The
+  ``prompt + gen ≤ max_seq`` admission guard disappears: a sequence is
+  bounded by POOL pages (logical capacity = table_width × page_size), so
+  one request may stretch across memory that ring mode would have
+  statically split across all slots. The ring path stays as the oracle —
+  paged output is pinned bitwise token-identical to it.
 
     PYTHONPATH=src python -m repro.launch.serve --continuous \
-        --arch stablelm-1.6b --slots 4 --requests 8
+        --arch stablelm-1.6b --slots 4 --requests 8 --page-size 16
 """
 from __future__ import annotations
 
@@ -82,6 +97,94 @@ def bucket_length(s: int, floor: int = LEN_BUCKET_MIN) -> int:
     while length < s:
         length *= 2
     return length
+
+
+class AdmissionError(ValueError):
+    """Structured submit-time rejection.
+
+    Raised by ``ServeEngine.submit`` for requests the engine could NEVER
+    serve (they exceed static capacity) — rejecting at submit keeps a
+    doomed request out of the queue entirely, so a scheduling round can
+    never wedge on it. ``uid`` and ``reason`` let callers map the failure
+    back to the request without parsing the message; ``reason`` is one of
+    ``"exceeds_max_seq"`` (ring mode) or ``"exceeds_pool"`` (paged mode).
+    Subclasses ValueError so pre-existing callers' handlers keep working.
+    """
+
+    def __init__(self, uid: int, reason: str, message: str):
+        super().__init__(message)
+        self.uid = uid
+        self.reason = reason
+
+
+class PagePool:
+    """Host-side free-list allocator over the shared physical KV page pool.
+
+    Page 0 is the reserved SCRATCH page: it is never handed out, and every
+    unallocated page-table entry points at it, so stray writes (retired
+    slots whose ``pos`` keeps drifting inside the jitted decode step, tail
+    entries of a prefill scatter) land somewhere harmless.
+
+    The free list is a LIFO stack: ``free`` pushes, ``alloc`` pops, so the
+    MOST RECENTLY freed pages are reused first (they are the likeliest to
+    still be resident in any cache hierarchy) — ``tests/test_page_pool.py``
+    pins this order. A fresh pool allocates pages in ascending order
+    1, 2, …, P-1.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page 0 is reserved), got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # stack: pop() yields 1, 2, 3, … on a fresh pool
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._held: set[int] = set()
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the scratch page is not)."""
+        return self.num_pages - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - self.available
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages, or None (and no partial allocation) if the pool
+        cannot cover the request."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"double/foreign free of page {p}")
+            self._held.discard(p)
+            self._free.append(p)
+
+
+@dataclasses.dataclass
+class _ResumeState:
+    """Generation state of a preempted request, carried across its trip
+    back through the waiting queue. Re-admission prefills prompt +
+    generated[:-1] in one chunked forward, restores these fields, and
+    continues decoding exactly where the preempted slot stopped."""
+    generated: list[int]
+    key: jax.Array | None
+    first_token_time: float
+    admit_time: float
 
 
 @dataclasses.dataclass
@@ -133,6 +236,16 @@ class _Slot:
     admit_time: float
     first_token_time: float = -1.0
     key: jax.Array | None = None  # per-REQUEST sampling stream (None = greedy)
+    feed: np.ndarray | None = None  # tokens to prefill / teacher-force —
+    #                                 the prompt, or prompt + generated[:-1]
+    #                                 when resuming a preempted request
+    resumed: bool = False         # suppress the next emission: the token is
+    #                               already known (generated[-1])
+    pos_host: int = 0             # host mirror of the slot's write position
+    #                               (tokens written so far) — drives lazy
+    #                               page allocation in paged mode
+    seq: int = 0                  # admission sequence number (preemption
+    #                               picks the YOUNGEST = max seq)
 
 
 class ServeEngine:
@@ -173,6 +286,26 @@ class ServeEngine:
         the ring buffers in place instead of copying the full cache through
         every step. The engine never re-reads a donated buffer: ``.cache``
         is rebound to the step's output before any other access.
+    paged_cache : replace the per-slot contiguous rings with ONE shared
+        pool of physical pages + per-slot page tables. Decoupling logical
+        sequence state from physical placement removes the
+        ``prompt + gen <= max_seq`` admission guard (sequences are bounded
+        by pool pages) and lets heterogeneous traffic share memory that
+        ring mode statically splits ``num_slots`` ways. Token-identical to
+        ring mode on any trace both can serve.
+    page_size : tokens per physical page (paged mode). Small pages waste
+        less memory on partial tails but make tables longer and decode DMA
+        more scattered; large pages amortize indirection but strand up to
+        ``page_size - 1`` dead token slots per sequence.
+    num_pages : total physical pages INCLUDING the reserved scratch page 0.
+        0 (default) sizes the pool to ring-equivalent capacity:
+        ``num_slots * ceil(capacity / page_size) + 1``. Undersizing it
+        oversubscribes memory — admission throttles on a watermark and
+        decode OOM preempts the youngest slot.
+    watermark_pages : free pages admission must leave in reserve while any
+        OTHER slot is live (paged mode) — headroom that lets running slots
+        keep decoding without immediate preemption. Waived when nothing
+        else is live, so progress is always possible.
     eos_id : optional token id that retires a sequence early.
     seed : engine-level sampling seed; requests without an explicit
         ``SamplingParams.seed`` draw from PRNGKey(seed) folded with their
@@ -194,6 +327,10 @@ class ServeEngine:
         bucket_prefill: bool = True,
         paged_decode: bool = True,
         donate_cache: bool = True,
+        paged_cache: bool = False,
+        page_size: int = 16,
+        num_pages: int = 0,
+        watermark_pages: int = 0,
         eos_id: int | None = None,
         seed: int = 0,
         time_fn: Callable[[], float] | None = None,
@@ -229,7 +366,51 @@ class ServeEngine:
         self._time_fn = time_fn or time.monotonic
         self._t0 = self._time_fn()
 
-        self.cache = model.init_slot_cache(params, num_slots, max_seq, window=window)
+        self.paged_cache = paged_cache
+        self.preemptions = 0
+        self.occupancy: list[float] = []  # pool fill fraction per decode step
+        if paged_cache:
+            if model.init_paged_cache is None or model.prefill_slots is None:
+                raise ValueError(
+                    f"arch {model.cfg.name!r} has no paged-cache API; "
+                    "use the contiguous ring engine"
+                )
+            cap_ring = window if (0 < window < max_seq) else max_seq
+            pages_per_ring = -(-cap_ring // page_size)
+            if num_pages <= 0:
+                # ring-equivalent capacity: same total KV memory as the
+                # contiguous engine, now shareable across slots
+                num_pages = num_slots * pages_per_ring + 1
+            self.page_size = page_size
+            self.num_pages = num_pages
+            # logical ring capacity per slot: the window when sliding-window
+            # attention bounds context anyway, else the WHOLE allocatable
+            # pool — one request may stretch across every page
+            self.table_width = (
+                pages_per_ring if (0 < window < max_seq) else num_pages - 1
+            )
+            self.cap = self.table_width * page_size
+            if num_pages - 1 < self.table_width:
+                raise ValueError(
+                    f"num_pages {num_pages} cannot back a table of "
+                    f"{self.table_width} pages (window {window})"
+                )
+            self.pool = PagePool(num_pages, page_size)
+            self.watermark_pages = watermark_pages
+            self._table_np = np.zeros((num_slots, self.table_width), np.int32)
+            self._table_dirty = False
+            self._slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
+            self._resume: dict[int, _ResumeState] = {}
+            self._admit_seq = 0
+            self.cache = model.init_paged_cache(
+                params, num_slots, num_pages, page_size, self.table_width,
+                window=window,
+            )
+        else:
+            self.pool = None
+            self.cache = model.init_slot_cache(
+                params, num_slots, max_seq, window=window
+            )
         # Every hot-path jit donates the cache pytree (argument 1): the ring
         # buffers are updated in place instead of being functionally copied
         # through each step. Each wrapper body runs exactly once per input
@@ -302,6 +483,10 @@ class ServeEngine:
         self.slot_history.clear()
         self.steps = 0
         self.prefill_dispatches = 0
+        self.preemptions = 0
+        self.occupancy = []
+        if self.paged_cache:
+            self.pool.peak_in_use = self.pool.in_use
         self.reset_clock()
 
     def warm(self, prompt_lens, *, gen_tokens: int = 2,
@@ -351,6 +536,25 @@ class ServeEngine:
         return self._compiles["prefill_slots"] + self._compiles["prefill"]
 
     @property
+    def pool_stats(self) -> dict | None:
+        """Paged-pool occupancy and preemption counters (None in ring
+        mode). ``occupancy_*`` summarize the per-decode-step pool fill
+        fraction since the last ``reset_metrics``."""
+        if not self.paged_cache:
+            return None
+        occ = self.occupancy
+        return {
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "allocatable_pages": self.pool.capacity,
+            "pages_in_use": self.pool.in_use,
+            "peak_pages_in_use": self.pool.peak_in_use,
+            "preemptions": self.preemptions,
+            "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "occupancy_max": float(np.max(occ)) if occ else 0.0,
+        }
+
+    @property
     def has_work(self) -> bool:
         return bool(self.waiting) or any(s is not None for s in self.slots)
 
@@ -363,11 +567,26 @@ class ServeEngine:
         return min((r.arrival_time for r in self.waiting), default=None)
 
     def submit(self, req: Request) -> None:
-        if self.window == 0 and len(req.prompt) + req.max_new_tokens > self.max_seq:
-            raise ValueError(
+        """Enqueue a request, or reject it with a structured
+        ``AdmissionError`` if the engine could NEVER serve it. Rejection
+        happens HERE, not mid-``_admit``: a doomed request must not enter
+        the queue, where it would wedge a scheduling round at the head of
+        FIFO admission. A rejected submit leaves the engine fully usable."""
+        need = len(req.prompt) + req.max_new_tokens
+        if self.paged_cache:
+            if self.window == 0 and need > self.cap:
+                raise AdmissionError(
+                    req.uid, "exceeds_pool",
+                    f"request {req.uid}: prompt {len(req.prompt)} + gen "
+                    f"{req.max_new_tokens} exceeds pool capacity {self.cap} "
+                    f"tokens ({self.pool.capacity} pages × {self.page_size})",
+                )
+        elif self.window == 0 and need > self.max_seq:
+            raise AdmissionError(
+                req.uid, "exceeds_max_seq",
                 f"request {req.uid}: prompt {len(req.prompt)} + gen "
                 f"{req.max_new_tokens} exceeds max_seq {self.max_seq} "
-                "(full-attention ring would overwrite live context)"
+                "(full-attention ring would overwrite live context)",
             )
         self.waiting.append(req)
 
@@ -403,7 +622,14 @@ class ServeEngine:
         ``batch_prefill=False``). A request that finishes on its very first
         token frees its slot immediately, so the round loop re-admits into
         it before the next decode step — same backfill behavior as the old
-        one-at-a-time path."""
+        one-at-a-time path.
+
+        Paged mode allocates each claim's prompt pages up front (resumed
+        requests: prompt + already-generated) and stops claiming — without
+        dequeuing — when the pool can't cover the next request plus the
+        watermark; the request waits for retirements to free pages. The
+        watermark is waived when no other slot is live, so the queue can
+        always make progress."""
         while True:
             free = [i for i, s in enumerate(self.slots) if s is None]
             claimed: list[int] = []
@@ -411,22 +637,64 @@ class ServeEngine:
                 req = self.waiting[0]
                 if respect_arrivals and req.arrival_time > now:
                     break
+                resume = (
+                    self._resume.get(req.uid) if self.paged_cache else None
+                )
+                feed = req.prompt
+                if resume is not None and resume.generated:
+                    feed = np.concatenate([
+                        req.prompt,
+                        np.asarray(resume.generated[:-1], np.int32),
+                    ])
+                if self.paged_cache:
+                    n_pages = (
+                        min(-(-len(feed) // self.page_size), self.table_width)
+                        if self.prefill_mode == "chunked"
+                        else 1  # interleaved: pages arrive lazily per step
+                    )
+                    # slots claimed earlier this round are already assigned
+                    # into self.slots, so this also covers them
+                    others_live = any(s is not None for s in self.slots)
+                    hold = self.watermark_pages if others_live else 0
+                    if self.pool.available < n_pages + hold:
+                        break  # pool pressure: request stays queued
                 self.waiting.popleft()
                 i = free.pop(0)
                 self.cache = reset_slot(self.cache, i)
                 slot = _Slot(
                     req=req,
-                    pending=collections.deque(req.prompt.tolist()),
+                    pending=collections.deque(feed.tolist()),
                     generated=[],
                     next_feed=-1,
                     admit_time=now,
                     key=self._request_key(req),
+                    feed=feed,
                 )
+                if self.paged_cache:
+                    self._admit_seq += 1
+                    slot.seq = self._admit_seq
+                    self._table_np[i, :] = 0
+                    if self.prefill_mode == "chunked":
+                        pages = self.pool.alloc(n_pages)
+                        self._slot_pages[i] = pages
+                        self._table_np[i, : len(pages)] = pages
+                    else:
+                        self._slot_pages[i] = []
+                    self._table_dirty = True
+                    if resume is not None:
+                        self._resume.pop(req.uid)
+                        slot.generated = list(resume.generated)
+                        slot.key = resume.key
+                        slot.first_token_time = resume.first_token_time
+                        slot.admit_time = resume.admit_time
+                        slot.resumed = bool(resume.generated)
                 self.slot_history.setdefault(req.uid, []).append(i)
                 self.slots[i] = slot
                 if self.prefill_mode == "chunked":
+                    slot.pos_host = len(feed)
                     claimed.append(i)
                 else:  # interleaved: decode step consumes prompt tokens
+                    slot.pos_host = 0
                     slot.next_feed = slot.pending.popleft()
             if not claimed:
                 return
@@ -439,13 +707,25 @@ class ServeEngine:
 
         ``first_token_time`` is stamped per slot AFTER its token is
         extracted (``_next_token``'s host transfer forces the async jax
-        dispatch), so TTFT includes the prefill compute it waited on."""
+        dispatch), so TTFT includes the prefill compute it waited on.
+
+        Each slot prefills its ``feed`` — the prompt, or prompt +
+        generated[:-1] for a preemption resume, whose next token is already
+        known: its logits row is discarded and the stored token re-fed, so
+        neither the greedy argmax nor the sampling stream replays a draw."""
         retired = False
 
         def emit(i, row):
             nonlocal retired
             slot = self.slots[i]
             slot.pending.clear()
+            if slot.resumed:
+                # resume: every generated token survived preemption; decode
+                # continues by re-feeding the last one. The slot was live
+                # when preempted, so it cannot be done here.
+                slot.resumed = False
+                slot.next_feed = slot.generated[-1]
+                return
             g = self._next_token(slot, row)
             slot.first_token_time = self._now()
             slot.generated.append(g)
@@ -454,8 +734,9 @@ class ServeEngine:
                 self._retire(i, slot)
                 retired = True
 
+        self._sync_table()
         if self.batch_prefill:
-            prompts = [self.slots[i].req.prompt for i in claimed]
+            prompts = [self.slots[i].feed for i in claimed]
             round_len = max(p.size for p in prompts)
             if self.bucket_prefill:
                 width = bucket_width(len(claimed), self.num_slots)
@@ -483,11 +764,23 @@ class ServeEngine:
             self.prefill_dispatches += 1
             for j, i in enumerate(claimed):
                 emit(i, logits[j])
+        elif self.paged_cache:
+            # per-request dispatches, but through prefill_slots (the paged
+            # writer) at width 1 — prefill_into_slot is ring-only
+            for i in claimed:
+                feed = self.slots[i].feed
+                self.cache, lg = self._prefill_slots(
+                    self.params, self.cache, jnp.asarray(feed[None, :]),
+                    jnp.asarray([feed.size], np.int32),
+                    jnp.asarray([i], np.int32),
+                )
+                self.prefill_dispatches += 1
+                emit(i, lg[0])
         else:
             for i in claimed:
                 self.cache, lg = self._prefill(
                     self.params, self.cache,
-                    jnp.asarray(self.slots[i].req.prompt[None, :]), i,
+                    jnp.asarray(self.slots[i].feed[None, :]), i,
                 )
                 self.prefill_dispatches += 1
                 emit(i, lg[0])
@@ -518,6 +811,78 @@ class ServeEngine:
             )
         )
         self.slots[i] = None
+        if self.paged_cache:
+            # pages return to the pool for IMMEDIATE reuse; the table row
+            # reverts to the scratch page so the retired slot's drifting
+            # ``pos`` writes nothing anyone reads
+            self.pool.free(self._slot_pages[i])
+            self._slot_pages[i] = []
+            self._table_np[i, :] = 0
+            self._table_dirty = True
+
+    # ----------------------------------------------------------- paged pool
+    def _sync_table(self) -> None:
+        """Push the host page-table mirror to the device before a dispatch.
+        The mirror is authoritative — allocation, retirement and preemption
+        all mutate it — and the device copy is refreshed lazily, once per
+        batch of changes."""
+        if self.paged_cache and self._table_dirty:
+            self.cache = {**self.cache, "table": jnp.asarray(self._table_np)}
+            self._table_dirty = False
+
+    def _youngest_live(self) -> int:
+        return max(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: self.slots[i].seq,
+        )
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i`` back to the HEAD of the waiting queue (it must
+        re-admit before anything that arrived after it), freeing its pages.
+        Generated tokens, the sampling stream and timing stamps ride along
+        in a resume record — re-admission recomputes the KV state by
+        prefilling prompt + generated and continues token-identically."""
+        slot = self.slots[i]
+        self.pool.free(self._slot_pages[i])
+        self._slot_pages[i] = []
+        self._table_np[i, :] = 0
+        self._table_dirty = True
+        self._resume[slot.req.uid] = _ResumeState(
+            generated=list(slot.generated),
+            key=slot.key,
+            first_token_time=slot.first_token_time,
+            admit_time=slot.admit_time,
+        )
+        self.waiting.appendleft(slot.req)
+        self.slots[i] = None
+        self.preemptions += 1
+
+    def _ensure_decode_pages(self, live: list[int]) -> None:
+        """Lazy per-step allocation: before a decode dispatch, every live
+        slot whose next write position crosses into an unallocated logical
+        page gets one. When the pool is dry, the YOUNGEST slot is preempted
+        (repeatedly, until a page frees up) — preferring to stall the most
+        recently admitted work keeps the oldest requests flowing, the same
+        recency order vLLM uses. If the starving slot preempts ITSELF the
+        loop stops: its request is back in the queue, its pages freed."""
+        for i in live:
+            slot = self.slots[i]
+            if slot is None:
+                continue  # preempted while serving an earlier slot's need
+            pi = (slot.pos_host % self.cap) // self.page_size
+            if self._table_np[i, pi] != 0:
+                continue
+            while True:
+                pages = self.pool.alloc(1)
+                if pages is not None:
+                    self._slot_pages[i].append(pages[0])
+                    self._table_np[i, pi] = pages[0]
+                    self._table_dirty = True
+                    break
+                victim = self._youngest_live()
+                self._preempt(victim)
+                if victim == i:
+                    break  # the needy slot itself went back to the queue
 
     def step(self, *, respect_arrivals: bool = False) -> list[RequestOutput]:
         """One engine iteration: admit → one batched decode step → retire.
@@ -532,7 +897,13 @@ class ServeEngine:
         try:
             self._admit(self._now(), respect_arrivals)
             live = [i for i, s in enumerate(self.slots) if s is not None]
+            if live and self.paged_cache:
+                # lazy page allocation (may preempt the youngest slot when
+                # the pool runs dry — re-collect the survivors)
+                self._ensure_decode_pages(live)
+                live = [i for i, s in enumerate(self.slots) if s is not None]
             if live:
+                self._sync_table()
                 feed = np.zeros((self.num_slots, 1), np.int32)
                 for i in live:
                     feed[i, 0] = self.slots[i].next_feed
@@ -540,10 +911,19 @@ class ServeEngine:
                     self.params, self.cache, jnp.asarray(feed)
                 )
                 self.steps += 1
+                for i in live:
+                    self.slots[i].pos_host += 1  # one token written per row
+                if self.paged_cache:
+                    self.occupancy.append(
+                        self.pool.in_use / max(self.pool.capacity, 1)
+                    )
                 # one batched argmax + host transfer per step, not per slot
-                # (skipped entirely when every emitting slot samples)
+                # (skipped entirely when every emitting slot samples).
+                # Resumed slots re-feed a stored token this step: no argmax,
+                # no sampling draw — their streams must not advance.
                 need_greedy = any(
                     self.slots[i].key is None and not self.slots[i].pending
+                    and not self.slots[i].resumed
                     for i in live
                 )
                 greedy = (
@@ -556,7 +936,9 @@ class ServeEngine:
                 # mid-prefill slots), then one host transfer
                 samp = [
                     i for i in live
-                    if self.slots[i].key is not None and not self.slots[i].pending
+                    if self.slots[i].key is not None
+                    and not self.slots[i].pending
+                    and not self.slots[i].resumed
                 ]
                 sampled: dict[int, int] = {}
                 if samp:
@@ -588,6 +970,12 @@ class ServeEngine:
                     slot = self.slots[i]
                     if slot.pending:  # mid-prefill: logits are teacher-forced
                         slot.next_feed = slot.pending.popleft()
+                        continue
+                    if slot.resumed:
+                        # interleaved resume just finished re-feeding its
+                        # history: the next token is already known
+                        slot.resumed = False
+                        slot.next_feed = slot.generated[-1]
                         continue
                     g = sampled[i] if slot.key is not None else int(greedy[i])
                     if slot.first_token_time < 0:
@@ -667,12 +1055,20 @@ def serve_continuous(
     bucket_prefill: bool = True,
     paged_decode: bool = True,
     donate_cache: bool = True,
+    paged_cache: bool = True,
+    page_size: int = 16,
+    num_pages: int = 0,
+    watermark_pages: int = 0,
     sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
     log_fn=print,
 ) -> dict:
-    """Build a model + engine, serve a synthetic trace, report throughput."""
+    """Build a model + engine, serve a synthetic trace, report throughput.
+
+    The serving CLI defaults to the PAGED cache (``--no-paged-cache``
+    restores per-slot contiguous rings) — output is token-identical either
+    way; paged mode additionally reports pool occupancy and preemptions."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -688,6 +1084,10 @@ def serve_continuous(
         bucket_prefill=bucket_prefill,
         paged_decode=paged_decode,
         donate_cache=donate_cache,
+        paged_cache=paged_cache,
+        page_size=page_size,
+        num_pages=num_pages,
+        watermark_pages=watermark_pages,
         seed=seed,
     )
     reqs = make_requests(
@@ -722,10 +1122,12 @@ def serve_continuous(
         "bucket_prefill": engine.bucket_prefill,
         "paged_decode": engine.paged_decode,
         "donate_cache": engine.donate_cache,
+        "paged_cache": engine.paged_cache,
         "sampling": None if sampling is None else dataclasses.asdict(sampling),
         "engine_steps": engine.steps,
         "prefill_dispatches": engine.prefill_dispatches,
         "compiles": engine.compiles,
+        "pool": engine.pool_stats,
         "wall_seconds": wall,
         "tokens_per_second": total / max(wall, 1e-9),
         "generated": [o.tokens for o in outs],
@@ -733,11 +1135,21 @@ def serve_continuous(
         "latency_p50": float(np.percentile(lat, 50)),
         "latency_p95": float(np.percentile(lat, 95)),
     }
+    pool_line = ""
+    if engine.paged_cache:
+        ps = result["pool"]
+        pool_line = (
+            f", pool occ mean {ps['occupancy_mean']:.0%} / "
+            f"max {ps['occupancy_max']:.0%} over "
+            f"{ps['allocatable_pages']} pages, "
+            f"{ps['preemptions']} preemptions"
+        )
     log_fn(
         f"{cfg.name}: {n_requests} reqs × {gen_tokens} tok over "
         f"{num_slots} slots in {engine.steps} steps "
         f"+ {engine.prefill_dispatches} prefill dispatches, {wall:.2f}s "
         f"({result['tokens_per_second']:.1f} tok/s, "
-        f"p50 {result['latency_p50']:.2f}s p95 {result['latency_p95']:.2f}s)"
+        f"p50 {result['latency_p50']:.2f}s p95 {result['latency_p95']:.2f}s"
+        f"{pool_line})"
     )
     return result

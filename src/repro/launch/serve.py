@@ -9,7 +9,11 @@ every request admitted in a scheduling round shares ONE prefill forward),
 EOS/max-token retirement with immediate backfill, and per-request
 temperature/top-k/top-p sampling (--temperature 0 = greedy). Both support
 the Pallas flash-decode kernel (--use-kernel, interpret mode on CPU) and
-sliding-window ring caches.
+sliding-window ring caches. Continuous mode serves from the shared PAGED
+KV pool by default (--page-size/--num-pages tune it, --no-paged-cache
+restores per-slot contiguous rings): sequences are bounded by pool pages
+instead of a per-slot max_seq, and an undersized pool oversubscribes
+memory with watermark admission + youngest-slot preemption.
 
     # oracle (single fixed batch)
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
@@ -154,6 +158,23 @@ def main(argv=None):
                     action="store_false",
                     help="[continuous] functionally copy the KV cache "
                     "through each step instead of donating it in place")
+    ap.add_argument("--no-paged-cache", dest="paged_cache",
+                    action="store_false",
+                    help="[continuous] per-slot contiguous ring KV caches "
+                    "instead of the shared paged pool + page tables "
+                    "(restores the prompt+gen <= max_seq admission guard)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="[continuous] tokens per physical KV page "
+                    "(paged cache)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="[continuous] total physical pages incl. the "
+                    "reserved scratch page (0 = ring-equivalent capacity); "
+                    "undersize to oversubscribe memory — decode OOM "
+                    "preempts the youngest slot")
+    ap.add_argument("--watermark-pages", type=int, default=0,
+                    help="[continuous] free pages admission must leave in "
+                    "reserve while other slots are live (paged cache; "
+                    "0 = pack the pool and rely on preemption)")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
     # sampling (0 temperature = greedy; per-request streams derive from
@@ -189,7 +210,12 @@ def main(argv=None):
             batch_prefill=args.batch_prefill,
             bucket_prefill=args.bucket_prefill,
             paged_decode=args.paged_decode,
-            donate_cache=args.donate_cache, sampling=sampling,
+            donate_cache=args.donate_cache,
+            paged_cache=args.paged_cache,
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            watermark_pages=args.watermark_pages,
+            sampling=sampling,
             seed=args.seed, stagger=args.stagger,
         )
     return serve_batch(

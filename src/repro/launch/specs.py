@@ -98,6 +98,30 @@ def slot_cache_specs(
     return jax.eval_shape(mk, params)
 
 
+def paged_cache_specs(
+    model: ModelAPI,
+    num_slots: int,
+    num_pages: int,
+    page_size: int,
+    table_width: int,
+    window: int = 0,
+) -> Pytree:
+    """ShapeDtypeStructs for the engine's SHARED paged KV pool + per-slot
+    page tables — total KV bytes scale with ``num_pages``, not
+    ``num_slots × max_seq``, which is the memory claim the dry-run sizes."""
+    if model.init_paged_cache is None:
+        raise ValueError(f"{model.cfg.name}: no paged-cache API for this arch")
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def mk(params):
+        return model.init_paged_cache(
+            params, num_slots, num_pages, page_size, table_width,
+            window=window,
+        )
+
+    return jax.eval_shape(mk, params)
+
+
 def layers_for_memory(cfg: ModelConfig) -> int:
     n = cfg.n_layers
     if cfg.arch_type == "audio":

@@ -375,6 +375,133 @@ def decode_attend(
     return out, new_cache
 
 
+def init_paged_pool(
+    cfg: ModelConfig,
+    num_slots: int,
+    num_pages: int,
+    page_size: int,
+    table_width: int,
+    *,
+    dtype=None,
+) -> dict:
+    """Shared paged KV pool + per-slot page tables (one layer's worth).
+
+    Physical storage is ONE pool of ``num_pages`` pages of ``page_size``
+    token slots, shared by every request slot; ``table`` maps each slot's
+    logical pages into it. Entry 0 of the pool is the reserved SCRATCH page:
+    table entries are 0 until the engine's allocator assigns a real page, so
+    writes by retired/unallocated slots land somewhere harmless and reads
+    never dereference them (the validity mask kills logical slots beyond
+    ``pos`` before any garbage can matter). Logical ring capacity per slot
+    is ``table_width * page_size`` — the ring-position math is unchanged,
+    only the physical placement is indirected."""
+    hd = cfg.resolved_head_dim
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((num_slots,), jnp.int32),
+        "table": jnp.zeros((num_slots, table_width), jnp.int32),
+    }
+
+
+def gather_pages(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """pool (P, page, Hkv, hd) × table (B, T) → contiguous (B, T·page, Hkv,
+    hd) ring rows. The jnp production path reads the paged cache through
+    the SAME gather as every oracle (``kernels.ref.gather_pages_ref``) and
+    then runs the EXACT ring math — which is what makes the paged engine
+    bitwise token-identical to the contiguous-ring engine."""
+    from repro.kernels.ref import gather_pages_ref
+
+    return gather_pages_ref(pool, table)
+
+
+def decode_attend_paged(
+    params: Params,
+    x: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    rope: bool = True,
+) -> tuple[jax.Array, dict]:
+    """One decode step over the SHARED paged pool. x: (B, 1, D).
+
+    cache: {"k"/"v": (P, page, Hkv, hd) pool, "pos": (B,), "table": (B, T)}.
+    Row b's token is written at logical ring slot ``pos[b] % (T·page)``,
+    which the page table maps to physical ``(table[b, slot//page],
+    slot % page)``. Live slots own their pages exclusively (allocator
+    invariant) so the batched scatter has no cross-row collisions except on
+    the reserved scratch page 0, whose content is never validly read.
+
+    The attention read is either the page-table Pallas kernel (pool +
+    scalar-prefetched table rows, no gather) or the jnp path: gather the
+    row's pages into contiguous ring rows and run the same masked-attention
+    math as ``decode_attend``'s per-slot branch — bitwise identical to the
+    ring engine holding the same values."""
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    b = x.shape[0]
+    pool_k, pool_v = cache["k"], cache["v"]
+    table = cache["table"]
+    page = pool_k.shape[1]
+    cap = table.shape[1] * page
+    pos = cache["pos"]  # (B,) — paged caches are always per-slot
+
+    q = _split_heads(x @ params["wq"], hq, hd)
+    k = _split_heads(x @ params["wk"], hkv, hd)
+    v = _split_heads(x @ params["wv"], hkv, hd)
+    if rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slot = pos % cap
+    rows = jnp.arange(b)
+    phys_page = table[rows, slot // page]
+    off = slot % page
+    # Reshard the ONE-TOKEN k/v to the pool layout BEFORE the in-place
+    # write (same reason as decode_attend: k/v inherit the wk/wv
+    # column-parallel layout, and letting it propagate through the scatter
+    # makes XLA reshard the ENTIRE pool afterwards). The pool has no batch
+    # dim — pages shard where the ring cache sharded its sequence axis.
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    new_k = pool_k.at[phys_page, off].set(k[:, 0])
+    new_v = pool_v.at[phys_page, off].set(v[:, 0])
+    new_k = constrain(new_k, "cache_seq", None, "kv_heads", None)
+    new_v = constrain(new_v, "cache_seq", None, "kv_heads", None)
+
+    if USE_DECODE_KERNEL:
+        from repro.kernels.ops import swa_decode_attention
+
+        q_k = q.reshape(b, hkv, g, hd)
+        out = swa_decode_attention(
+            q_k, new_k, new_v, pos, window, use_kernel=True, table=table
+        )
+        out = out.reshape(b, 1, hkv * g * hd).astype(x.dtype)
+    else:
+        g_k = gather_pages(new_k, table)
+        g_v = gather_pages(new_v, table)
+        # identical math to decode_attend's per-slot branch, on the
+        # gathered rows — same values, same shapes, same reductions
+        slots = jnp.arange(cap)
+        pos_c, slot_c = pos[:, None], slot[:, None]
+        gpos = pos_c - (slot_c - slots) % cap
+        lo = pos_c - (window - 1) if window > 0 else 0
+        valid = (gpos >= jnp.maximum(lo, 0)) & (gpos <= pos_c)
+        mask = valid[:, None, None, None, :]
+
+        q = q.reshape(b, 1, hkv, g, hd)
+        scores = _gqa_scores(q, g_k) * (hd**-0.5)  # (B,Hkv,G,1,cap)
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, g_v, x.dtype)  # (B,1,H*hd)
+    out = out @ params["wo"]
+    new_cache = {"k": new_k, "v": new_v, "pos": pos + 1, "table": table}
+    return out, new_cache
+
+
 def compute_kv_for_prefill(
     params: Params,
     x: jax.Array,

@@ -43,9 +43,13 @@ class ModelAPI:
     # prefill_slots(params, cache, tokens (n,S), lengths (n,), slots (n,),
     #               window=) -> (cache, logits (n, Vp)) — batched admission:
     #               n right-padded prompts into n distinct slots, one forward
+    # init_paged_cache(params, num_slots, num_pages, page_size, table_width,
+    #               window=) -> shared paged pool + per-slot page tables;
+    #               decode/prefill_slots accept either cache layout
     init_slot_cache: Callable[..., Any] | None = None
     prefill_slot: Callable[..., tuple[Any, jax.Array]] | None = None
     prefill_slots: Callable[..., tuple[Any, jax.Array]] | None = None
+    init_paged_cache: Callable[..., Any] | None = None
 
 
 def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
@@ -86,10 +90,17 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
             cfg, params, cache, tokens, lengths, slots, ffn=ffn, window=window
         )
 
+    def init_paged_cache(
+        params, num_slots, num_pages, page_size, table_width, *, window=0
+    ):
+        return transformer.init_paged_cache(
+            cfg, num_slots, num_pages, page_size, table_width, window=window
+        )
+
     return ModelAPI(
         cfg, init, loss, forward, init_cache, decode, prefill,
         init_slot_cache=init_slot_cache, prefill_slot=prefill_slot,
-        prefill_slots=prefill_slots,
+        prefill_slots=prefill_slots, init_paged_cache=init_paged_cache,
     )
 
 

@@ -152,6 +152,34 @@ def init_decode_cache(
     }
 
 
+def init_paged_cache(
+    cfg: ModelConfig,
+    num_slots: int,
+    num_pages: int,
+    page_size: int,
+    table_width: int,
+    *,
+    window: int = 0,
+) -> dict:
+    """Stacked shared paged KV pool: (L, P, page, Hkv, hd) physical pages +
+    per-slot page tables (num_slots, T) shared across layers (every layer
+    of a slot uses the same logical→physical page map, so ONE table drives
+    all L pools). Logical ring capacity per slot is ``table_width *
+    page_size``; pool page 0 is the reserved scratch page (see
+    ``attention.init_paged_pool``). Total KV memory is ``num_pages`` pages
+    regardless of ``num_slots`` — slots share the pool instead of owning
+    ``max_seq`` rows each."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((num_slots,), jnp.int32),
+        "table": jnp.zeros((num_slots, table_width), jnp.int32),
+        "window": jnp.asarray(window, jnp.int32),
+    }
+
+
 def reset_slot(cache: dict, slot) -> dict:
     """Recycle one slot of a per-slot cache: zero its position. Stale k/v
     rows need no clearing — the decode validity mask derives entirely from
@@ -169,16 +197,28 @@ def decode_step(
     ffn: FFNHooks = DENSE_FFN,
     window: int = 0,
 ) -> tuple[dict, jax.Array]:
-    """One token for every sequence. tokens (B, 1) → (cache', logits (B, Vp))."""
+    """One token for every sequence. tokens (B, 1) → (cache', logits (B, Vp)).
+
+    Works over both cache layouts: per-row contiguous rings (``init_decode_
+    cache``) and the shared paged pool (``init_paged_cache`` — detected by
+    the ``table`` key; each layer's pool is scanned jointly with its params
+    while the one page table is closed over)."""
     x = embed_tokens(params["embed"], tokens)
     pos = cache["pos"]
+    table = cache.get("table")
 
     def body(h, sl):
         lp, ck, cv = sl
         a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
-        a, newc = attn.decode_attend(
-            lp["attn"], a, {"k": ck, "v": cv, "pos": pos}, cfg, window=window
-        )
+        if table is not None:
+            a, newc = attn.decode_attend_paged(
+                lp["attn"], a, {"k": ck, "v": cv, "pos": pos, "table": table},
+                cfg, window=window,
+            )
+        else:
+            a, newc = attn.decode_attend(
+                lp["attn"], a, {"k": ck, "v": cv, "pos": pos}, cfg, window=window
+            )
         h = h + a
         f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
         f, _ = ffn.apply(lp["ffn"], f, cfg)
@@ -188,6 +228,8 @@ def decode_step(
     x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg)[:, 0]
     new_cache = {"k": nk, "v": nv, "pos": pos + 1, "window": cache["window"]}
+    if table is not None:
+        new_cache["table"] = table
     return new_cache, logits
 
 
@@ -330,6 +372,14 @@ def prefill_slots(
     entries and the pos update keeps the slot's previous value — so its
     ``slots[r]`` may name any slot not otherwise in this call, even a live
     one. Its logits row is garbage; callers discard it.
+
+    Paged caches (``table`` key present) route each row's ring write
+    through its page table: the row's pages are gathered into contiguous
+    ring rows, written exactly as the contiguous path would, and scattered
+    back — the engine guarantees every logical page the prompt reaches is
+    allocated before this call, and unallocated tail entries point at the
+    scratch page 0 so their (never-read) writes stay harmless. A padding
+    row's scatter writes back its own gathered bits unchanged.
     """
     assert cache["pos"].ndim == 1, "prefill_slots requires a per-slot cache"
     n, s = tokens.shape
@@ -338,9 +388,15 @@ def prefill_slots(
     pos = positions_for(tokens)
     slots = jnp.asarray(slots, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
+    table = cache.get("table")
+    if table is not None:
+        t_rows = table[slots]                      # (n, T) page map per row
+        flat_pages = t_rows.reshape(-1)            # (n·T,)
+        page = cache["k"].shape[2]
+        t_w = table.shape[1]
 
     def body(h, sl):
-        lp, ck, cv = sl  # ck/cv: (B, C, Hkv, hd) — one layer, all slots
+        lp, ck, cv = sl  # ck/cv: one layer — (B, C, Hkv, hd) or (P, page, Hkv, hd)
         a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
         k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
         a = attn.attend_full(
@@ -349,6 +405,14 @@ def prefill_slots(
         h = h + a
         f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
         f, _ = ffn.apply(lp["ffn"], f, cfg)
+        if table is not None:
+            hkv, hd = ck.shape[-2], ck.shape[-1]
+            gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
+            gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
+            rows_k, rows_v = attn.fill_cache_rows(gk, gv, k, v, lengths)
+            nk = ck.at[flat_pages].set(rows_k.reshape(n * t_w, page, hkv, hd))
+            nv = cv.at[flat_pages].set(rows_v.reshape(n * t_w, page, hkv, hd))
+            return h + f, (nk, nv)
         rows_k, rows_v = attn.fill_cache_rows(ck[slots], cv[slots], k, v, lengths)
         return h + f, (ck.at[slots].set(rows_k), cv.at[slots].set(rows_v))
 
@@ -365,4 +429,6 @@ def prefill_slots(
         ),
         "window": cache["window"],
     }
+    if table is not None:
+        new_cache["table"] = table
     return new_cache, logits

@@ -229,3 +229,59 @@ def test_paged_engine_matches_jnp_engine_windowed(model_and_params):
     ref = _build(model_and_params, num_slots=2, window=6).run(_reqs(cfg, lens))
     for oa, ob in zip(kern, ref):
         assert oa.uid == ob.uid and oa.tokens == ob.tokens
+
+
+# ------------------------------------------------- paged-cache engine perf
+def test_paged_cache_compile_gate(model_and_params):
+    """CI regression gate: the PAGED engine stays within the SAME
+    bucket-ladder compile bound as the ring engine — page tables ride the
+    cache pytree (constant shapes), so memory paging must add zero jit
+    specializations. ≥ 20 distinct admission shapes, bucket-many compiles,
+    decode compiled exactly once."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, num_slots=4, paged_cache=True,
+                    page_size=8)
+    lens = [3, 5, 7, 9, 11, 13]
+    shapes = [(w, l) for w in (1, 2, 3, 4) for l in lens][:21]
+    assert len(shapes) >= 20
+    uid = 0
+    for w, l in shapes:
+        engine.run(_reqs(cfg, [l] * w, uid0=uid))
+        uid += w
+    n_buckets = len(
+        {(bucket_width(w, 4), bucket_length(l)) for w, l in shapes}
+    )
+    compiled = engine.compiles["prefill_slots"]
+    assert compiled <= n_buckets, (
+        f"paged engine compiled prefill_slots {compiled} times over "
+        f"{len(shapes)} round shapes; bucket ladder allows {n_buckets}"
+    )
+    assert engine.compiles["decode"] == 1
+    # covered buckets stay covered: more traffic, zero new traces
+    before = engine.compiles["prefill_slots"]
+    engine.run(_reqs(cfg, [4, 6, 12], uid0=uid))
+    assert engine.compiles["prefill_slots"] == before
+
+
+def test_paged_cache_donation(model_and_params):
+    """Zero-copy stepping holds for the paged pool too: pre-step pool
+    buffers are consumed by the donated jits, and donation stays invisible
+    in the tokens."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, paged_cache=True, page_size=8)
+    engine.submit(_reqs(cfg, [6], gen=3)[0])
+    old_k, old_v = engine.cache["k"], engine.cache["v"]
+    engine.step()  # admission round: donated prefill_slots consumes them
+    assert old_k.is_deleted() and old_v.is_deleted()
+    old_k, old_v = engine.cache["k"], engine.cache["v"]
+    engine.step()  # decode step: donated decode consumes them
+    assert old_k.is_deleted() and old_v.is_deleted()
+    engine.run()
+
+    lens = [5, 9, 13, 7, 11]
+    a = _build(model_and_params, num_slots=2, paged_cache=True,
+               page_size=8).run(_reqs(cfg, lens))
+    b = _build(model_and_params, num_slots=2, paged_cache=True, page_size=8,
+               donate_cache=False).run(_reqs(cfg, lens))
+    for oa, ob in zip(a, b):
+        assert oa.uid == ob.uid and oa.tokens == ob.tokens

@@ -1,0 +1,127 @@
+"""PagePool allocator unit tests (launch/engine.py).
+
+The allocator is pure host-side bookkeeping, so these tests are exact: the
+free list is a LIFO stack (most recently freed pages are reused first),
+page 0 is reserved scratch and never handed out, allocation is
+all-or-nothing, and accounting survives arbitrary interleavings of
+retire/admit — "fragmentation" cannot strand capacity because pages carry
+no adjacency: any free page serves any slot.
+"""
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.launch.engine import PagePool
+
+
+def test_fresh_pool_allocates_ascending():
+    pool = PagePool(num_pages=6, page_size=4)
+    assert pool.capacity == 5
+    assert pool.alloc(3) == [1, 2, 3]
+    assert pool.alloc(2) == [4, 5]
+    assert pool.available == 0 and pool.in_use == 5
+
+
+def test_scratch_page_never_allocated():
+    pool = PagePool(num_pages=4, page_size=8)
+    seen = set()
+    for _ in range(3):
+        pages = pool.alloc(1)
+        seen.update(pages)
+    assert pool.alloc(1) is None  # exhausted without ever touching page 0
+    assert 0 not in seen
+    assert seen == {1, 2, 3}
+
+
+def test_lifo_reuse_order():
+    """Freed pages come back most-recently-freed first — the documented
+    free-list discipline (cache-warm reuse)."""
+    pool = PagePool(num_pages=8, page_size=4)
+    a = pool.alloc(3)          # [1, 2, 3]
+    b = pool.alloc(2)          # [4, 5]
+    pool.free(a)               # stack: ..., 6?, no — [7, 6] remain + 1, 2, 3
+    pool.free(b)
+    # LIFO: the last pages freed (b, pushed 4 then 5) pop first, reversed
+    assert pool.alloc(2) == [5, 4]
+    assert pool.alloc(3) == [3, 2, 1]
+    # the never-allocated tail follows in ascending order
+    assert pool.alloc(2) == [6, 7]
+
+
+def test_alloc_is_all_or_nothing():
+    pool = PagePool(num_pages=4, page_size=4)
+    assert pool.alloc(2) == [1, 2]
+    before = pool.available
+    assert pool.alloc(2) is None       # only 1 page left
+    assert pool.available == before    # no partial allocation leaked
+    assert pool.alloc(1) == [3]
+
+
+def test_double_free_rejected():
+    pool = PagePool(num_pages=4, page_size=4)
+    pages = pool.alloc(2)
+    pool.free(pages)
+    with pytest.raises(ValueError, match="free"):
+        pool.free(pages[:1])
+    with pytest.raises(ValueError, match="free"):
+        pool.free([3])  # never allocated
+
+
+def test_peak_tracking():
+    pool = PagePool(num_pages=6, page_size=4)
+    a = pool.alloc(4)
+    assert pool.peak_in_use == 4
+    pool.free(a)
+    pool.alloc(2)
+    assert pool.peak_in_use == 4  # peak is monotone
+    assert pool.in_use == 2
+
+
+def test_fragmentation_interleaved_retire_admit():
+    """Interleaved multi-slot alloc/free ("fragmentation"): pages freed by
+    one slot are immediately reusable by any other, accounting stays exact,
+    and the full capacity remains reachable in one allocation afterwards."""
+    pool = PagePool(num_pages=11, page_size=4)   # 10 allocatable
+    slots = {i: pool.alloc(2) for i in range(5)}  # pool exhausted
+    assert pool.available == 0
+    pool.free(slots.pop(1))  # retire slots 1 and 3 — holes between live
+    pool.free(slots.pop(3))
+    got = pool.alloc(4)      # a new slot spans both "holes"
+    assert sorted(got) == [3, 4, 7, 8]  # exactly the retired slots' pages
+    pool.free(got)
+    for pages in slots.values():
+        pool.free(pages)
+    assert pool.available == pool.capacity and pool.in_use == 0
+    # no stranded capacity: one allocation can take everything back
+    assert len(pool.alloc(10)) == 10
+
+
+@given(
+    ops=st.lists(st.integers(0, 5), min_size=1, max_size=40),
+    num_pages=st.integers(3, 17),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_accounting_invariants(ops, num_pages):
+    """Random alloc/free interleavings: in_use + available == capacity,
+    allocation succeeds iff enough pages are free, page 0 never appears,
+    and no page is ever held twice."""
+    pool = PagePool(num_pages=num_pages, page_size=4)
+    held = []
+    for op in ops:
+        if op == 0 and held:
+            pool.free(held.pop())
+        else:
+            n = (op % 3) + 1
+            pages = pool.alloc(n)
+            if n <= pool.capacity - sum(len(h) for h in held):
+                assert pages is not None
+            if pages is None:
+                continue
+            assert 0 not in pages
+            held.append(pages)
+        flat = [p for h in held for p in h]
+        assert len(flat) == len(set(flat))
+        assert pool.in_use == len(flat)
+        assert pool.in_use + pool.available == pool.capacity
+    for h in held:
+        pool.free(h)
+    assert pool.available == pool.capacity

@@ -161,3 +161,146 @@ class TestOpsRouting:
         r_plain = ops.swa_decode_attention(q, kc, vc, pos, 0)
         np.testing.assert_array_equal(np.asarray(k_paged), np.asarray(k_plain))
         np.testing.assert_array_equal(np.asarray(r_paged), np.asarray(r_plain))
+
+
+# ---------------------------------------------------------- page-table mode
+def _scatter_to_pool(kc, vc, page, key):
+    """Re-lay a contiguous (B, C, Hkv, hd) cache as a shared page pool with
+    a RANDOM page placement: pool (1 + B·C/page, page, Hkv, hd) whose page
+    0 is scratch, plus the (B, T) table mapping each row's logical pages to
+    their scattered physical homes."""
+    b, cap, hkv, hd = kc.shape
+    t_w = cap // page
+    flat_k = kc.reshape(b * t_w, page, hkv, hd)
+    flat_v = vc.reshape(b * t_w, page, hkv, hd)
+    perm = jax.random.permutation(key, b * t_w)
+    dest = 1 + perm
+    pool_shape = (1 + b * t_w, page, hkv, hd)
+    pool_k = jnp.zeros(pool_shape, kc.dtype).at[dest].set(flat_k)
+    pool_v = jnp.zeros(pool_shape, kc.dtype).at[dest].set(flat_v)
+    table = dest.reshape(b, t_w).astype(jnp.int32)
+    return pool_k, pool_v, table
+
+
+# every CASES cap splits into pages of 64 — small enough that several
+# logical pages exist (real skipping + indirection) at every cap
+TABLE_PAGE = 64
+
+
+class TestTableMode:
+    @pytest.mark.parametrize("cap,poss,window", CASES)
+    def test_table_kernel_bitwise_matches_contiguous_kernel(
+        self, cap, poss, window
+    ):
+        """Scattered physical placement must be invisible BIT FOR BIT
+        against the contiguous paged kernel at the SAME page size (same
+        chunk partitioning → same online-softmax association)."""
+        q, kc, vc = _rand(jax.random.PRNGKey(3 * cap + window), cap, len(poss))
+        pos = jnp.asarray(poss, jnp.int32)
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, TABLE_PAGE, jax.random.PRNGKey(cap)
+        )
+        out = paged_decode(q, pool_k, pool_v, pos, window, table=table)
+        expected = paged_decode(q, kc, vc, pos, window, page=TABLE_PAGE)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+    @pytest.mark.parametrize("cap,poss,window", CASES)
+    def test_table_ref_bitwise_matches_plain_ref(self, cap, poss, window):
+        """The jnp table oracle (gather pages → plain ring oracle) equals
+        the plain oracle on the contiguous original."""
+        q, kc, vc = _rand(jax.random.PRNGKey(5 * cap + window), cap, len(poss))
+        pos = jnp.asarray(poss, jnp.int32)
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, TABLE_PAGE, jax.random.PRNGKey(cap + 1)
+        )
+        a = ref.paged_table_decode_ref(q, pool_k, pool_v, pos, table, window)
+        b = ref.swa_decode_ref(q, kc, vc, pos, window)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("cap,poss,window", CASES)
+    def test_table_kernel_close_to_oracle(self, cap, poss, window):
+        q, kc, vc = _rand(jax.random.PRNGKey(11 * cap + window), cap, len(poss))
+        pos = jnp.asarray(poss, jnp.int32)
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, TABLE_PAGE, jax.random.PRNGKey(cap + 2)
+        )
+        out = paged_decode(q, pool_k, pool_v, pos, window, table=table)
+        expected = ref.paged_table_decode_ref(
+            q, pool_k, pool_v, pos, table, window
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expected), rtol=3e-5, atol=3e-5
+        )
+
+    def test_unallocated_tail_entries_never_read(self):
+        """Table entries beyond a row's live span may point ANYWHERE (the
+        engine leaves them at scratch page 0): the index-map clamp + the
+        live-page gate mean they must not change a single bit."""
+        cap, page = 256, 64
+        q, kc, vc = _rand(jax.random.PRNGKey(41), cap, 3)
+        pos = jnp.asarray([10, 100, 150], jnp.int32)  # 1, 2, 3 live pages
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, page, jax.random.PRNGKey(42)
+        )
+        live_pages = np.asarray((np.minimum(np.asarray(pos) + 1, cap) + page - 1) // page)
+        wild = np.array(table)
+        for r, lp in enumerate(live_pages):
+            wild[r, lp:] = 0  # scratch — what the engine actually does
+        a = paged_decode(q, pool_k, pool_v, pos, 0, table=table)
+        b = paged_decode(q, pool_k, pool_v, pos, 0, table=jnp.asarray(wild))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rows_share_pool_without_leaking(self):
+        """Two rows with interleaved physical pages: each row's solo run
+        equals its batched row — page placement of OTHER rows can't leak."""
+        cap, page = 512, 64
+        q, kc, vc = _rand(jax.random.PRNGKey(51), cap, 2)
+        pos = jnp.asarray([200, 700], jnp.int32)
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, page, jax.random.PRNGKey(52)
+        )
+        batched = paged_decode(q, pool_k, pool_v, pos, 0, table=table)
+        for r in range(2):
+            solo = paged_decode(
+                q[r : r + 1], pool_k, pool_v, pos[r : r + 1], 0,
+                table=table[r : r + 1],
+            )
+            np.testing.assert_array_equal(
+                np.asarray(solo[0]), np.asarray(batched[r])
+            )
+
+    def test_ops_routes_table_mode(self):
+        cap, page = 128, 64
+        q, kc, vc = _rand(jax.random.PRNGKey(61), cap, 2)
+        pos = jnp.asarray([9, 300], jnp.int32)
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, page, jax.random.PRNGKey(62)
+        )
+        k_out = ops.swa_decode_attention(
+            q, pool_k, pool_v, pos, 0, use_kernel=True, table=table
+        )
+        r_out = ops.swa_decode_attention(q, pool_k, pool_v, pos, 0, table=table)
+        plain = ref.swa_decode_ref(q, kc, vc, pos, 0)
+        np.testing.assert_array_equal(np.asarray(r_out), np.asarray(plain))
+        np.testing.assert_allclose(
+            np.asarray(k_out), np.asarray(plain), rtol=3e-5, atol=3e-5
+        )
+
+    @given(pos=st.integers(0, 2000), window=st.sampled_from([0, 32, 128]))
+    @settings(max_examples=15, deadline=None)
+    def test_property_table_ring_positions(self, pos, window):
+        """Arbitrary ring positions: table kernel == contiguous paged
+        kernel at the same page size, scattered placement and all."""
+        key = jax.random.PRNGKey(pos + 131 * window)
+        cap, page = 256, 64
+        q = jax.random.normal(key, (1, 1, 2, 64))
+        kc = jax.random.normal(jax.random.fold_in(key, 1), (1, cap, 1, 64))
+        vc = jax.random.normal(jax.random.fold_in(key, 2), (1, cap, 1, 64))
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, page, jax.random.fold_in(key, 3)
+        )
+        a = paged_decode(
+            q, pool_k, pool_v, jnp.asarray(pos), window, table=table
+        )
+        b = paged_decode(q, kc, vc, jnp.asarray(pos), window, page=page)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
