@@ -1,0 +1,101 @@
+"""Render the ``BENCH_serve.json`` perf trajectory as a markdown table.
+
+The serve-bench smoke run APPENDS one schema-2 entry per CI run to
+``BENCH_serve.json`` at the repo root; this tool turns that trajectory
+into a markdown table so the perf history is readable at a glance —
+tokens/sec, TTFT p95, pool occupancy, preemptions, and the prefix-cache
+columns (hit rate, prefilled-token savings, CoW splits) added with prefix
+sharing. In CI it lands on the job's step summary page.
+
+Output goes to ``$GITHUB_STEP_SUMMARY`` when set (the GitHub Actions
+step-summary file), else stdout — so the same invocation works locally:
+
+    PYTHONPATH=src:. python -m benchmarks.bench_report
+    PYTHONPATH=src:. python -m benchmarks.bench_report --last 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+BENCH_SEED_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json",
+)
+
+# (column header, entry key, format) — missing keys render as "—" so old
+# entries (pre-paged, pre-prefix schema additions) still tabulate
+COLUMNS = (
+    ("when (UTC)", "timestamp", "{}"),
+    ("tok/s", "tokens_per_second", "{:.1f}"),
+    ("tok/s paged", "tokens_per_second_paged", "{:.1f}"),
+    ("ttft p95 (s)", "ttft_p95", "{:.3f}"),
+    ("lat p95 (s)", "latency_p95", "{:.3f}"),
+    ("occ mean", "pool_occupancy_mean", "{:.0%}"),
+    ("occ max", "pool_occupancy_max", "{:.0%}"),
+    ("preempt", "pool_preemptions", "{}"),
+    ("tight preempt", "pool_tight_preemptions", "{}"),
+    ("prefill compiles", "prefill_compiles", "{}"),
+    ("prefix hit", "prefix_hit_rate", "{:.0%}"),
+    ("prefill saved", "prefix_prefill_saved_frac", "{:.0%}"),
+    ("CoW", "prefix_cow_copies", "{}"),
+)
+
+
+def _cell(entry: dict, key: str, fmt: str) -> str:
+    val = entry.get(key)
+    if val is None:
+        return "—"
+    if key == "timestamp":
+        return str(val).replace("+00:00", "Z")
+    try:
+        return fmt.format(val)
+    except (ValueError, TypeError):
+        return str(val)
+
+
+def render(path: str = BENCH_SEED_PATH, last: int = 10) -> str:
+    """Markdown for the newest ``last`` trajectory entries (oldest first,
+    matching the file order, so the bottom row is the current run)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"### Serve bench trajectory\n\n_no readable {path}: {e}_\n"
+    entries = data.get("entries") if isinstance(data, dict) else None
+    if not isinstance(entries, list) or not entries:
+        return "### Serve bench trajectory\n\n_trajectory is empty_\n"
+    rows = entries[-last:]
+    lines = [
+        "### Serve bench trajectory "
+        f"(last {len(rows)} of {len(entries)} entries)",
+        "",
+        "| " + " | ".join(h for h, _, _ in COLUMNS) + " |",
+        "|" + "|".join("---" for _ in COLUMNS) + "|",
+    ]
+    for e in rows:
+        lines.append(
+            "| " + " | ".join(_cell(e, k, f) for _, k, f in COLUMNS) + " |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--path", default=BENCH_SEED_PATH,
+                    help="trajectory file (default: repo-root BENCH_serve.json)")
+    ap.add_argument("--last", type=int, default=10,
+                    help="render at most this many newest entries")
+    args = ap.parse_args(argv)
+    md = render(args.path, last=args.last)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

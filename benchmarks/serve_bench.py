@@ -24,7 +24,11 @@ latency/TTFT percentiles, and (paged variants) pool occupancy +
 preemption counts. Burst mode also probes the paged decode kernel in
 isolation: mean decode-step time at low vs. full ring occupancy, paged
 vs. unpaged vs. page-table mode (page skipping only helps rows far from
-wrap, so the low-occupancy row is where the win shows).
+wrap, so the low-occupancy row is where the win shows), and runs the
+SHARED-PREFIX probe: N requests over one common system prompt through the
+paged engine with and without the prefix cache, asserting identical
+greedy tokens, ≥ 50% fewer prefilled tokens, a nonzero prefix hit rate,
+and an exercised copy-on-write split (``bench_shared_prefix``).
 
 ``--smoke`` is the CI-sized burst run. Besides the usual
 ``benchmarks/results.json`` entry it APPENDS a timestamped entry to
@@ -197,6 +201,101 @@ BURST_VARIANTS = (
 TIGHT_POOL_FRACTION = 0.5  # tight pool ≈ half of ring-equivalent capacity
 
 
+def shared_prefix_trace(
+    cfg, *, n_requests: int, prefix_len: int, page_size: int,
+    gen_tokens: int, seed: int,
+) -> list[Request]:
+    """N requests over one common system prompt: ``prefix_len`` shared
+    tokens + a short unique user suffix each. Requests 0 and n-1 carry the
+    IDENTICAL page-aligned prompt (different admission rounds), so a warm
+    index serves the last one entirely from cache — the copy-on-write
+    split path."""
+    rng = np.random.default_rng(seed)
+    vocab = cfg.vocab_size
+    system = rng.integers(1, vocab, prefix_len).astype(np.int32)
+    # page-aligned full duplicate: forces a 100% hit + CoW on its re-run
+    dup_suffix = rng.integers(
+        1, vocab, page_size - (prefix_len % page_size) or page_size
+    ).astype(np.int32)
+    reqs = []
+    for r in range(n_requests):
+        if r == 0 or r == n_requests - 1:
+            suffix = dup_suffix
+        else:
+            suffix = rng.integers(1, vocab, 3 + (r % 5)).astype(np.int32)
+        reqs.append(
+            Request(
+                uid=r,
+                prompt=np.concatenate([system, suffix]),
+                max_new_tokens=gen_tokens,
+            )
+        )
+    return reqs
+
+
+def bench_shared_prefix(args) -> dict:
+    """The prefix-sharing probe: the same common-system-prompt burst
+    through the paged engine WITH and WITHOUT the prefix cache.
+
+    Asserted here (CI runs this under --smoke): identical greedy tokens,
+    ≥ 50% fewer prefilled tokens with sharing, a nonzero prefix hit rate,
+    and at least one copy-on-write page split exercised (the fully cached
+    duplicate prompt). ``prefill_tokens_saved_frac`` is the headline —
+    prefill FLOPs scale linearly in prefilled tokens at fixed width."""
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    prefix_len = 3 * args.page_size
+    max_seq = prefix_len + args.page_size + 8 + args.gen
+    out = {}
+    for label, prefix in (("prefix_on", True), ("prefix_off", False)):
+        engine = ServeEngine(
+            model, params, num_slots=args.slots, max_seq=max_seq,
+            prefill="chunked", paged_cache=True, page_size=args.page_size,
+            prefix_cache=prefix,
+        )
+        reqs = shared_prefix_trace(
+            cfg, n_requests=args.requests, prefix_len=prefix_len,
+            page_size=args.page_size, gen_tokens=args.gen, seed=args.seed,
+        )
+        t0 = time.time()
+        # the first request runs alone (publishing the system prompt on
+        # retirement), then the burst — otherwise the whole first
+        # admission round is cold and the probe undercounts what a warm
+        # system-prompt cache saves
+        outs = engine.run(reqs[:1])
+        outs += engine.run(reqs[1:])
+        wall = time.time() - t0
+        out[label] = {
+            "wall_seconds": wall,
+            "prefill_tokens": engine.prefill_tokens,
+            "prefill_dispatches": engine.prefill_dispatches,
+            "engine_steps": engine.steps,
+            "pool": engine.pool_stats,
+            "generated": [o.tokens for o in outs],
+        }
+    on, off = out["prefix_on"], out["prefix_off"]
+    assert on["generated"] == off["generated"], (
+        "prefix sharing changed greedy output"
+    )
+    saved = 1.0 - on["prefill_tokens"] / max(off["prefill_tokens"], 1)
+    assert saved >= 0.5, (
+        f"shared-prefix trace saved only {saved:.0%} prefilled tokens "
+        f"({on['prefill_tokens']} vs {off['prefill_tokens']})"
+    )
+    assert on["pool"]["prefix_hit_rate"] > 0, "no prefix hits on a shared trace"
+    assert on["pool"]["cow_copies"] > 0, (
+        "fully cached duplicate prompt never exercised copy-on-write"
+    )
+    for m in out.values():
+        del m["generated"]
+    return {
+        "prefix_len": prefix_len,
+        "prefill_tokens_saved_frac": saved,
+        **out,
+    }
+
+
 def bench_burst(args) -> dict:
     """Burst arrivals through the engine: bucketed-batched vs. unbucketed-
     batched vs. per-request prefill.
@@ -289,6 +388,7 @@ def bench_burst(args) -> dict:
         "gen_tokens": args.gen,
         "window": args.window,
         "decode_occupancy": bench_decode_occupancy(slots=args.slots),
+        "shared_prefix": bench_shared_prefix(args),
         **out,
     }
 
@@ -306,6 +406,7 @@ def write_bench_seed(res: dict) -> None:
     pg = res["paged"]
     tight = res["paged_tight"]
     occ = res["decode_occupancy"]
+    sp = res["shared_prefix"]
     entry = {
         "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"
@@ -340,6 +441,9 @@ def write_bench_seed(res: dict) -> None:
         "decode_step_unpaged_full_us": occ["unpaged_full_us"],
         "decode_step_table_low_us": occ.get("table_low_us"),
         "decode_step_table_full_us": occ.get("table_full_us"),
+        "prefix_hit_rate": sp["prefix_on"]["pool"]["prefix_hit_rate"],
+        "prefix_prefill_saved_frac": sp["prefill_tokens_saved_frac"],
+        "prefix_cow_copies": sp["prefix_on"]["pool"]["cow_copies"],
     }
     trajectory = {"schema": 2, "entries": []}
     if os.path.exists(BENCH_SEED_PATH):
@@ -458,6 +562,17 @@ def run(argv: list[str] | None = None):
             f"paged low-occ {occ['paged_low_us']:.0f}us vs unpaged "
             f"{occ['unpaged_low_us']:.0f}us; full-occ "
             f"{occ['paged_full_us']:.0f}us vs {occ['unpaged_full_us']:.0f}us",
+        )
+        sp = res["shared_prefix"]
+        emit(
+            "serve_shared_prefix",
+            sp["prefix_on"]["prefill_tokens"],
+            f"prefilled {sp['prefix_on']['prefill_tokens']} tok shared vs "
+            f"{sp['prefix_off']['prefill_tokens']} unshared "
+            f"({sp['prefill_tokens_saved_frac']:.0%} saved, hit rate "
+            f"{sp['prefix_on']['pool']['prefix_hit_rate']:.0%}, "
+            f"{sp['prefix_on']['pool']['cow_copies']} CoW) — "
+            "tokens identical",
         )
         save_results("serve_bench_burst", res)
         if args.smoke:

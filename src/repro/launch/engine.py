@@ -48,6 +48,18 @@ sized for this repo's CPU-verifiable models:
   one request may stretch across memory that ring mode would have
   statically split across all slots. The ring path stays as the oracle —
   paged output is pinned bitwise token-identical to it.
+* PREFIX SHARING (``prefix_cache=True``, paged mode): pages carry
+  REFCOUNTS, and a radix trie (``launch/prefix_cache.py``) indexes retired
+  requests' full prompt pages by page-sized token chunks. A new request
+  whose prompt starts with an indexed prefix maps those logical pages onto
+  the SAME physical pages (``PagePool.share``) and prefills only the
+  uncached suffix through ``prefill_slots(starts=...)`` — one prefill,
+  many readers. A fully cached prompt re-prefills just its final token
+  into a COPY-ON-WRITE split of the last shared page (the index copy
+  stays immutable). Index entries are LRU-evicted under pool pressure —
+  before watermark throttling and before OOM preemption — so a cache-hot
+  pool degrades gracefully to the no-sharing engine. Output stays
+  token-identical to the non-shared paged engine, which stays the oracle.
 
     PYTHONPATH=src python -m repro.launch.serve --continuous \
         --arch stablelm-1.6b --slots 4 --requests 8 --page-size 16
@@ -65,6 +77,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticCorpus
+from repro.launch.prefix_cache import PrefixCache
 from repro.launch.sampling import SamplingParams, sample_token
 from repro.models import attention, build_model
 from repro.models.model import ModelAPI
@@ -118,12 +131,21 @@ class AdmissionError(ValueError):
 
 
 class PagePool:
-    """Host-side free-list allocator over the shared physical KV page pool.
+    """Host-side refcounted free-list allocator over the shared physical KV
+    page pool.
 
     Page 0 is the reserved SCRATCH page: it is never handed out, and every
     unallocated page-table entry points at it, so stray writes (retired
     slots whose ``pos`` keeps drifting inside the jitted decode step, tail
     entries of a prefill scatter) land somewhere harmless.
+
+    Pages carry REFCOUNTS so one physical page can back several logical
+    views (shared prompt prefixes, the prefix-cache index): ``alloc`` hands
+    a page out at rc=1, ``share`` adds a reference to an already-live page,
+    and ``free`` drops one reference — only a page whose count reaches 0
+    returns to the free list. Sharing a free page and over-freeing a live
+    one are both hard errors (rc-underflow / double-free guards), because
+    either would let two owners scribble on one page.
 
     The free list is a LIFO stack: ``free`` pushes, ``alloc`` pops, so the
     MOST RECENTLY freed pages are reused first (they are the likeliest to
@@ -141,7 +163,7 @@ class PagePool:
         self.page_size = page_size
         # stack: pop() yields 1, 2, 3, … on a fresh pool
         self._free = list(range(num_pages - 1, 0, -1))
-        self._held: set[int] = set()
+        self._rc: dict[int, int] = {}
         self.peak_in_use = 0
 
     @property
@@ -157,22 +179,48 @@ class PagePool:
     def in_use(self) -> int:
         return self.capacity - self.available
 
+    @property
+    def live_refs(self) -> int:
+        """Total outstanding references across all live pages (≥ in_use;
+        the excess is the number of shared views)."""
+        return sum(self._rc.values())
+
+    def refcount(self, page: int) -> int:
+        return self._rc.get(page, 0)
+
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages, or None (and no partial allocation) if the pool
-        cannot cover the request."""
+        """Pop ``n`` pages at rc=1 each, or None (and no partial
+        allocation) if the pool cannot cover the request."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._held.update(pages)
+        for p in pages:
+            self._rc[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pages
 
+    def share(self, page: int) -> int:
+        """Add a reference to a LIVE page (prefix sharing / index pin).
+        Returns the new count. Sharing a free or foreign page is an error —
+        a free page may be re-allocated and overwritten at any moment."""
+        if self._rc.get(page, 0) < 1:
+            raise ValueError(f"share of free/foreign page {page}")
+        self._rc[page] += 1
+        return self._rc[page]
+
     def free(self, pages) -> None:
+        """Drop one reference per listed page; pages reaching rc=0 return
+        to the free list (LIFO). Freeing a page with no live references is
+        the double-free / rc-underflow guard firing."""
         for p in pages:
-            if p not in self._held:
+            rc = self._rc.get(p, 0)
+            if rc < 1:
                 raise ValueError(f"double/foreign free of page {p}")
-            self._held.discard(p)
-            self._free.append(p)
+            if rc == 1:
+                del self._rc[p]
+                self._free.append(p)
+            else:
+                self._rc[p] = rc - 1
 
 
 @dataclasses.dataclass
@@ -239,6 +287,9 @@ class _Slot:
     feed: np.ndarray | None = None  # tokens to prefill / teacher-force —
     #                                 the prompt, or prompt + generated[:-1]
     #                                 when resuming a preempted request
+    prefix_len: int = 0           # leading feed tokens already resident in
+    #                               shared prefix pages (chunked prefill
+    #                               covers only feed[prefix_len:])
     resumed: bool = False         # suppress the next emission: the token is
     #                               already known (generated[-1])
     pos_host: int = 0             # host mirror of the slot's write position
@@ -302,10 +353,32 @@ class ServeEngine:
         ``num_slots * ceil(capacity / page_size) + 1``. Undersizing it
         oversubscribes memory — admission throttles on a watermark and
         decode OOM preempts the youngest slot.
+    table_width : logical pages per slot (windowless paged mode). 0
+        (default) bounds it to RING-EQUIVALENT width (``num_slots ×
+        pages_per_ring``) so the jnp decode/prefill gather+attend work per
+        step stays at ring scale even over an oversized pool; an explicit
+        value (or ``long_requests``) widens it.
+    long_requests : give every slot whole-pool logical width
+        (``num_pages - 1`` table entries) — one request may stretch across
+        every allocatable page, at ``num_slots×`` the per-step jnp gather
+        cost the ring engine paid.
     watermark_pages : free pages admission must leave in reserve while any
         OTHER slot is live (paged mode) — headroom that lets running slots
         keep decoding without immediate preemption. Waived when nothing
         else is live, so progress is always possible.
+    prefix_cache : index retired requests' full prompt pages in a radix
+        trie (``launch/prefix_cache.py``) keyed by page-sized token
+        chunks, and map common prompt prefixes of later requests onto the
+        SAME physical pages — only the uncached suffix is prefilled. Pages
+        are refcounted; the last shared page splits copy-on-write when a
+        suffix or re-prefilled token would overwrite it; index entries are
+        LRU-evicted under pool pressure (before watermark throttling and
+        OOM preemption), so a cache-hot pool degrades to the no-sharing
+        engine instead of thrashing. Output is token-identical to
+        ``prefix_cache=False``. Requires chunked prefill and ``window ==
+        0`` (silently off otherwise).
+    prefix_cache_pages : cap on pages the prefix index may pin (0 = the
+        pool's allocatable capacity).
     eos_id : optional token id that retires a sequence early.
     seed : engine-level sampling seed; requests without an explicit
         ``SamplingParams.seed`` draw from PRNGKey(seed) folded with their
@@ -330,7 +403,11 @@ class ServeEngine:
         paged_cache: bool = False,
         page_size: int = 16,
         num_pages: int = 0,
+        table_width: int = 0,
+        long_requests: bool = False,
         watermark_pages: int = 0,
+        prefix_cache: bool = False,
+        prefix_cache_pages: int = 0,
         eos_id: int | None = None,
         seed: int = 0,
         time_fn: Callable[[], float] | None = None,
@@ -383,18 +460,28 @@ class ServeEngine:
                 num_pages = num_slots * pages_per_ring + 1
             self.page_size = page_size
             self.num_pages = num_pages
-            # logical ring capacity per slot: the window when sliding-window
-            # attention bounds context anyway, else the WHOLE allocatable
-            # pool — one request may stretch across every page
-            self.table_width = (
-                pages_per_ring if (0 < window < max_seq) else num_pages - 1
-            )
+            # Logical ring capacity per slot: the window when sliding-window
+            # attention bounds context anyway; else RING-EQUIVALENT width
+            # (num_slots × pages_per_ring — the work the jnp decode/prefill
+            # gathers scale with) by default, or the WHOLE allocatable pool
+            # with ``long_requests`` / an explicit ``table_width`` so one
+            # request may stretch across every page. Logical width may
+            # exceed the PHYSICAL pool (a tight pool oversubscribes);
+            # ``submit`` rejects what the physical pool can never hold.
+            if 0 < window < max_seq:
+                self.table_width = pages_per_ring
+                if num_pages - 1 < self.table_width:
+                    raise ValueError(
+                        f"num_pages {num_pages} cannot back a table of "
+                        f"{self.table_width} pages (window {window})"
+                    )
+            elif table_width > 0:
+                self.table_width = table_width
+            elif long_requests:
+                self.table_width = num_pages - 1
+            else:
+                self.table_width = num_slots * pages_per_ring
             self.cap = self.table_width * page_size
-            if num_pages - 1 < self.table_width:
-                raise ValueError(
-                    f"num_pages {num_pages} cannot back a table of "
-                    f"{self.table_width} pages (window {window})"
-                )
             self.pool = PagePool(num_pages, page_size)
             self.watermark_pages = watermark_pages
             self._table_np = np.zeros((num_slots, self.table_width), np.int32)
@@ -406,11 +493,31 @@ class ServeEngine:
                 params, num_slots, num_pages, page_size, self.table_width,
                 window=window,
             )
+            # Prefix sharing rides the page table: it needs chunked prefill
+            # (suffix rounds) and a non-wrapping logical ring (windowless),
+            # and silently stays off otherwise — the engine then behaves
+            # exactly like the non-sharing paged engine.
+            self.prefix = (
+                PrefixCache(self.pool, prefix_cache_pages)
+                if prefix_cache and window == 0 and prefill == "chunked"
+                else None
+            )
         else:
             self.pool = None
+            self.prefix = None
             self.cache = model.init_slot_cache(
                 params, num_slots, max_seq, window=window
             )
+        self.prefix_cache = self.prefix is not None
+        # prefix-sharing counters (reset by reset_metrics): hit/lookup
+        # tokens drive the hit rate, prefill_tokens counts tokens actually
+        # run through chunked prefill (the FLOPs the cache saves), and
+        # cow_copies counts copy-on-write page splits.
+        self.prefix_hit_pages = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.prefill_tokens = 0
+        self.cow_copies = 0
         # Every hot-path jit donates the cache pytree (argument 1): the ring
         # buffers are updated in place instead of being functionally copied
         # through each step. Each wrapper body runs exactly once per input
@@ -435,8 +542,33 @@ class ServeEngine:
                 return model.prefill_slots(p, c, t, l, s, window=window)
 
             self._prefill_slots = jax.jit(_prefill_slots_fn, donate_argnums=donate)
+
+            # suffix-prefill entry (prefix sharing): same bucket ladder,
+            # same compile counter — the recompile gate bounds BOTH paths
+            def _prefill_suffix_fn(p, c, t, l, s, st):
+                self._compiles["prefill_slots"] += 1
+                return model.prefill_slots(p, c, t, l, s, starts=st,
+                                           window=window)
+
+            self._prefill_suffix = jax.jit(
+                _prefill_suffix_fn, donate_argnums=donate
+            )
         else:
             self._prefill_slots = None
+            self._prefill_suffix = None
+
+        # COW page split: copy one physical page (all layers) inside the
+        # donated cache — in place under donation, one compile total
+        def _copy_page_fn(c, src, dst):
+            return {
+                **c,
+                "k": c["k"].at[:, dst].set(c["k"][:, src]),
+                "v": c["v"].at[:, dst].set(c["v"][:, src]),
+            }
+
+        self._copy_page = jax.jit(
+            _copy_page_fn, donate_argnums=(0,) if donate_cache else ()
+        )
         self._sample = jax.jit(
             lambda key, row, t, k, p: sample_token(
                 key, row, t, k, p, model.cfg.vocab_size
@@ -485,8 +617,15 @@ class ServeEngine:
         self.prefill_dispatches = 0
         self.preemptions = 0
         self.occupancy = []
+        self.prefix_hit_pages = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.prefill_tokens = 0
+        self.cow_copies = 0
         if self.paged_cache:
             self.pool.peak_in_use = self.pool.in_use
+        if self.prefix is not None:
+            self.prefix.reset_stats()
         self.reset_clock()
 
     def warm(self, prompt_lens, *, gen_tokens: int = 2,
@@ -519,6 +658,11 @@ class ServeEngine:
                             sampling=sampling)
                     for j in range(w)
                 ])
+        if self.prefix is not None:
+            # warm traffic published its zero-token pages (deliberately —
+            # repeated warm rounds hit them, tracing the suffix-prefill and
+            # COW paths too); real traffic must start from an empty index
+            self.prefix.clear()
         self.reset_metrics()
 
     @property
@@ -552,6 +696,21 @@ class ServeEngine:
             "preemptions": self.preemptions,
             "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             "occupancy_max": float(np.max(occ)) if occ else 0.0,
+            "prefix_cache": self.prefix_cache,
+            "prefix_hit_pages": self.prefix_hit_pages,
+            "prefix_hit_rate": (
+                self.prefix_hit_tokens / self.prefix_lookup_tokens
+                if self.prefix_lookup_tokens
+                else 0.0
+            ),
+            "prefill_tokens": self.prefill_tokens,
+            "cow_copies": self.cow_copies,
+            "prefix_pages_cached": (
+                self.prefix.size if self.prefix is not None else 0
+            ),
+            "prefix_evicted_pages": (
+                self.prefix.evicted_pages if self.prefix is not None else 0
+            ),
         }
 
     @property
@@ -574,12 +733,23 @@ class ServeEngine:
         FIFO admission. A rejected submit leaves the engine fully usable."""
         need = len(req.prompt) + req.max_new_tokens
         if self.paged_cache:
-            if self.window == 0 and need > self.cap:
+            # Windowless sequences are bounded by BOTH limits: the logical
+            # table (cap tokens) and the physical pool (allocatable pages —
+            # a tight pool may be smaller than the table, and a request
+            # whose pages can never all be resident would otherwise sit at
+            # the queue head forever while alloc keeps returning None).
+            need_pages = -(-need // self.page_size)
+            if self.window == 0 and (
+                need > self.cap or need_pages > self.pool.capacity
+            ):
                 raise AdmissionError(
                     req.uid, "exceeds_pool",
                     f"request {req.uid}: prompt {len(req.prompt)} + gen "
-                    f"{req.max_new_tokens} exceeds pool capacity {self.cap} "
-                    f"tokens ({self.pool.capacity} pages × {self.page_size})",
+                    f"{req.max_new_tokens} exceeds pool capacity "
+                    f"({min(self.cap, self.pool.capacity * self.page_size)} "
+                    f"tokens: table {self.table_width} pages × "
+                    f"{self.page_size}, pool {self.pool.capacity} "
+                    "allocatable pages)",
                 )
         elif self.window == 0 and need > self.max_seq:
             raise AdmissionError(
@@ -646,18 +816,46 @@ class ServeEngine:
                         req.prompt,
                         np.asarray(resume.generated[:-1], np.int32),
                     ])
+                hits: list[int] = []
+                suffix_start = 0
+                cow = False
                 if self.paged_cache:
-                    n_pages = (
-                        min(-(-len(feed) // self.page_size), self.table_width)
-                        if self.prefill_mode == "chunked"
-                        else 1  # interleaved: pages arrive lazily per step
-                    )
+                    if self.prefill_mode == "chunked":
+                        total_pages = min(
+                            -(-len(feed) // self.page_size), self.table_width
+                        )
+                        if self.prefix is not None:
+                            # map cached prefix pages straight into the
+                            # table; SHARE them first so eviction below can
+                            # never recycle a page we are about to alias
+                            hits = self.prefix.match(feed)
+                            for p in hits:
+                                self.pool.share(p)
+                            # at least one suffix token must run through
+                            # prefill (the emission needs its logits); a
+                            # fully cached prompt re-prefills its last
+                            # token into a COW copy of the final hit page
+                            suffix_start = min(
+                                len(hits) * self.page_size, len(feed) - 1
+                            )
+                            cow = len(hits) * self.page_size > suffix_start
+                        n_fresh = total_pages - len(hits) + (1 if cow else 0)
+                    else:
+                        n_fresh = 1  # interleaved: pages arrive lazily
                     # slots claimed earlier this round are already assigned
                     # into self.slots, so this also covers them
                     others_live = any(s is not None for s in self.slots)
                     hold = self.watermark_pages if others_live else 0
-                    if self.pool.available < n_pages + hold:
-                        break  # pool pressure: request stays queued
+                    if self.pool.available < n_fresh + hold:
+                        # pool pressure: shed cold index entries before
+                        # throttling (graceful degradation to no-sharing)
+                        if self.prefix is not None:
+                            self.prefix.evict(
+                                n_fresh + hold - self.pool.available
+                            )
+                        if self.pool.available < n_fresh + hold:
+                            self.pool.free(hits)  # undo the shares
+                            break  # request stays queued
                 self.waiting.popleft()
                 i = free.pop(0)
                 self.cache = reset_slot(self.cache, i)
@@ -669,15 +867,35 @@ class ServeEngine:
                     admit_time=now,
                     key=self._request_key(req),
                     feed=feed,
+                    prefix_len=suffix_start,
                 )
                 if self.paged_cache:
                     self._admit_seq += 1
                     slot.seq = self._admit_seq
                     self._table_np[i, :] = 0
                     if self.prefill_mode == "chunked":
-                        pages = self.pool.alloc(n_pages)
+                        pages = list(hits)
+                        if cow:
+                            # the suffix overwrites the tail of the last
+                            # shared page: split it (copy-on-write) so the
+                            # index copy stays immutable
+                            src = pages[-1]
+                            dst = self.pool.alloc(1)[0]
+                            self.cache = self._copy_page(
+                                self.cache,
+                                jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32),
+                            )
+                            self.pool.free([src])  # drop our share
+                            pages[-1] = dst
+                            self.cow_copies += 1
+                        fresh = self.pool.alloc(total_pages - len(pages))
+                        pages.extend(fresh)
                         self._slot_pages[i] = pages
                         self._table_np[i, : len(pages)] = pages
+                        self.prefix_hit_pages += len(hits)
+                        self.prefix_hit_tokens += suffix_start
+                        self.prefix_lookup_tokens += len(feed)
                     else:
                         self._slot_pages[i] = []
                     self._table_dirty = True
@@ -736,8 +954,13 @@ class ServeEngine:
 
         self._sync_table()
         if self.batch_prefill:
-            prompts = [self.slots[i].feed for i in claimed]
-            round_len = max(p.size for p in prompts)
+            # each row prefills only the UNCACHED SUFFIX of its feed —
+            # prefix_len is 0 everywhere unless prefix sharing hit
+            sufs = [
+                self.slots[i].feed[self.slots[i].prefix_len:] for i in claimed
+            ]
+            row_starts = [self.slots[i].prefix_len for i in claimed]
+            round_len = max(p.size for p in sufs)
             if self.bucket_prefill:
                 width = bucket_width(len(claimed), self.num_slots)
                 padded_len = bucket_length(round_len)
@@ -746,10 +969,12 @@ class ServeEngine:
                 padded_len = round_len
             tokens = np.zeros((width, padded_len), np.int32)
             lengths = np.zeros(width, np.int32)
+            starts = np.zeros(width, np.int32)
             slot_ids = np.zeros(width, np.int32)
-            for j, (i, p) in enumerate(zip(claimed, prompts)):
+            for j, (i, p) in enumerate(zip(claimed, sufs)):
                 tokens[j, : p.size] = p
                 lengths[j] = p.size
+                starts[j] = row_starts[j]
                 slot_ids[j] = i
             if width > len(claimed):
                 # width-bucket padding rows: length 0 (prefill_slots writes
@@ -757,24 +982,43 @@ class ServeEngine:
                 # claimed set — width <= num_slots guarantees enough spares.
                 spare = [i for i in range(self.num_slots) if i not in set(claimed)]
                 slot_ids[len(claimed):] = spare[: width - len(claimed)]
-            self.cache, logits = self._prefill_slots(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(slot_ids),
-            )
+            if any(row_starts):
+                self.cache, logits = self._prefill_suffix(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(slot_ids),
+                    jnp.asarray(starts),
+                )
+            else:
+                # cold round: the pre-existing trace, bitwise unchanged
+                self.cache, logits = self._prefill_slots(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(slot_ids),
+                )
             self.prefill_dispatches += 1
+            self.prefill_tokens += int(sum(p.size for p in sufs))
             for j, i in enumerate(claimed):
                 emit(i, logits[j])
         elif self.paged_cache:
             # per-request dispatches, but through prefill_slots (the paged
             # writer) at width 1 — prefill_into_slot is ring-only
             for i in claimed:
-                feed = self.slots[i].feed
-                self.cache, lg = self._prefill_slots(
-                    self.params, self.cache, jnp.asarray(feed[None, :]),
-                    jnp.asarray([feed.size], np.int32),
-                    jnp.asarray([i], np.int32),
-                )
+                slot = self.slots[i]
+                suf = slot.feed[slot.prefix_len:]
+                if slot.prefix_len:
+                    self.cache, lg = self._prefill_suffix(
+                        self.params, self.cache, jnp.asarray(suf[None, :]),
+                        jnp.asarray([suf.size], np.int32),
+                        jnp.asarray([i], np.int32),
+                        jnp.asarray([slot.prefix_len], np.int32),
+                    )
+                else:
+                    self.cache, lg = self._prefill_slots(
+                        self.params, self.cache, jnp.asarray(suf[None, :]),
+                        jnp.asarray([suf.size], np.int32),
+                        jnp.asarray([i], np.int32),
+                    )
                 self.prefill_dispatches += 1
+                self.prefill_tokens += int(suf.size)
                 emit(i, lg[0])
         else:
             for i in claimed:
@@ -783,6 +1027,7 @@ class ServeEngine:
                     jnp.asarray(self.slots[i].feed[None, :]), i,
                 )
                 self.prefill_dispatches += 1
+                self.prefill_tokens += int(self.slots[i].feed.size)
                 emit(i, lg[0])
         return retired
 
@@ -812,9 +1057,22 @@ class ServeEngine:
         )
         self.slots[i] = None
         if self.paged_cache:
-            # pages return to the pool for IMMEDIATE reuse; the table row
-            # reverts to the scratch page so the retired slot's drifting
-            # ``pos`` writes nothing anyone reads
+            if self.prefix is not None:
+                # publish the slot's FULL prompt pages into the prefix
+                # index (the index takes its own refs) BEFORE dropping the
+                # slot's — already-indexed chunks dedupe to their existing
+                # physical page. Generated tokens and partial tail pages
+                # are never indexed.
+                n_pub = len(slot.req.prompt) // self.page_size
+                n_pub = min(n_pub, len(self._slot_pages[i]))
+                if n_pub > 0:
+                    self.prefix.insert(
+                        slot.req.prompt, self._slot_pages[i][:n_pub]
+                    )
+            # the slot's refs return to the pool for IMMEDIATE reuse (pages
+            # the index pinned stay live); the table row reverts to the
+            # scratch page so the retired slot's drifting ``pos`` writes
+            # nothing anyone reads
             self.pool.free(self._slot_pages[i])
             self._slot_pages[i] = []
             self._table_np[i, :] = 0
@@ -879,6 +1137,9 @@ class ServeEngine:
                     self._table_np[i, pi] = pages[0]
                     self._table_dirty = True
                     break
+                # shed cold prefix-index pages before preempting live work
+                if self.prefix is not None and self.prefix.evict(1) > 0:
+                    continue
                 victim = self._youngest_live()
                 self._preempt(victim)
                 if victim == i:
@@ -1058,7 +1319,10 @@ def serve_continuous(
     paged_cache: bool = True,
     page_size: int = 16,
     num_pages: int = 0,
+    long_requests: bool = False,
     watermark_pages: int = 0,
+    prefix_cache: bool = True,
+    prefix_cache_pages: int = 0,
     sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
@@ -1087,7 +1351,10 @@ def serve_continuous(
         paged_cache=paged_cache,
         page_size=page_size,
         num_pages=num_pages,
+        long_requests=long_requests,
         watermark_pages=watermark_pages,
+        prefix_cache=prefix_cache,
+        prefix_cache_pages=prefix_cache_pages,
         seed=seed,
     )
     reqs = make_requests(
@@ -1123,6 +1390,8 @@ def serve_continuous(
         "paged_decode": engine.paged_decode,
         "donate_cache": engine.donate_cache,
         "paged_cache": engine.paged_cache,
+        "prefix_cache": engine.prefix_cache,
+        "prefill_tokens": engine.prefill_tokens,
         "sampling": None if sampling is None else dataclasses.asdict(sampling),
         "engine_steps": engine.steps,
         "prefill_dispatches": engine.prefill_dispatches,
@@ -1144,6 +1413,12 @@ def serve_continuous(
             f"{ps['allocatable_pages']} pages, "
             f"{ps['preemptions']} preemptions"
         )
+        if engine.prefix_cache:
+            pool_line += (
+                f", prefix hit {ps['prefix_hit_rate']:.0%} "
+                f"({ps['prefix_hit_pages']} pages, "
+                f"{ps['cow_copies']} CoW)"
+            )
     log_fn(
         f"{cfg.name}: {n_requests} reqs × {gen_tokens} tok over "
         f"{num_slots} slots in {engine.steps} steps "

@@ -13,7 +13,13 @@ sliding-window ring caches. Continuous mode serves from the shared PAGED
 KV pool by default (--page-size/--num-pages tune it, --no-paged-cache
 restores per-slot contiguous rings): sequences are bounded by pool pages
 instead of a per-slot max_seq, and an undersized pool oversubscribes
-memory with watermark admission + youngest-slot preemption.
+memory with watermark admission + youngest-slot preemption. On top of the
+pool, SHARED-PREFIX caching is default-on (--no-prefix-cache disables,
+--prefix-cache-pages caps the index): retired prompts' full pages are
+indexed in a radix trie and later requests with a common prefix alias the
+same physical pages, prefilling only their uncached suffix — same tokens,
+a fraction of the prefill FLOPs. Slots default to ring-equivalent logical
+width; --long-requests widens every slot's page table to the whole pool.
 
     # oracle (single fixed batch)
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
@@ -175,6 +181,26 @@ def main(argv=None):
                     help="[continuous] free pages admission must leave in "
                     "reserve while other slots are live (paged cache; "
                     "0 = pack the pool and rely on preemption)")
+    ap.add_argument("--long-requests", action="store_true",
+                    help="[continuous] give every slot whole-pool logical "
+                    "width (table entries for all allocatable pages) "
+                    "instead of the ring-equivalent default — serves "
+                    "requests longer than num_slots would split, at "
+                    "num_slots× the per-step jnp gather cost")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="[continuous] disable shared-prefix KV reuse "
+                    "(paged cache): every request prefills its full "
+                    "prompt instead of mapping cached prefix pages and "
+                    "prefilling only the uncached suffix")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="[continuous] enable shared-prefix KV reuse "
+                    "(default on with the paged cache)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0,
+                    help="[continuous] cap on pool pages the prefix index "
+                    "may pin (0 = the pool's allocatable capacity); "
+                    "entries are LRU-evicted under pool pressure")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
     # sampling (0 temperature = greedy; per-request streams derive from
@@ -214,7 +240,10 @@ def main(argv=None):
             paged_cache=args.paged_cache,
             page_size=args.page_size,
             num_pages=args.num_pages,
+            long_requests=args.long_requests,
             watermark_pages=args.watermark_pages,
+            prefix_cache=args.prefix_cache,
+            prefix_cache_pages=args.prefix_cache_pages,
             sampling=sampling,
             seed=args.seed, stagger=args.stagger,
         )

@@ -31,6 +31,11 @@ Params = Any
 
 NEG_INF = -2.0**30  # large finite negative; avoids NaN from all-masked rows
 
+# Unreachable token position: KV lanes parked here are excluded by every
+# causal mask (no real query position reaches 2^30). Used by suffix prefill
+# to banish gathered page-table lanes that hold no live prefix.
+FAR_POS = 2**30
+
 # When True, decode_attend computes its attention through the Pallas
 # flash-decode kernel (repro.kernels.swa_decode) instead of the jnp path.
 # The jnp path below IS the kernel's oracle; tests pin them equal.
@@ -257,28 +262,40 @@ def fill_cache_rows(
     k: jax.Array,
     v: jax.Array,
     lengths: jax.Array,
+    starts: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Batched per-row ring write for multi-slot prefill.
 
     Row r writes its first ``lengths[r]`` tokens of k/v (already rotated)
-    into its own ring row, leaving the ring in the exact state lengths[r]
-    sequential one-token writes (slot = pos % cap) would — i.e. the batched
-    sibling of ``fill_cache`` with per-row prompt lengths. Implemented as a
-    gather (for each ring slot c, the LAST prompt index landing on c), not a
-    scatter: scatters with duplicate indices (wrap-around) have unspecified
-    winners.
+    into its own ring row starting at ring position ``starts[r]`` (0 when
+    ``starts`` is None), leaving the ring in the exact state lengths[r]
+    sequential one-token writes (slot = pos % cap, pos counted from the
+    row's start) would — i.e. the batched sibling of ``fill_cache`` with
+    per-row prompt lengths and start offsets. A nonzero start is the
+    SUFFIX-prefill case: ring entries below the start already hold a shared
+    prefix and must not move. Implemented as a gather (for each ring slot
+    c, the LAST prompt index landing on c), not a scatter: scatters with
+    duplicate indices (wrap-around) have unspecified winners.
 
     cache_k/v: (n, C, Hkv, hd) the n target ring rows; k/v: (n, S, Hkv, hd)
     right-padded prompts; lengths: (n,) true lengths. Ring entries a row
-    never reaches (c >= lengths[r] when the prompt fits) keep their old
-    value. Returns (new_k, new_v).
+    never reaches keep their old value. Returns (new_k, new_v).
+
+    ``starts=None`` traces exactly the pre-existing zero-start math, so
+    every legacy caller stays bitwise unchanged.
     """
     cap = cache_k.shape[1]
     c = jnp.arange(cap)[None, :]                      # (1, C)
     last = jnp.asarray(lengths, jnp.int32)[:, None] - 1  # (n, 1)
-    # largest prompt index j < lengths[r] with j ≡ c (mod cap)
-    j_star = c + cap * ((last - c) // cap)            # (n, C)
-    written = c <= last
+    if starts is None:
+        c_rel = c                                     # ring slot == index
+    else:
+        # prompt index j lands at ring slot (starts + j) % cap, so the
+        # smallest index landing on c is (c - starts) mod cap
+        c_rel = (c - jnp.asarray(starts, jnp.int32)[:, None]) % cap
+    # largest prompt index j < lengths[r] with j ≡ c_rel (mod cap)
+    j_star = c_rel + cap * ((last - c_rel) // cap)    # (n, C)
+    written = c_rel <= last
     j_safe = jnp.clip(j_star, 0, k.shape[1] - 1)[:, :, None, None]
     gk = jnp.take_along_axis(k, j_safe, axis=1)       # (n, C, Hkv, hd)
     gv = jnp.take_along_axis(v, j_safe, axis=1)

@@ -41,8 +41,11 @@ class ModelAPI:
     # init_slot_cache(params, num_slots, max_seq, window=) -> per-slot cache
     # prefill_slot(params, cache, tokens (1,S), slot, window=) -> (cache, logits)
     # prefill_slots(params, cache, tokens (n,S), lengths (n,), slots (n,),
-    #               window=) -> (cache, logits (n, Vp)) — batched admission:
-    #               n right-padded prompts into n distinct slots, one forward
+    #               starts=None, window=) -> (cache, logits (n, Vp)) —
+    #               batched admission: n right-padded prompts into n
+    #               distinct slots, one forward; starts (n,) switches to
+    #               SUFFIX prefill over a pre-populated page table (prefix
+    #               sharing: row r's tokens start at position starts[r])
     # init_paged_cache(params, num_slots, num_pages, page_size, table_width,
     #               window=) -> shared paged pool + per-slot page tables;
     #               decode/prefill_slots accept either cache layout
@@ -85,9 +88,11 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
             cfg, params, cache, tokens, slot, ffn=ffn, window=window
         )
 
-    def prefill_slots(params, cache, tokens, lengths, slots, *, window=0):
+    def prefill_slots(params, cache, tokens, lengths, slots, *, starts=None,
+                      window=0):
         return transformer.prefill_slots(
-            cfg, params, cache, tokens, lengths, slots, ffn=ffn, window=window
+            cfg, params, cache, tokens, lengths, slots, starts=starts,
+            ffn=ffn, window=window,
         )
 
     def init_paged_cache(

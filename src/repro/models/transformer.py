@@ -354,6 +354,7 @@ def prefill_slots(
     lengths: jax.Array,
     slots: jax.Array,
     *,
+    starts: jax.Array | None = None,
     ffn: FFNHooks = DENSE_FFN,
     window: int = 0,
 ) -> tuple[dict, jax.Array]:
@@ -380,12 +381,25 @@ def prefill_slots(
     allocated before this call, and unallocated tail entries point at the
     scratch page 0 so their (never-read) writes stay harmless. A padding
     row's scatter writes back its own gathered bits unchanged.
+
+    SUFFIX MODE (``starts`` not None; paged, windowless only): row r's
+    tokens are the UNCACHED SUFFIX of its prompt, occupying absolute
+    positions ``starts[r] .. starts[r]+lengths[r]-1`` over a page table
+    whose first ``ceil(starts[r]/page)`` entries already hold the shared
+    prefix KV (mapped in by the engine's prefix index). Queries run at
+    their absolute positions; attention spans the gathered prefix pages
+    PLUS the suffix's own k/v (prefix lanes beyond each row's start are
+    pushed to an unreachable position, so causal masking kills them); ring
+    writes land from ``starts[r]`` via ``fill_cache_rows``. A row with
+    ``starts[r] == 0`` is an ordinary cold prefill and produces the same
+    tokens as the ``starts=None`` path. ``starts=None`` itself traces the
+    pre-existing math unchanged, so non-sharing engines stay bitwise
+    identical.
     """
     assert cache["pos"].ndim == 1, "prefill_slots requires a per-slot cache"
     n, s = tokens.shape
     q_chunk = default_q_chunk(s)
     x = embed_tokens(params["embed"], tokens)
-    pos = positions_for(tokens)
     slots = jnp.asarray(slots, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
     table = cache.get("table")
@@ -394,22 +408,55 @@ def prefill_slots(
         flat_pages = t_rows.reshape(-1)            # (n·T,)
         page = cache["k"].shape[2]
         t_w = table.shape[1]
+    if starts is None:
+        pos = positions_for(tokens)
+    else:
+        assert table is not None, "suffix prefill requires a paged cache"
+        assert window == 0, "suffix prefill is windowless (no ring wrap)"
+        starts = jnp.asarray(starts, jnp.int32)
+        pos = starts[:, None] + positions_for(tokens)
+        # global position held by ring slot c is c (windowless, no wrap);
+        # lanes at/after each row's start hold no prefix yet — banish them
+        # beyond any real query position so the causal mask excludes them
+        ring_c = jnp.arange(t_w * page)[None, :]
+        prefix_pos = jnp.where(ring_c < starts[:, None], ring_c, attn.FAR_POS)
 
     def body(h, sl):
         lp, ck, cv = sl  # ck/cv: one layer — (B, C, Hkv, hd) or (P, page, Hkv, hd)
         a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
         k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
-        a = attn.attend_full(
-            lp["attn"], a, pos, cfg, causal=True, window=window, q_chunk=q_chunk
-        )
+        if starts is None:
+            a = attn.attend_full(
+                lp["attn"], a, pos, cfg, causal=True, window=window,
+                q_chunk=q_chunk,
+            )
+        else:
+            # gather the prefix pages once and attend over [prefix | suffix]
+            hkv, hd = ck.shape[-2], ck.shape[-1]
+            gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
+            gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
+            a = attn.attend_full(
+                lp["attn"], a, pos, cfg, causal=True, window=window,
+                q_chunk=q_chunk,
+                kv=(
+                    jnp.concatenate([gk, k], axis=1),
+                    jnp.concatenate([gv, v], axis=1),
+                ),
+                kv_positions=jnp.concatenate(
+                    [prefix_pos, pos], axis=1
+                ),
+            )
         h = h + a
         f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
         f, _ = ffn.apply(lp["ffn"], f, cfg)
         if table is not None:
             hkv, hd = ck.shape[-2], ck.shape[-1]
-            gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
-            gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
-            rows_k, rows_v = attn.fill_cache_rows(gk, gv, k, v, lengths)
+            if starts is None:
+                gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
+                gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
+            rows_k, rows_v = attn.fill_cache_rows(
+                gk, gv, k, v, lengths, starts=starts
+            )
             nk = ck.at[flat_pages].set(rows_k.reshape(n * t_w, page, hkv, hd))
             nv = cv.at[flat_pages].set(rows_v.reshape(n * t_w, page, hkv, hd))
             return h + f, (nk, nv)
@@ -420,12 +467,13 @@ def prefill_slots(
     x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
     last = jnp.take_along_axis(x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
     logits = lm_logits(params["embed"], last, cfg)[:, 0]
+    end = lengths if starts is None else starts + lengths
     new_cache = {
         "k": nk,
         "v": nv,
         # padding rows (length 0) must not touch their slot's position
         "pos": cache["pos"].at[slots].set(
-            jnp.where(lengths > 0, lengths, cache["pos"][slots])
+            jnp.where(lengths > 0, end, cache["pos"][slots])
         ),
         "window": cache["window"],
     }

@@ -263,6 +263,52 @@ def test_paged_cache_compile_gate(model_and_params):
     assert engine.compiles["prefill_slots"] == before
 
 
+def test_prefix_suffix_rounds_stay_in_bucket_ladder(model_and_params):
+    """Compile-count gate for PREFIX SHARING: suffix-only prefill rounds
+    bucket their (width, padded SUFFIX length) exactly like full prompts,
+    so the prefix engine's total prefill_slots specializations stay inside
+    cold-ladder + suffix-ladder — NOT one per distinct (suffix length,
+    start) pair (starts ride in as a traced array)."""
+    import numpy as np
+
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, num_slots=4, paged_cache=True,
+                    page_size=4, prefix_cache=True, prefix_cache_pages=16)
+    rng = np.random.default_rng(0)
+    common = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)  # 4 pages
+    # cold round: publishes the common prefix
+    engine.run([Request(uid=0, prompt=common, max_new_tokens=2)])
+    cold_shapes = {(bucket_width(1, 4), bucket_length(16))}
+    # many suffix rounds: distinct (width, suffix length, start) combos —
+    # every row hits the 4 shared pages, suffixes prefill from start 16
+    suffix_shapes = set()
+    uid = 1
+    for w, sl in [(1, 3), (1, 5), (2, 3), (2, 7), (3, 5), (4, 9), (2, 11),
+                  (1, 9), (3, 11), (4, 3)]:
+        reqs = []
+        for j in range(w):
+            tail = rng.integers(1, cfg.vocab_size, sl).astype(np.int32)
+            reqs.append(Request(uid=uid, max_new_tokens=2,
+                                prompt=np.concatenate([common, tail])))
+            uid += 1
+        engine.run(reqs)
+        suffix_shapes.add((bucket_width(w, 4), bucket_length(sl)))
+    assert engine.prefix_hit_pages > 0, "suffix rounds must actually hit"
+    allowed = len(cold_shapes) + len(suffix_shapes)
+    compiled = engine.compiles["prefill_slots"]
+    assert compiled <= allowed, (
+        f"prefix engine compiled prefill_slots {compiled} times; "
+        f"cold + suffix bucket ladders allow {allowed}"
+    )
+    assert engine.compiles["decode"] == 1
+    # covered buckets stay covered: repeat traffic, zero new traces
+    before = engine.compiles["prefill_slots"]
+    tail = rng.integers(1, cfg.vocab_size, 4).astype(np.int32)
+    engine.run([Request(uid=uid, max_new_tokens=2,
+                        prompt=np.concatenate([common, tail]))])
+    assert engine.compiles["prefill_slots"] == before
+
+
 def test_paged_cache_donation(model_and_params):
     """Zero-copy stepping holds for the paged pool too: pre-step pool
     buffers are consumed by the donated jits, and donation stays invisible

@@ -125,3 +125,115 @@ def test_property_accounting_invariants(ops, num_pages):
     for h in held:
         pool.free(h)
     assert pool.available == pool.capacity
+
+
+# ------------------------------------------------------------- refcounting
+def test_share_increments_free_decrements():
+    """A shared page survives frees until its LAST reference drops —
+    alloc rc=1, each share +1, each free -1, rc==0 returns it."""
+    pool = PagePool(num_pages=4, page_size=4)
+    (p,) = pool.alloc(1)
+    assert pool.refcount(p) == 1
+    assert pool.share(p) == 2
+    assert pool.share(p) == 3
+    pool.free([p])
+    pool.free([p])
+    assert pool.refcount(p) == 1
+    assert pool.in_use == 1  # still live: one owner left
+    pool.free([p])
+    assert pool.refcount(p) == 0
+    assert pool.in_use == 0 and pool.available == pool.capacity
+
+
+def test_share_of_free_page_rejected():
+    """rc-underflow guard: a page on the free list may be re-allocated at
+    any time, so sharing it is a hard error, never a silent rc=1."""
+    pool = PagePool(num_pages=4, page_size=4)
+    with pytest.raises(ValueError, match="share"):
+        pool.share(1)  # never allocated
+    (p,) = pool.alloc(1)
+    pool.free([p])
+    with pytest.raises(ValueError, match="share"):
+        pool.share(p)  # was live, now free again
+
+
+def test_overfree_shared_page_rejected():
+    """Double-free guard counts references: free may be called exactly
+    refcount times, one more raises."""
+    pool = PagePool(num_pages=4, page_size=4)
+    (p,) = pool.alloc(1)
+    pool.share(p)
+    pool.free([p])
+    pool.free([p])
+    with pytest.raises(ValueError, match="free"):
+        pool.free([p])
+
+
+def test_lifo_reuse_preserved_for_rc0_pages():
+    """Shared pages do NOT enter the free list at intermediate frees; only
+    the rc==0 transition pushes, keeping LIFO order exact."""
+    pool = PagePool(num_pages=6, page_size=4)
+    a = pool.alloc(2)          # [1, 2]
+    b = pool.alloc(1)          # [3]
+    pool.share(a[0])           # page 1 rc=2
+    pool.free(a)               # page 1 rc=1 (not pushed), page 2 freed
+    pool.free(b)               # page 3 freed
+    assert pool.alloc(2) == [3, 2]  # LIFO; page 1 still live
+    assert pool.refcount(a[0]) == 1
+    pool.free([a[0]])          # rc 0 now — becomes most recently freed
+    assert pool.alloc(1) == [a[0]]
+
+
+def test_live_refs_counts_shares():
+    pool = PagePool(num_pages=8, page_size=4)
+    pages = pool.alloc(3)
+    pool.share(pages[0])
+    pool.share(pages[0])
+    pool.share(pages[2])
+    assert pool.in_use == 3
+    assert pool.live_refs == 6  # 3 + 2 extra + 1 extra
+
+
+@given(
+    ops=st.lists(st.integers(0, 9), min_size=1, max_size=60),
+    num_pages=st.integers(3, 13),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_refcount_invariants(ops, num_pages):
+    """Random admit/share/retire/evict sequences against a reference
+    refcount map: every allocatable page is either free or live
+    (capacity == available + pages-with-refs), the pool's counts match the
+    model exactly, Σ live refs ≥ live pages, and page 0 never escapes."""
+    pool = PagePool(num_pages=num_pages, page_size=4)
+    refs: dict[int, int] = {}  # reference model: page -> expected rc
+    for op in ops:
+        live = sorted(refs)
+        if op < 3 and live:      # retire: drop one ref from some page
+            p = live[op % len(live)]
+            pool.free([p])
+            refs[p] -= 1
+            if refs[p] == 0:
+                del refs[p]
+        elif op < 6 and live:    # share: one more view of some page
+            p = live[op % len(live)]
+            pool.share(p)
+            refs[p] += 1
+        else:                    # admit: allocate 1-2 fresh pages
+            n = (op % 2) + 1
+            pages = pool.alloc(n)
+            if len(refs) + n <= pool.capacity:
+                assert pages is not None
+            if pages is None:
+                continue
+            for p in pages:
+                assert p != 0 and p not in refs
+                refs[p] = 1
+        assert pool.in_use == len(refs)
+        assert pool.available + pool.in_use == pool.capacity
+        assert pool.live_refs == sum(refs.values())
+        assert pool.live_refs >= pool.in_use
+        for p, rc in refs.items():
+            assert pool.refcount(p) == rc
+    for p, rc in list(refs.items()):
+        pool.free([p] * rc)
+    assert pool.available == pool.capacity and pool.live_refs == 0

@@ -269,6 +269,39 @@ class TestTableMode:
                 np.asarray(solo[0]), np.asarray(batched[r])
             )
 
+    def test_rows_aliasing_shared_prefix_pages_bitwise(self):
+        """PREFIX SHARING at the kernel layer: two rows whose tables alias
+        the SAME physical pages for a common prefix must read bit-for-bit
+        what they read from private duplicated copies — aliasing is pure
+        placement, and table mode already tolerates arbitrary placement,
+        so no kernel change is needed (this pins that claim)."""
+        cap, page, shared_pages = 256, 64, 2
+        q, kc, vc = _rand(jax.random.PRNGKey(71), cap, 2)
+        # duplicate the shared-prefix CONTENT into both rows' caches
+        kc = kc.at[1, : shared_pages * page].set(kc[0, : shared_pages * page])
+        vc = vc.at[1, : shared_pages * page].set(vc[0, : shared_pages * page])
+        pos = jnp.asarray([150, 230], jnp.int32)  # both past the prefix
+        pool_k, pool_v, table = _scatter_to_pool(
+            kc, vc, page, jax.random.PRNGKey(72)
+        )
+        aliased = jnp.asarray(table).at[1, :shared_pages].set(
+            table[0, :shared_pages]
+        )  # row 1's prefix now points at row 0's physical pages
+        for tab in (table, aliased):
+            out = paged_decode(q, pool_k, pool_v, pos, 0, table=tab)
+            ref_out = ref.paged_table_decode_ref(
+                q, pool_k, pool_v, pos, tab, 0
+            )
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref_out), rtol=3e-5, atol=3e-5
+            )
+        a = paged_decode(q, pool_k, pool_v, pos, 0, table=table)
+        b = paged_decode(q, pool_k, pool_v, pos, 0, table=aliased)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        ra = ref.paged_table_decode_ref(q, pool_k, pool_v, pos, table, 0)
+        rb = ref.paged_table_decode_ref(q, pool_k, pool_v, pos, aliased, 0)
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+
     def test_ops_routes_table_mode(self):
         cap, page = 128, 64
         q, kc, vc = _rand(jax.random.PRNGKey(61), cap, 2)

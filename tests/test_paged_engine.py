@@ -382,6 +382,57 @@ def test_paged_submit_rejects_beyond_pool(model_and_params):
     assert len(outs[0].tokens) == 4
 
 
+def test_submit_rejects_prompt_pool_can_never_hold(model_and_params):
+    """Regression: a request within LOGICAL table capacity but whose pages
+    can never all be physically resident (tight pool) used to wait at the
+    queue head forever — alloc kept returning None while admission clamped
+    to table_width. It must be a structured submit-time rejection, and the
+    engine must keep serving."""
+    cfg, _, _ = model_and_params
+    engine = _build(
+        model_and_params, paged_cache=True, page_size=4, num_pages=5
+    )  # 4 allocatable pages = 16 resident tokens; logical cap is wider
+    assert engine.cap > engine.pool.capacity * engine.page_size
+    doomed = Request(
+        uid=13, prompt=np.zeros(15, np.int32), max_new_tokens=3
+    )  # 18 tokens <= cap, but ceil(18/4) = 5 pages > 4 allocatable
+    with pytest.raises(AdmissionError, match="pool capacity") as ei:
+        engine.submit(doomed)
+    assert ei.value.reason == "exceeds_pool" and ei.value.uid == 13
+    assert len(engine.waiting) == 0
+    ring = _build(model_and_params).run(_reqs(cfg, [5, 4], gen=3))
+    outs = engine.run(_reqs(cfg, [5, 4], gen=3))
+    _assert_same_tokens(outs, ring)
+
+
+def test_default_table_width_is_ring_equivalent(model_and_params):
+    """Windowless table width defaults to num_slots × pages_per_ring (the
+    jnp gather/attend work the ring engine paid), NOT the whole pool — an
+    oversized pool must not widen every slot's logical ring. Whole-pool
+    width is the ``long_requests`` / ``table_width=`` opt-in."""
+    cfg, _, _ = model_and_params
+    ppr = -(-(P + G) // 4)
+    bounded = _build(
+        model_and_params, paged_cache=True, page_size=4, num_pages=31
+    )
+    assert bounded.table_width == 2 * ppr  # not 30
+    wide = _build(
+        model_and_params, paged_cache=True, page_size=4, num_pages=31,
+        long_requests=True,
+    )
+    assert wide.table_width == 30
+    explicit = _build(
+        model_and_params, paged_cache=True, page_size=4, num_pages=31,
+        table_width=12,
+    )
+    assert explicit.table_width == 12 and explicit.cap == 48
+    # same tokens at every width on a shared-feasible trace
+    lens = [5, 8, 6]
+    ring = _build(model_and_params).run(_reqs(cfg, lens))
+    for eng in (bounded, wide, explicit):
+        _assert_same_tokens(eng.run(_reqs(cfg, lens)), ring)
+
+
 # ------------------------------------------------------------- bookkeeping
 def test_pool_stats_and_occupancy_trace(model_and_params):
     cfg, _, _ = model_and_params

@@ -1,0 +1,368 @@
+"""Shared-prefix KV cache tests: the radix index (launch/prefix_cache.py),
+refcounted page aliasing, copy-on-write splits, suffix-only prefill, and
+the engine-level contract.
+
+The contract mirrors the rest of the engine suite: SHARING MUST BE
+INVISIBLE IN THE OUTPUT. The non-shared paged engine is the oracle — the
+prefix-sharing engine must emit token-identical output on every trace,
+through cold/warm indexes, full-prompt cache hits (CoW), LRU eviction
+under pool pressure, preemption, and the page-table decode kernel — while
+prefilling strictly fewer tokens on shared-prefix traffic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import PagePool, Request, ServeEngine
+from repro.launch.prefix_cache import PrefixCache
+
+ARCH = "stablelm-1.6b"
+PS = 4  # page size used throughout the engine tests
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _build(model_and_params, *, prefix=True, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_seq", 24)
+    kw.setdefault("paged_cache", True)
+    kw.setdefault("page_size", PS)
+    return ServeEngine(model, params, prefix_cache=prefix, **kw)
+
+
+def _prompts(cfg, shape_seed=0):
+    """Deterministic token material for hand-built prompts."""
+    rng = np.random.default_rng(shape_seed)
+    return lambda n: rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+def _reqs_shared(cfg, suffix_lens, *, prefix_tokens=12, gen=4, seed=0):
+    """Requests sharing one common prefix (``prefix_tokens`` long) with
+    per-request unique suffixes."""
+    draw = _prompts(cfg, seed)
+    common = draw(prefix_tokens)
+    reqs = []
+    for j, sl in enumerate(suffix_lens):
+        prompt = np.concatenate([common, draw(sl)]) if sl else common.copy()
+        reqs.append(Request(uid=j, prompt=prompt, max_new_tokens=gen))
+    return reqs
+
+
+def _assert_same_tokens(a, b):
+    ref = {o.uid: o.tokens for o in b}
+    assert len(a) == len(b)
+    for o in a:
+        assert o.tokens == ref[o.uid], f"uid {o.uid}: {o.tokens} != {ref[o.uid]}"
+
+
+# ------------------------------------------------------------ index (unit)
+def test_trie_match_insert_roundtrip():
+    pool = PagePool(num_pages=16, page_size=4)
+    cache = PrefixCache(pool)
+    toks = np.arange(100, 111, dtype=np.int32)  # 11 tokens → 2 full pages
+    pages = pool.alloc(3)  # slot-held: 2 full + 1 partial
+    assert cache.match(toks) == []
+    assert cache.insert(toks, pages[:2]) == 2
+    assert cache.size == 2
+    # index holds its own refs; the slot's die without killing the pages
+    pool.free(pages)
+    assert pool.refcount(pages[0]) == 1 and pool.refcount(pages[1]) == 1
+    assert pool.refcount(pages[2]) == 0
+    assert cache.match(toks) == pages[:2]
+    assert cache.match(toks[:8]) == pages[:2]   # exact 2-page prefix
+    assert cache.match(toks[:7]) == pages[:1]   # only 1 full page matches
+    assert cache.match(toks[:3]) == []          # shorter than a page
+    divergent = toks.copy()
+    divergent[5] = 999                          # differs inside page 2
+    assert cache.match(divergent) == pages[:1]
+
+
+def test_trie_insert_dedupes_to_existing_pages():
+    """Re-publishing an indexed chunk keeps the FIRST physical page; the
+    duplicate publisher's copy dies with its own refs."""
+    pool = PagePool(num_pages=16, page_size=4)
+    cache = PrefixCache(pool)
+    toks = np.arange(50, 58, dtype=np.int32)
+    first = pool.alloc(2)
+    cache.insert(toks, first)
+    dup = pool.alloc(2)
+    assert cache.insert(toks, dup) == 0          # nothing new
+    pool.free(first)
+    pool.free(dup)
+    assert cache.match(toks) == first
+    assert pool.refcount(dup[0]) == 0            # duplicate copy died
+
+
+def test_trie_lru_leaf_eviction_order():
+    """Eviction takes the LRU LEAF: interior nodes are pinned by their
+    descendants, and a fresh match() refreshes the whole matched path."""
+    pool = PagePool(num_pages=16, page_size=2)
+    cache = PrefixCache(pool)
+    a = np.asarray([1, 1, 2, 2], np.int32)       # chain A: [11][22]
+    b = np.asarray([1, 1, 3, 3], np.int32)       # chain B: [11][33]
+    pa = pool.alloc(2)
+    cache.insert(a, pa)
+    pb_tail = pool.alloc(1)
+    cache.insert(b, [pa[0], pb_tail[0]])         # shares the [11] node
+    pool.free(pa), pool.free(pb_tail)
+    assert cache.size == 3
+    cache.match(a)                               # A's leaf is now hottest
+    assert cache.evict(1) == 1                   # evicts B's tail (LRU leaf)
+    assert cache.match(b) == [pa[0]]             # B now misses its tail
+    assert cache.match(a) == pa                  # A fully intact
+    assert cache.evict(10) == 2                  # drains: A leaf then root [11]
+    assert cache.size == 0 and pool.available == pool.capacity
+
+
+def test_trie_eviction_respects_live_sharers():
+    """Evicting an entry whose page a live slot still shares releases the
+    index ref but frees no memory until the slot's ref drops."""
+    pool = PagePool(num_pages=8, page_size=4)
+    cache = PrefixCache(pool)
+    toks = np.arange(8, dtype=np.int32)
+    pages = pool.alloc(2)
+    cache.insert(toks, pages)
+    pool.share(pages[0])        # a live slot aliases page 0 of the prefix
+    pool.free(pages)            # publisher's own refs drop
+    freed = cache.evict(2)      # index drains fully...
+    assert cache.size == 0
+    assert freed == 1           # ...but only the unshared page came back
+    assert pool.refcount(pages[0]) == 1
+    pool.free([pages[0]])
+    assert pool.available == pool.capacity
+
+
+def test_trie_max_pages_cap():
+    pool = PagePool(num_pages=32, page_size=2)
+    cache = PrefixCache(pool, max_pages=3)
+    for j in range(4):
+        toks = np.asarray([j, j, j + 10, j + 10], np.int32)
+        pages = pool.alloc(2)
+        cache.insert(toks, pages)
+        pool.free(pages)
+        assert cache.size <= 3
+    assert cache.size == 3
+
+
+# ----------------------------------------------- suffix ring writes (unit)
+def test_fill_cache_rows_with_starts_matches_fill_cache():
+    """fill_cache_rows(starts=s) leaves each ring row exactly as the
+    single-row fill_cache(start=s) oracle does, per row."""
+    from repro.models.attention import fill_cache, fill_cache_rows
+
+    rng = np.random.default_rng(0)
+    cap, s_max, hkv, hd, n = 12, 7, 2, 4, 3
+    base_k = rng.normal(size=(n, cap, hkv, hd)).astype(np.float32)
+    base_v = rng.normal(size=(n, cap, hkv, hd)).astype(np.float32)
+    k = rng.normal(size=(n, s_max, hkv, hd)).astype(np.float32)
+    v = rng.normal(size=(n, s_max, hkv, hd)).astype(np.float32)
+    lengths = np.asarray([7, 4, 0], np.int32)
+    starts = np.asarray([5, 8, 0], np.int32)
+    nk, nv = fill_cache_rows(
+        jnp.asarray(base_k), jnp.asarray(base_v), jnp.asarray(k),
+        jnp.asarray(v), jnp.asarray(lengths), starts=jnp.asarray(starts),
+    )
+    for r in range(n):
+        if lengths[r] == 0:
+            exp_k, exp_v = base_k[r], base_v[r]
+        else:
+            ref = fill_cache(
+                {
+                    "k": jnp.asarray(base_k[r : r + 1]),
+                    "v": jnp.asarray(base_v[r : r + 1]),
+                    "pos": jnp.asarray(int(starts[r]), jnp.int32),
+                },
+                jnp.asarray(k[r : r + 1, : lengths[r]]),
+                jnp.asarray(v[r : r + 1, : lengths[r]]),
+                start=int(starts[r]),
+            )
+            exp_k, exp_v = np.asarray(ref["k"][0]), np.asarray(ref["v"][0])
+        np.testing.assert_array_equal(np.asarray(nk[r]), exp_k)
+        np.testing.assert_array_equal(np.asarray(nv[r]), exp_v)
+
+
+# ------------------------------------------------------ engine: the oracle
+def test_warm_index_token_identical_to_nonshared(model_and_params):
+    """Two admission generations over a common prefix: the second round
+    maps cached pages and prefills only suffixes — tokens must match the
+    non-shared paged engine exactly, with strictly fewer prefilled
+    tokens."""
+    cfg, _, _ = model_and_params
+    lens = [5, 7, 3, 6, 4, 8]
+    ref_engine = _build(model_and_params, prefix=False)
+    ref = ref_engine.run(_reqs_shared(cfg, lens))
+    engine = _build(model_and_params, prefix=True)
+    outs = engine.run(_reqs_shared(cfg, lens))
+    _assert_same_tokens(outs, ref)
+    assert engine.prefix_hit_pages > 0, "warm rounds must hit the index"
+    assert engine.prefill_tokens < ref_engine.prefill_tokens
+    stats = engine.pool_stats
+    assert 0 < stats["prefix_hit_rate"] < 1
+    assert stats["prefix_pages_cached"] > 0
+
+
+def test_fully_cached_prompt_splits_cow_page(model_and_params):
+    """An identical page-aligned prompt re-submitted after retirement is a
+    100% index hit: its final token re-prefills into a copy-on-write split
+    of the last shared page, and the indexed original must stay bit-intact
+    for later readers."""
+    cfg, _, _ = model_and_params
+    prompt = _prompts(cfg, 3)(4 * PS)  # 16 tokens, exactly 4 pages
+    mk = lambda uid: Request(uid=uid, prompt=prompt.copy(), max_new_tokens=4)
+    engine = _build(model_and_params, prefix=True)
+    a = engine.run([mk(0)])
+    b = engine.run([mk(1)])
+    c = engine.run([mk(2)])  # hits the ORIGINAL pages again, post-CoW
+    assert engine.cow_copies >= 2
+    assert engine.pool_stats["prefix_hit_rate"] > 0
+    ref = _build(model_and_params, prefix=False)
+    ra, rb, rc = ref.run([mk(0)]), ref.run([mk(1)]), ref.run([mk(2)])
+    _assert_same_tokens(a, ra)
+    _assert_same_tokens(b, rb)
+    _assert_same_tokens(c, rc)
+
+
+def test_divergence_inside_shared_page_is_not_hit(model_and_params):
+    """Prompts diverging INSIDE a page share only the full pages before
+    it; the divergent page prefills fresh — tokens match the oracle."""
+    cfg, _, _ = model_and_params
+    draw = _prompts(cfg, 1)
+    common = draw(2 * PS + 2)            # 2 full pages + 2 tokens
+    tails = [draw(3), draw(3)]
+    reqs = lambda: [
+        Request(uid=j, prompt=np.concatenate([common, tails[j]]),
+                max_new_tokens=4)
+        for j in range(2)
+    ]
+    engine = _build(model_and_params, prefix=True, num_slots=1)
+    outs = engine.run(reqs())
+    # only the 2 FULL common pages are shareable; the mixed page is not
+    assert engine.prefix_hit_pages == 2
+    ref = _build(model_and_params, prefix=False, num_slots=1).run(reqs())
+    _assert_same_tokens(outs, ref)
+
+
+def test_eviction_under_pool_pressure_degrades_gracefully(model_and_params):
+    """A pool too small to keep the index AND live slots resident: LRU
+    eviction sheds index pages (before watermark throttling / preemption)
+    and the engine keeps emitting oracle tokens."""
+    cfg, _, _ = model_and_params
+    lens = [5, 7, 3, 6, 4, 8, 2, 5]
+    ref = _build(model_and_params, prefix=False).run(_reqs_shared(cfg, lens))
+    tight = _build(model_and_params, prefix=True, num_pages=9)
+    outs = tight.run(_reqs_shared(cfg, lens))
+    _assert_same_tokens(outs, ref)
+    assert tight.prefix.evicted_pages > 0, "tight pool must evict"
+    assert tight.pool.in_use == tight.prefix.size  # only the index pins pages
+
+
+def test_preemption_with_prefix_sharing_token_identical(model_and_params):
+    """OOM preemption + resume composes with prefix sharing: the resumed
+    request may re-admit THROUGH the index (its prompt is published) and
+    must continue bit-exactly."""
+    cfg, _, _ = model_and_params
+    lens = [6, 7, 5]
+    ref = _build(model_and_params, prefix=False).run(
+        _reqs_shared(cfg, lens, gen=6)
+    )
+    tight = _build(model_and_params, prefix=True, num_pages=8)
+    outs = tight.run(_reqs_shared(cfg, lens, gen=6))
+    _assert_same_tokens(outs, ref)
+    assert tight.pool.live_refs == tight.prefix.size
+
+
+def test_kernel_decode_over_aliased_pages(model_and_params):
+    """The page-table decode kernel reads slots whose tables alias the
+    SAME physical pages — tokens equal the kernel engine without
+    sharing."""
+    cfg, _, _ = model_and_params
+    lens = [5, 6, 4, 7]
+    ref = _build(model_and_params, prefix=False, use_kernel=True).run(
+        _reqs_shared(cfg, lens)
+    )
+    engine = _build(model_and_params, prefix=True, use_kernel=True)
+    outs = engine.run(_reqs_shared(cfg, lens))
+    assert engine.prefix_hit_pages > 0
+    _assert_same_tokens(outs, ref)
+
+
+def test_sampling_streams_survive_prefix_hits(model_and_params):
+    """Suffix-only prefill must not perturb per-request PRNG streams."""
+    from repro.launch.sampling import SamplingParams
+
+    cfg, _, _ = model_and_params
+    lens = [5, 7, 4, 6]
+
+    def reqs():
+        rs = _reqs_shared(cfg, lens)
+        for r in rs:
+            r.sampling = SamplingParams(temperature=0.8, top_k=9, seed=7 + r.uid)
+        return rs
+
+    ref = _build(model_and_params, prefix=False).run(reqs())
+    engine = _build(model_and_params, prefix=True)
+    outs = engine.run(reqs())
+    assert engine.prefix_hit_pages > 0
+    _assert_same_tokens(outs, ref)
+
+
+def test_prefix_disabled_configs_fall_back(model_and_params):
+    """Windowed / interleaved / ring configs silently run without the
+    index (prefix sharing needs a non-wrapping chunked paged cache)."""
+    engine = _build(model_and_params, prefix=True, window=6)
+    assert engine.prefix is None and not engine.prefix_cache
+    engine = _build(model_and_params, prefix=True, prefill="interleaved")
+    assert engine.prefix is None
+    engine = _build(model_and_params, prefix=True, paged_cache=False)
+    assert engine.prefix is None and engine.pool_stats is None
+
+
+def test_retirement_returns_only_unpublished_pages(model_and_params):
+    """After a run, the pool holds exactly the index's pages — slot refs
+    all dropped, partial tail pages freed, published pages pinned once."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params, prefix=True)
+    engine.run(_reqs_shared(cfg, [5, 7, 3]))
+    assert engine.pool.in_use == engine.prefix.size
+    assert engine.pool.live_refs == engine.prefix.size
+    engine.prefix.clear()
+    assert engine.pool.in_use == 0
+
+
+@given(
+    suffix_lens=st.lists(st.integers(0, 9), min_size=1, max_size=6),
+    prefix_tokens=st.integers(1, 17),
+    page_size=st.sampled_from([2, 4, 8]),
+)
+@settings(max_examples=8, deadline=None)
+def test_property_sharing_token_identical(
+    model_and_params, suffix_lens, prefix_tokens, page_size
+):
+    """Any shared-prefix trace, any page size: the sharing engine is
+    token-identical to the non-shared paged engine (which PR 4 pinned
+    bitwise to the ring engine)."""
+    cfg, _, _ = model_and_params
+    if suffix_lens[0] == 0 and prefix_tokens < 2:
+        prefix_tokens = 2  # prompt of 1 token + full-hit needs a suffix
+    kw = dict(max_seq=32, page_size=page_size, gen=3)
+    reqs = lambda: _reqs_shared(
+        cfg, suffix_lens, prefix_tokens=prefix_tokens, gen=3,
+        seed=prefix_tokens,
+    )
+    ref = _build(
+        model_and_params, prefix=False, max_seq=32, page_size=page_size
+    ).run(reqs())
+    engine = _build(
+        model_and_params, prefix=True, max_seq=32, page_size=page_size
+    )
+    _assert_same_tokens(engine.run(reqs()), ref)
