@@ -4,8 +4,9 @@ The serve-bench smoke run APPENDS one schema-2 entry per CI run to
 ``BENCH_serve.json`` at the repo root; this tool turns that trajectory
 into a markdown table so the perf history is readable at a glance —
 tokens/sec, TTFT p95, pool occupancy, preemptions, and the prefix-cache
-columns (hit rate, prefilled-token savings, CoW splits) added with prefix
-sharing. In CI it lands on the job's step summary page.
+columns (hit rate, prefilled-token savings, CoW splits, suffix-dispatch
+count, steady warm-round seconds) added with prefix sharing. In CI it
+lands on the job's step summary page.
 
 Output goes to ``$GITHUB_STEP_SUMMARY`` when set (the GitHub Actions
 step-summary file), else stdout — so the same invocation works locally:
@@ -40,6 +41,8 @@ COLUMNS = (
     ("prefix hit", "prefix_hit_rate", "{:.0%}"),
     ("prefill saved", "prefix_prefill_saved_frac", "{:.0%}"),
     ("CoW", "prefix_cow_copies", "{}"),
+    ("suffix", "prefix_suffix_dispatches", "{}"),
+    ("suffix round (s)", "suffix_round_s", "{:.2f}"),
 )
 
 

@@ -115,6 +115,93 @@ def decode_occupancy_sweep(
     return out
 
 
+def suffix_occupancy_sweep(
+    start_levels: dict, *, rows: int = 2, suffix: int = 16, page: int = 16,
+    t_w: int = 8, hkv: int = 2, g: int = 2, hd: int = 64, iters: int = 5,
+) -> dict:
+    """Suffix-prefill kernel time vs. cached-prefix depth over a SCATTERED
+    paged pool (same strided layout as ``decode_occupancy_sweep``: row r's
+    logical page j sits at pool page 1 + j·rows + r, so every logical step
+    jumps ``rows`` pool pages).
+
+    Two effects, both reproduced faithfully by interpret mode because each
+    removes whole grid steps:
+
+    * ``full_*`` rows fix the static prefix width at the table width — the
+      ``pl.when`` dead-page skip is the only lever, so the shallow-vs-deep
+      gap is pure page skipping;
+    * ``bucket_*`` rows ALSO shrink the static width to the pow2 bucket
+      covering ``max(starts)`` (``launch/engine.py::bucket_pages`` — the
+      engine's start-bucket ladder); the saving over ``full_*`` at the
+      same depth is the grid truncation the ladder buys on top.
+
+    ``ref_us`` times the displaced jnp gather-concat path once — its cost
+    is depth-independent (it always gathers the full table width), which
+    is exactly why the kernel exists."""
+    from repro.kernels.flash_suffix_prefill import suffix_prefill
+    from repro.launch.engine import bucket_pages
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (rows, suffix, hkv, g, hd), jnp.bfloat16)
+    k_suf = jax.random.normal(ks[1], (rows, suffix, hkv, hd), jnp.bfloat16)
+    v_suf = jax.random.normal(ks[2], (rows, suffix, hkv, hd), jnp.bfloat16)
+    pool_shape = (1 + rows * t_w, page, hkv, hd)
+    pool_k = jax.random.normal(ks[3], pool_shape, jnp.bfloat16)
+    pool_v = jax.random.normal(ks[4], pool_shape, jnp.bfloat16)
+    idx = jnp.arange(rows * t_w)
+    dest = 1 + (idx % t_w) * rows + idx // t_w    # (r, j) → 1 + j·rows + r
+    table = dest.reshape(rows, t_w).astype(jnp.int32)
+
+    def kernel_fn(width):
+        return lambda s: suffix_prefill(
+            q, k_suf, v_suf, pool_k, pool_v, table, s,
+            prefix_width=width, interpret=True,
+        )
+
+    out = {}
+    for label, start_tokens in start_levels.items():
+        starts = jnp.full((rows,), int(start_tokens), jnp.int32)
+        wb = bucket_pages(-(-int(start_tokens) // page), t_w)
+        for variant, width in (("full", t_w), ("bucket", wb)):
+            if variant == "bucket" and width == t_w:
+                continue  # same trace as full_* — nothing new to time
+            us = bench_min(kernel_fn(width), starts, iters=iters)
+            out[f"{variant}_{label}_us"] = us
+    ref_fn = jax.jit(
+        lambda s: ops.suffix_prefill_attention(
+            q, k_suf, v_suf, pool_k, pool_v, table, s, prefix_width=t_w
+        )
+    )
+    out["ref_us"] = bench_min(
+        ref_fn, jnp.full((rows,), t_w * page, jnp.int32), iters=iters
+    )
+    return out
+
+
+def bench_suffix_occupancy(rows: dict, *, smoke: bool) -> None:
+    """Suffix-prefill kernel across cached-prefix depths: shallow (one live
+    page of the table) vs. deep (every page live), full static width vs.
+    the engine's start bucket."""
+    page, t_w = 16, 8
+    iters = 3 if smoke else 6
+    start_levels = {
+        "shallow": page,          # 1 of t_w pages live → 7 skipped
+        "deep": t_w * page,       # every page live → nothing to skip
+    }
+    sweep = suffix_occupancy_sweep(
+        start_levels, page=page, t_w=t_w, iters=iters
+    )
+    for key, us in sweep.items():
+        name = f"suffix_{key[: -len('_us')]}"
+        rows[name] = us
+        detail = (
+            "jnp gather-concat path (depth-independent)" if key == "ref_us"
+            else f"table_width={t_w};page={page}"
+        )
+        emit(f"kernels/{name}", us, detail)
+
+
 def bench_decode_occupancy(rows: dict, *, smoke: bool) -> None:
     """Paged vs. unpaged decode kernel across ring occupancy levels.
 
@@ -155,6 +242,7 @@ def run(argv: list[str] | None = None) -> dict:
         # full-size rows (1M-element refs, 8k-ring decode, flash prefill)
         # would dominate the step's wall time for no signal
         bench_decode_occupancy(rows, smoke=True)
+        bench_suffix_occupancy(rows, smoke=True)
         save_results("kernels_smoke", rows)
         return rows
 
@@ -187,6 +275,7 @@ def run(argv: list[str] | None = None) -> dict:
     emit("kernels/swa_decode_8k", us, "hbm-bound:2·C·Hkv·hd·2B/token")
 
     bench_decode_occupancy(rows, smoke=False)
+    bench_suffix_occupancy(rows, smoke=False)
 
     # flash prefill attention (causal GQA): ref oracle at CPU-feasible size.
     # HBM model: flash = O(Q+K+V+O) vs naive = O(S²·H) probs materialized.

@@ -239,9 +239,17 @@ def bench_shared_prefix(args) -> dict:
 
     Asserted here (CI runs this under --smoke): identical greedy tokens,
     ≥ 50% fewer prefilled tokens with sharing, a nonzero prefix hit rate,
-    and at least one copy-on-write page split exercised (the fully cached
-    duplicate prompt). ``prefill_tokens_saved_frac`` is the headline —
-    prefill FLOPs scale linearly in prefilled tokens at fixed width."""
+    at least one copy-on-write page split exercised (the fully cached
+    duplicate prompt), and — since hit/cold round splitting — that warm
+    rounds actually take the SUFFIX dispatch path (``suffix_dispatches``
+    > 0 with sharing, 0 without) while the cold publish round stays on
+    the cold trace. ``prefill_tokens_saved_frac`` is the headline —
+    prefill FLOPs scale linearly in prefilled tokens at fixed width.
+    ``steady_round_seconds`` times a SECOND identical warm burst (same
+    prompts, fresh uids) after the first burst has paid the jit compiles:
+    the on/off contrast is the suffix-round latency saving (suffix rounds
+    attend over starts-bounded prefix pages + short suffixes instead of
+    re-prefilling the full prompt)."""
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -258,6 +266,16 @@ def bench_shared_prefix(args) -> dict:
             cfg, n_requests=args.requests, prefix_len=prefix_len,
             page_size=args.page_size, gen_tokens=args.gen, seed=args.seed,
         )
+        # second identical warm burst (same prompts, fresh uids): by the
+        # time it runs, burst #1 has paid every jit compile, so its wall
+        # time is the steady-state warm-round latency
+        burst2 = [
+            Request(
+                uid=1000 + r.uid, prompt=r.prompt,
+                max_new_tokens=r.max_new_tokens,
+            )
+            for r in reqs[1:]
+        ]
         t0 = time.time()
         # the first request runs alone (publishing the system prompt on
         # retirement), then the burst — otherwise the whole first
@@ -265,9 +283,12 @@ def bench_shared_prefix(args) -> dict:
         # system-prompt cache saves
         outs = engine.run(reqs[:1])
         outs += engine.run(reqs[1:])
-        wall = time.time() - t0
+        t_steady = time.time()
+        outs += engine.run(burst2)
+        t_end = time.time()
         out[label] = {
-            "wall_seconds": wall,
+            "wall_seconds": t_end - t0,
+            "steady_round_seconds": t_end - t_steady,
             "prefill_tokens": engine.prefill_tokens,
             "prefill_dispatches": engine.prefill_dispatches,
             "engine_steps": engine.steps,
@@ -286,6 +307,18 @@ def bench_shared_prefix(args) -> dict:
     assert on["pool"]["prefix_hit_rate"] > 0, "no prefix hits on a shared trace"
     assert on["pool"]["cow_copies"] > 0, (
         "fully cached duplicate prompt never exercised copy-on-write"
+    )
+    # hit/cold round splitting: warm rounds must dispatch the suffix
+    # trace, the cold publish round the cold trace — and without the
+    # prefix cache every round is cold
+    assert on["pool"]["suffix_dispatches"] > 0, (
+        "warm shared-prefix rounds never took the suffix dispatch path"
+    )
+    assert on["pool"]["cold_dispatches"] > 0, (
+        "the cold publish round did not take the cold dispatch path"
+    )
+    assert off["pool"]["suffix_dispatches"] == 0, (
+        "suffix dispatch fired with the prefix cache disabled"
     )
     for m in out.values():
         del m["generated"]
@@ -444,6 +477,12 @@ def write_bench_seed(res: dict) -> None:
         "prefix_hit_rate": sp["prefix_on"]["pool"]["prefix_hit_rate"],
         "prefix_prefill_saved_frac": sp["prefill_tokens_saved_frac"],
         "prefix_cow_copies": sp["prefix_on"]["pool"]["cow_copies"],
+        "prefix_suffix_dispatches": sp["prefix_on"]["pool"][
+            "suffix_dispatches"
+        ],
+        "prefix_cold_dispatches": sp["prefix_on"]["pool"]["cold_dispatches"],
+        "suffix_round_s": sp["prefix_on"]["steady_round_seconds"],
+        "cold_round_s": sp["prefix_off"]["steady_round_seconds"],
     }
     trajectory = {"schema": 2, "entries": []}
     if os.path.exists(BENCH_SEED_PATH):
@@ -571,7 +610,11 @@ def run(argv: list[str] | None = None):
             f"{sp['prefix_off']['prefill_tokens']} unshared "
             f"({sp['prefill_tokens_saved_frac']:.0%} saved, hit rate "
             f"{sp['prefix_on']['pool']['prefix_hit_rate']:.0%}, "
-            f"{sp['prefix_on']['pool']['cow_copies']} CoW) — "
+            f"{sp['prefix_on']['pool']['cow_copies']} CoW, "
+            f"{sp['prefix_on']['pool']['suffix_dispatches']} suffix / "
+            f"{sp['prefix_on']['pool']['cold_dispatches']} cold rounds; "
+            f"steady warm round {sp['prefix_on']['steady_round_seconds']:.2f}s"
+            f" vs {sp['prefix_off']['steady_round_seconds']:.2f}s cold) — "
             "tokens identical",
         )
         save_results("serve_bench_burst", res)

@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: suffix prefill over a shared paged KV pool — flash
+attention for the PREFIX-SHARING admission path.
+
+A prefix-cache hit admits a request whose first ``starts[r]`` tokens are
+already resident in shared pool pages mapped by the row's page table; only
+the uncached suffix runs through prefill. The jnp production path gathers
+EVERY table page into a contiguous (n, T·page, Hkv, hd) ring row in HBM and
+concatenates the suffix k/v before one full-softmax attend — the gather
+alone moves ``table_width × page_size`` lanes per row per layer regardless
+of how short the cached prefix is, and the (n, Hkv, G, S, T·page+S) score
+tensor is materialized on top.
+
+This kernel removes both terms with the scalar-prefetched table-row idiom
+proven in ``kernels/paged_decode.py``: the last grid axis streams
+
+    j in [0, W)        — the row's cached PREFIX pages, read directly from
+                         the pool at ``table[b, j]`` (no gather); a page at
+                         or beyond the row's live prefix (``j >= ceil(
+                         starts[b]/page)``) is skipped with ``pl.when`` and
+                         its DMA clamps to the last live page (no fresh
+                         traffic — the paged-decode trick);
+    j in [W, W + S/BK) — the suffix's own k/v blocks, standard causal
+                         flash tiling (``kernels/flash_prefill.py``),
+
+carrying the online-softmax state (m, l, acc) in VMEM scratch. ``W`` is a
+STATIC prefix width in pages — the engine buckets ``max(starts)`` up a
+pow2 ladder (``launch/engine.py::bucket_pages``) so compile counts stay
+gated exactly like the (width, length) shape buckets.
+
+Masking: a prefix lane at ring slot ``c`` is live iff ``c < starts[b]``
+(windowless, non-wrapping ring: slot c holds global position c). Causality
+is implied — every query sits at an absolute position ``>= starts[b]`` —
+so no per-query prefix mask is needed. Suffix blocks mask causally in
+LOCAL coordinates, identical to ``flash_prefill``. The streaming order
+[prefix pages | suffix blocks] matches the jnp path's concat order, so the
+kernel is the flash reassociation of the same reduction; tests pin it
+allclose against ``ref.suffix_prefill_ref`` and the engine pins greedy
+tokens bitwise through ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_prefill import _block_size
+
+NEG = -2.0**30
+
+
+def _suffix_kernel(
+    starts_ref, pp_ref, table_ref,
+    q_ref, ks_ref, vs_ref, pk_ref, pv_ref,
+    o_ref, m_ref, l_ref, acc_ref,
+    *, bq: int, bk: int, w: int, page: int, n_total: int, g: int, hd: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)          # query block
+    j = pl.program_id(3)          # streaming axis: W prefix pages, then
+    #                               S/BK suffix blocks
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update(s, v):
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_new = acc_prev * alpha + pv
+        m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    # ---- prefix phase: stream the row's live cached pages via the table.
+    # A dead page (j >= live prefix pages) does no MXU work; its DMA
+    # re-read the last live page (index-map clamp), never fresh traffic.
+    @pl.when((j < w) & (j < pp_ref[b]))
+    def _prefix_block():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, hd)
+        k = pk_ref[0, :, 0].astype(jnp.float32)          # (page, hd)
+        v = pv_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                        # (BQ·G, page)
+        # ring slot c holds global position c (windowless, no wrap); lanes
+        # at/after the row's start hold no prefix. Causality is implied:
+        # every query position is >= starts[b] > any live prefix lane.
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(kpos < starts_ref[b], s, NEG)
+        _update(s, v)
+
+    # ---- suffix phase: standard causal flash tiling in LOCAL suffix
+    # coordinates (absolute = starts[b] + local on both sides, so the
+    # offset cancels out of the causal comparison).
+    jj = j - w
+    q_lo = i * bq
+    q_hi = q_lo + bq - 1
+    k_lo = jj * bk
+
+    @pl.when((j >= w) & (k_lo <= q_hi))
+    def _suffix_block():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, hd)
+        k = ks_ref[0, :, 0].astype(jnp.float32)          # (BK, hd)
+        v = vs_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                        # (BQ·G, BK)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, g, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, g, bk), 2)
+        s = jnp.where((qpos >= kpos).reshape(bq * g, bk), s, NEG)
+        _update(s, v)
+
+    @pl.when(j == n_total - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(bq, g, hd).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prefix_width", "bq", "bk", "interpret")
+)
+def suffix_prefill(
+    q: jax.Array,        # (n, S, Hkv, G, hd) — roped at starts[r] + i
+    k_suf: jax.Array,    # (n, S, Hkv, hd) suffix keys (rotated)
+    v_suf: jax.Array,    # (n, S, Hkv, hd)
+    pool_k: jax.Array,   # (P, page, Hkv, hd) shared physical page pool
+    pool_v: jax.Array,   # (P, page, Hkv, hd)
+    table: jax.Array,    # (n, T) i32 — row r's logical page j lives at
+    #                      pool page table[r, j]
+    starts: jax.Array,   # (n,) i32 — cached prefix tokens per row
+    *,
+    prefix_width: int,   # STATIC pages streamed per row (bucketed
+    #                      ceil(max(starts)/page); must cover every row)
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (n, S, Hkv, G, hd) attention output, fp32-accumulated."""
+    n, s, hkv, g, hd = q.shape
+    page = pool_k.shape[1]
+    t_w = table.shape[1]
+    w = min(prefix_width, t_w)
+    assert w >= 1, f"prefix_width must be >= 1, got {prefix_width}"
+    bq = _block_size(s, bq)
+    bk = _block_size(s, bk)
+    scale = hd**-0.5
+    n_total = w + s // bk
+
+    starts = jnp.asarray(starts, jnp.int32).reshape(-1)
+    # live prefix pages per row; rows beyond the static width were bucketed
+    # wrong by the caller — clip keeps the kernel memory-safe regardless
+    pp = jnp.clip(-(-starts // page), 0, w)
+    table = jnp.asarray(table, jnp.int32)
+
+    kernel = functools.partial(
+        _suffix_kernel, bq=bq, bk=bk, w=w, page=page, n_total=n_total,
+        g=g, hd=hd, scale=scale,
+    )
+
+    def q_map(b, h, i, j, *_):
+        return (b, i, h, 0, 0)
+
+    def suf_map(b, h, i, j, *_):
+        # prefix-phase steps clamp to suffix block 0: already resident,
+        # no fresh DMA (the body never touches it before j reaches w)
+        return (b, jnp.maximum(j - w, 0), h, 0)
+
+    def pool_map(b, h, i, j, starts_ref, pp_ref, table_ref):
+        # page-table indirection with the paged-decode clamp: suffix-phase
+        # steps and dead prefix pages re-read the last live page (clamp
+        # BEFORE the table lookup so an unallocated entry — scratch page 0
+        # by convention — is never the target of a live-block DMA)
+        jp = jnp.minimum(jnp.minimum(j, w - 1), pp_ref[b] - 1)
+        return (table_ref[b, jnp.maximum(jp, 0)], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n, hkv, s // bq, n_total),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, hd), q_map),
+            pl.BlockSpec((1, bk, 1, hd), suf_map),
+            pl.BlockSpec((1, bk, 1, hd), suf_map),
+            pl.BlockSpec((1, page, 1, hd), pool_map),
+            pl.BlockSpec((1, page, 1, hd), pool_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, g, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq * g, 1), jnp.float32),
+            pltpu.VMEM((bq * g, 1), jnp.float32),
+            pltpu.VMEM((bq * g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, s, hkv, g, hd), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(starts, pp, table, q, k_suf, v_suf, pool_k, pool_v)

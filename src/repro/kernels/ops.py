@@ -169,3 +169,37 @@ def flash_prefill_attention(
             q, k, v, causal=causal, window=window, interpret=interpret
         )
     return _ref.flash_prefill_ref(q, k, v, causal=causal, window=window)
+
+
+# ------------------------------------------------------- suffix prefill attn
+def suffix_prefill_attention(
+    q: jax.Array,
+    k_suf: jax.Array,
+    v_suf: jax.Array,
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    table: jax.Array,
+    starts: jax.Array,
+    *,
+    prefix_width: int,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Suffix prefill over a cached prefix held in a shared page pool (see
+    kernels/flash_suffix_prefill.py). q: (n,S,Hkv,G,hd) roped at absolute
+    positions starts[r]+i; k_suf/v_suf: (n,S,Hkv,hd); pool: (P,page,Hkv,hd);
+    table: (n,T); starts: (n,). ``prefix_width`` statically bounds the pages
+    streamed per row (engine buckets max(starts) up a pow2 ladder). The
+    reference path is the displaced gather-concat attend — the house-rules
+    oracle for the kernel."""
+    if use_kernel:
+        from repro.kernels import flash_suffix_prefill as _fsp
+
+        return _fsp.suffix_prefill(
+            q, k_suf, v_suf, pool_k, pool_v, table, starts,
+            prefix_width=prefix_width, interpret=interpret,
+        )
+    return _ref.suffix_prefill_ref(
+        q, k_suf, v_suf, pool_k, pool_v, table, starts,
+        prefix_width=prefix_width,
+    )

@@ -144,6 +144,53 @@ def paged_table_decode_ref(
     )
 
 
+def suffix_prefill_ref(
+    q: jax.Array,        # (n, S, Hkv, G, hd) — roped at starts[r] + i
+    k_suf: jax.Array,    # (n, S, Hkv, hd) suffix keys (rotated)
+    v_suf: jax.Array,    # (n, S, Hkv, hd)
+    pool_k: jax.Array,   # (P, page, Hkv, hd) shared physical page pool
+    pool_v: jax.Array,   # (P, page, Hkv, hd)
+    table: jax.Array,    # (n, T) i32 page table (row-gathered)
+    starts: jax.Array,   # (n,) i32 cached prefix tokens per row
+    *,
+    prefix_width: int | None = None,
+) -> jax.Array:
+    """Gather-concat suffix-prefill oracle (kernels/flash_suffix_prefill.py).
+
+    Mirrors the displaced jnp production path in models/transformer.py's
+    suffix mode exactly: gather the row's first ``prefix_width`` table
+    pages into contiguous ring lanes, banish lanes at/after ``starts[r]``
+    to FAR_POS (2**30) so the position mask kills them, concatenate the
+    suffix k/v behind, and run one full-softmax attend with absolute query
+    positions ``starts[r] + i``. ``prefix_width=None`` streams the full
+    table width — bitwise the pre-split engine behavior."""
+    n, s, hkv, g, hd = q.shape
+    page = pool_k.shape[1]
+    t_w = table.shape[1]
+    w = t_w if prefix_width is None else min(prefix_width, t_w)
+    starts = jnp.asarray(starts, jnp.int32).reshape(-1)
+    far = 2**30
+
+    gk = gather_pages_ref(pool_k, table[:, :w])    # (n, w·page, Hkv, hd)
+    gv = gather_pages_ref(pool_v, table[:, :w])
+    ring_c = jnp.arange(w * page)[None, :]
+    prefix_pos = jnp.where(ring_c < starts[:, None], ring_c, far)
+    qpos = starts[:, None] + jnp.arange(s)[None, :]           # (n, S)
+
+    k = jnp.concatenate([gk, k_suf], axis=1)
+    v = jnp.concatenate([gv, v_suf], axis=1)
+    kv_pos = jnp.concatenate([prefix_pos, qpos], axis=1)      # (n, w·page+S)
+
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    mask = qpos[:, None, None, :, None] >= kv_pos[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -2.0**30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def flash_prefill_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     window: int = 0,

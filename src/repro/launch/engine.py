@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Callable
 
@@ -110,6 +111,19 @@ def bucket_length(s: int, floor: int = LEN_BUCKET_MIN) -> int:
     while length < s:
         length *= 2
     return length
+
+
+def bucket_pages(pages: int, table_width: int) -> int:
+    """Round a suffix round's max cached-prefix width (pages) up the pow2
+    ladder 1, 2, 4, …, capped at the table width — the static
+    ``prefix_pages`` bound handed to the suffix-prefill trace, so compile
+    counts stay O(log table_width) across arbitrary start diversity. Rows
+    whose prefix is shorter than the bucket attend dead lanes that the
+    FAR-position mask (jnp path) / ``pl.when`` page skip (kernel) kill."""
+    w = 1
+    while w < pages:
+        w *= 2
+    return min(w, max(table_width, 1))
 
 
 class AdmissionError(ValueError):
@@ -494,28 +508,58 @@ class ServeEngine:
                 window=window,
             )
             # Prefix sharing rides the page table: it needs chunked prefill
-            # (suffix rounds) and a non-wrapping logical ring (windowless),
-            # and silently stays off otherwise — the engine then behaves
-            # exactly like the non-sharing paged engine.
+            # (suffix rounds) and a non-wrapping logical ring (windowless).
+            # A requested-but-unsatisfiable config stays off, WITH a named
+            # reason — logged once here and exposed via
+            # pool_stats["prefix_cache_enabled"] — so "default-on" callers
+            # (serve.py) can tell sharing from a silently degraded engine.
+            self.prefix_disabled_reason = None
+            if prefix_cache:
+                if window > 0:
+                    self.prefix_disabled_reason = (
+                        f"window={window} (sliding-window ring wraps; "
+                        "prefix pages would be overwritten)"
+                    )
+                elif prefill != "chunked":
+                    self.prefix_disabled_reason = (
+                        f"prefill={prefill!r} (suffix rounds need chunked "
+                        "batched admission)"
+                    )
             self.prefix = (
                 PrefixCache(self.pool, prefix_cache_pages)
-                if prefix_cache and window == 0 and prefill == "chunked"
+                if prefix_cache and self.prefix_disabled_reason is None
                 else None
             )
         else:
             self.pool = None
             self.prefix = None
+            self.prefix_disabled_reason = (
+                "paged_cache=False (prefix sharing rides the page table)"
+                if prefix_cache
+                else None
+            )
             self.cache = model.init_slot_cache(
                 params, num_slots, max_seq, window=window
+            )
+        if self.prefix_disabled_reason is not None:
+            logging.getLogger(__name__).warning(
+                "prefix_cache requested but disabled: %s",
+                self.prefix_disabled_reason,
             )
         self.prefix_cache = self.prefix is not None
         # prefix-sharing counters (reset by reset_metrics): hit/lookup
         # tokens drive the hit rate, prefill_tokens counts tokens actually
         # run through chunked prefill (the FLOPs the cache saves), and
         # cow_copies counts copy-on-write page splits.
+        # prefix_resume_hit_tokens tracks preemption-resume re-admissions
+        # separately: a resume replays a feed the engine itself published
+        # (prompt + generated-so-far), so its near-total prefix hit says
+        # nothing about cross-request sharing and must not inflate the
+        # externally-reported prefix_hit_rate.
         self.prefix_hit_pages = 0
         self.prefix_hit_tokens = 0
         self.prefix_lookup_tokens = 0
+        self.prefix_resume_hit_tokens = 0
         self.prefill_tokens = 0
         self.cow_copies = 0
         # Every hot-path jit donates the cache pytree (argument 1): the ring
@@ -523,7 +567,10 @@ class ServeEngine:
         # through each step. Each wrapper body runs exactly once per input
         # shape signature — at trace time — so the trace counters below ARE
         # compile counters (``self.compiles``).
-        self._compiles = {"decode": 0, "prefill": 0, "prefill_slots": 0}
+        self._compiles = {
+            "decode": 0, "prefill": 0, "prefill_slots": 0,
+            "prefill_suffix": 0,
+        }
         donate = (1,) if donate_cache else ()
 
         def _decode_fn(p, c, t):
@@ -543,15 +590,19 @@ class ServeEngine:
 
             self._prefill_slots = jax.jit(_prefill_slots_fn, donate_argnums=donate)
 
-            # suffix-prefill entry (prefix sharing): same bucket ladder,
-            # same compile counter — the recompile gate bounds BOTH paths
-            def _prefill_suffix_fn(p, c, t, l, s, st):
-                self._compiles["prefill_slots"] += 1
+            # suffix-prefill entry (prefix sharing): its own compile
+            # counter (cold rounds must never touch it — tests pin that)
+            # and its own shape axis, the static pow2-bucketed prefix-page
+            # width, so the recompile gate bounds (width, length,
+            # prefix_pages) triples
+            def _prefill_suffix_fn(p, c, t, l, s, st, pw):
+                self._compiles["prefill_suffix"] += 1
                 return model.prefill_slots(p, c, t, l, s, starts=st,
-                                           window=window)
+                                           prefix_pages=pw, window=window)
 
             self._prefill_suffix = jax.jit(
-                _prefill_suffix_fn, donate_argnums=donate
+                _prefill_suffix_fn, donate_argnums=donate,
+                static_argnums=(6,),
             )
         else:
             self._prefill_slots = None
@@ -596,6 +647,12 @@ class ServeEngine:
         self.finished: list[RequestOutput] = []
         self.steps = 0            # decode steps executed
         self.prefill_dispatches = 0   # chunked-prefill forwards launched
+        # split-admission dispatch counters: every batched round is
+        # partitioned into a COLD dispatch (starts == 0, the pre-existing
+        # prefill_slots trace) and a HIT dispatch (suffix trace) so cold
+        # rows never pay the prefix tax — these count each kind launched
+        self.suffix_dispatches = 0
+        self.cold_dispatches = 0
         self.slot_history: dict[int, list[int]] = {}  # uid -> slots used
 
     # ------------------------------------------------------------- plumbing
@@ -620,8 +677,11 @@ class ServeEngine:
         self.prefix_hit_pages = 0
         self.prefix_hit_tokens = 0
         self.prefix_lookup_tokens = 0
+        self.prefix_resume_hit_tokens = 0
         self.prefill_tokens = 0
         self.cow_copies = 0
+        self.suffix_dispatches = 0
+        self.cold_dispatches = 0
         if self.paged_cache:
             self.pool.peak_in_use = self.pool.in_use
         if self.prefix is not None:
@@ -675,9 +735,14 @@ class ServeEngine:
 
     @property
     def prefill_compiles(self) -> int:
-        """`prefill_slots`` + per-request prefill specializations — the
-        number the recompile-guard test bounds by the bucket-ladder size."""
-        return self._compiles["prefill_slots"] + self._compiles["prefill"]
+        """``prefill_slots`` + suffix + per-request prefill specializations
+        — the number the recompile-guard test bounds by the bucket-ladder
+        size."""
+        return (
+            self._compiles["prefill_slots"]
+            + self._compiles["prefill_suffix"]
+            + self._compiles["prefill"]
+        )
 
     @property
     def pool_stats(self) -> dict | None:
@@ -697,14 +762,23 @@ class ServeEngine:
             "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             "occupancy_max": float(np.max(occ)) if occ else 0.0,
             "prefix_cache": self.prefix_cache,
+            "prefix_cache_enabled": self.prefix_cache,
+            "prefix_disabled_reason": self.prefix_disabled_reason,
             "prefix_hit_pages": self.prefix_hit_pages,
+            # hit rate over FRESH lookups only — resume re-admissions
+            # (prefix_resume_hit_tokens) replay engine-published tokens
+            # and are excluded from both numerator and denominator
             "prefix_hit_rate": (
                 self.prefix_hit_tokens / self.prefix_lookup_tokens
                 if self.prefix_lookup_tokens
                 else 0.0
             ),
+            "prefix_resume_hit_tokens": self.prefix_resume_hit_tokens,
+            "prefix_lookup_tokens": self.prefix_lookup_tokens,
             "prefill_tokens": self.prefill_tokens,
             "cow_copies": self.cow_copies,
+            "suffix_dispatches": self.suffix_dispatches,
+            "cold_dispatches": self.cold_dispatches,
             "prefix_pages_cached": (
                 self.prefix.size if self.prefix is not None else 0
             ),
@@ -893,9 +967,17 @@ class ServeEngine:
                         pages.extend(fresh)
                         self._slot_pages[i] = pages
                         self._table_np[i, : len(pages)] = pages
-                        self.prefix_hit_pages += len(hits)
-                        self.prefix_hit_tokens += suffix_start
-                        self.prefix_lookup_tokens += len(feed)
+                        if resume is None:
+                            self.prefix_hit_pages += len(hits)
+                            self.prefix_hit_tokens += suffix_start
+                            self.prefix_lookup_tokens += len(feed)
+                        else:
+                            # a resume replays tokens the engine itself
+                            # published — its (near-total) hit is real work
+                            # saved but says nothing about cross-request
+                            # sharing, so it must not inflate the external
+                            # prefix_hit_rate
+                            self.prefix_resume_hit_tokens += suffix_start
                     else:
                         self._slot_pages[i] = []
                     self._table_dirty = True
@@ -954,50 +1036,79 @@ class ServeEngine:
 
         self._sync_table()
         if self.batch_prefill:
-            # each row prefills only the UNCACHED SUFFIX of its feed —
-            # prefix_len is 0 everywhere unless prefix sharing hit
-            sufs = [
-                self.slots[i].feed[self.slots[i].prefix_len:] for i in claimed
-            ]
-            row_starts = [self.slots[i].prefix_len for i in claimed]
-            round_len = max(p.size for p in sufs)
-            if self.bucket_prefill:
-                width = bucket_width(len(claimed), self.num_slots)
-                padded_len = bucket_length(round_len)
-            else:
-                width = len(claimed)
-                padded_len = round_len
-            tokens = np.zeros((width, padded_len), np.int32)
-            lengths = np.zeros(width, np.int32)
-            starts = np.zeros(width, np.int32)
-            slot_ids = np.zeros(width, np.int32)
-            for j, (i, p) in enumerate(zip(claimed, sufs)):
-                tokens[j, : p.size] = p
-                lengths[j] = p.size
-                starts[j] = row_starts[j]
-                slot_ids[j] = i
-            if width > len(claimed):
-                # width-bucket padding rows: length 0 (prefill_slots writes
-                # nothing for them), aimed at DISTINCT slots outside the
-                # claimed set — width <= num_slots guarantees enough spares.
-                spare = [i for i in range(self.num_slots) if i not in set(claimed)]
-                slot_ids[len(claimed):] = spare[: width - len(claimed)]
-            if any(row_starts):
-                self.cache, logits = self._prefill_suffix(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(lengths), jnp.asarray(slot_ids),
-                    jnp.asarray(starts),
-                )
-            else:
-                # cold round: the pre-existing trace, bitwise unchanged
-                self.cache, logits = self._prefill_slots(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(lengths), jnp.asarray(slot_ids),
-                )
-            self.prefill_dispatches += 1
-            self.prefill_tokens += int(sum(p.size for p in sufs))
-            for j, i in enumerate(claimed):
-                emit(i, logits[j])
+            # SPLIT ADMISSION: partition the round into a cold group
+            # (prefix_len == 0 — the pre-existing prefill_slots trace,
+            # bitwise unchanged) and a hit group (suffix trace), so one
+            # cache hit never routes the whole round — each cold row's
+            # padded length and trace — through the suffix path, and cold
+            # rounds compile/dispatch ZERO suffix traces.
+            cold = [i for i in claimed if self.slots[i].prefix_len == 0]
+            hits = [i for i in claimed if self.slots[i].prefix_len > 0]
+            logits_by_slot: dict[int, jax.Array] = {}
+            for group, suffix in ((cold, False), (hits, True)):
+                if not group:
+                    continue
+                # each row prefills only the UNCACHED SUFFIX of its feed
+                sufs = [
+                    self.slots[i].feed[self.slots[i].prefix_len:]
+                    for i in group
+                ]
+                round_len = max(p.size for p in sufs)
+                if self.bucket_prefill:
+                    width = bucket_width(len(group), self.num_slots)
+                    padded_len = bucket_length(round_len)
+                else:
+                    width = len(group)
+                    padded_len = round_len
+                tokens = np.zeros((width, padded_len), np.int32)
+                lengths = np.zeros(width, np.int32)
+                starts = np.zeros(width, np.int32)
+                slot_ids = np.zeros(width, np.int32)
+                for j, (i, p) in enumerate(zip(group, sufs)):
+                    tokens[j, : p.size] = p
+                    lengths[j] = p.size
+                    starts[j] = self.slots[i].prefix_len
+                    slot_ids[j] = i
+                if width > len(group):
+                    # width-bucket padding rows: length 0 (prefill_slots
+                    # writes nothing for them), aimed at DISTINCT slots
+                    # outside THIS call — slots outside the whole claimed
+                    # set first, the other group's slots as overflow (a
+                    # zero-length row reads and rewrites their pages
+                    # unchanged, so ordering between the two dispatches
+                    # doesn't matter). width <= num_slots guarantees
+                    # enough spares.
+                    in_group = set(group)
+                    spare = [
+                        i for i in range(self.num_slots)
+                        if i not in in_group and i not in set(claimed)
+                    ] + [i for i in set(claimed) - in_group]
+                    slot_ids[len(group):] = spare[: width - len(group)]
+                if suffix:
+                    # static pow2-bucketed prefix width: the suffix attend
+                    # streams only this many leading table pages per row
+                    pw = bucket_pages(
+                        -(-max(int(s) for s in starts) // self.page_size),
+                        self.table_width,
+                    )
+                    self.cache, logits = self._prefill_suffix(
+                        self.params, self.cache, jnp.asarray(tokens),
+                        jnp.asarray(lengths), jnp.asarray(slot_ids),
+                        jnp.asarray(starts), pw,
+                    )
+                    self.suffix_dispatches += 1
+                else:
+                    self.cache, logits = self._prefill_slots(
+                        self.params, self.cache, jnp.asarray(tokens),
+                        jnp.asarray(lengths), jnp.asarray(slot_ids),
+                    )
+                    self.cold_dispatches += 1
+                self.prefill_dispatches += 1
+                self.prefill_tokens += int(sum(p.size for p in sufs))
+                for j, i in enumerate(group):
+                    logits_by_slot[i] = logits[j]
+            for i in claimed:  # emit in admission order
+                emit(i, logits_by_slot[i])
         elif self.paged_cache:
             # per-request dispatches, but through prefill_slots (the paged
             # writer) at width 1 — prefill_into_slot is ring-only
@@ -1005,18 +1116,24 @@ class ServeEngine:
                 slot = self.slots[i]
                 suf = slot.feed[slot.prefix_len:]
                 if slot.prefix_len:
+                    pw = bucket_pages(
+                        -(-slot.prefix_len // self.page_size),
+                        self.table_width,
+                    )
                     self.cache, lg = self._prefill_suffix(
                         self.params, self.cache, jnp.asarray(suf[None, :]),
                         jnp.asarray([suf.size], np.int32),
                         jnp.asarray([i], np.int32),
-                        jnp.asarray([slot.prefix_len], np.int32),
+                        jnp.asarray([slot.prefix_len], np.int32), pw,
                     )
+                    self.suffix_dispatches += 1
                 else:
                     self.cache, lg = self._prefill_slots(
                         self.params, self.cache, jnp.asarray(suf[None, :]),
                         jnp.asarray([suf.size], np.int32),
                         jnp.asarray([i], np.int32),
                     )
+                    self.cold_dispatches += 1
                 self.prefill_dispatches += 1
                 self.prefill_tokens += int(suf.size)
                 emit(i, lg[0])
@@ -1155,6 +1272,9 @@ class ServeEngine:
         """
         n_done = len(self.finished)
         attention.set_decode_kernel(self.use_kernel, paged=self.paged_decode)
+        # prefix-hit admission rounds (dispatched from _admit below) run
+        # the Pallas suffix-prefill kernel under the same engine-wide flag
+        attention.set_suffix_kernel(self.use_kernel)
         try:
             self._admit(self._now(), respect_arrivals)
             live = [i for i, s in enumerate(self.slots) if s is not None]
@@ -1247,6 +1367,7 @@ class ServeEngine:
                         self._retire(i, slot)  # freed; backfilled next admit
         finally:
             attention.set_decode_kernel(False)
+            attention.set_suffix_kernel(False)
         return self.finished[n_done:]
 
     def run(

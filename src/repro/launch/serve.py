@@ -187,16 +187,22 @@ def main(argv=None):
                     "instead of the ring-equivalent default — serves "
                     "requests longer than num_slots would split, at "
                     "num_slots× the per-step jnp gather cost")
+    # default=None distinguishes "user explicitly asked" (--prefix-cache,
+    # validated below — an impossible config is an error, not a silent
+    # no-op) from the advertised default-on (None → enabled when the
+    # config supports it, with the engine logging why when it can't)
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
-                    action="store_false",
+                    action="store_false", default=None,
                     help="[continuous] disable shared-prefix KV reuse "
                     "(paged cache): every request prefills its full "
                     "prompt instead of mapping cached prefix pages and "
                     "prefilling only the uncached suffix")
     ap.add_argument("--prefix-cache", dest="prefix_cache",
-                    action="store_true", default=True,
-                    help="[continuous] enable shared-prefix KV reuse "
-                    "(default on with the paged cache)")
+                    action="store_true",
+                    help="[continuous] require shared-prefix KV reuse "
+                    "(default on with the paged cache when the config "
+                    "supports it; explicit use errors out on a config "
+                    "that can never honor it)")
     ap.add_argument("--prefix-cache-pages", type=int, default=0,
                     help="[continuous] cap on pool pages the prefix index "
                     "may pin (0 = the pool's allocatable capacity); "
@@ -218,6 +224,29 @@ def main(argv=None):
     if args.temperature > 0 and not args.continuous:
         ap.error("sampling flags require --continuous "
                  "(the serve_batch oracle is greedy by construction)")
+    if args.prefix_cache:  # explicit --prefix-cache: fail fast, not silent
+        blockers = []
+        if not args.continuous:
+            blockers.append("batch mode (use --continuous)")
+        if not args.paged_cache:
+            blockers.append(
+                "--no-paged-cache (prefix sharing rides the page table)"
+            )
+        if args.window > 0:
+            blockers.append(
+                f"--window {args.window} (sliding-window ring wraps; "
+                "prefix pages would be overwritten)"
+            )
+        if args.prefill == "interleaved":
+            blockers.append(
+                "--prefill interleaved (suffix rounds need chunked "
+                "batched admission)"
+            )
+        if blockers:
+            ap.error(
+                "--prefix-cache cannot be honored by this config: "
+                + "; ".join(blockers)
+            )
     if args.continuous:
         from repro.launch.engine import serve_continuous
         from repro.launch.sampling import SamplingParams
@@ -242,7 +271,7 @@ def main(argv=None):
             num_pages=args.num_pages,
             long_requests=args.long_requests,
             watermark_pages=args.watermark_pages,
-            prefix_cache=args.prefix_cache,
+            prefix_cache=args.prefix_cache is not False,  # None = default on
             prefix_cache_pages=args.prefix_cache_pages,
             sampling=sampling,
             seed=args.seed, stagger=args.stagger,

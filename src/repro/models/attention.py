@@ -57,6 +57,14 @@ USE_PAGED_DECODE = False
 # positions (true for every training/prefill call site).
 USE_PREFILL_KERNEL = False
 
+# When True, prefill_slots' SUFFIX mode (prefix-cache hit admission) runs
+# the Pallas suffix-prefill kernel (repro.kernels.flash_suffix_prefill):
+# the cached prefix is read directly through the page table via scalar
+# prefetch instead of gathering table_width × page_size lanes in HBM, and
+# dead prefix pages are skipped with pl.when. The displaced jnp
+# gather-concat path below IS the kernel's oracle; tests pin them equal.
+USE_SUFFIX_KERNEL = False
+
 
 def set_decode_kernel(enabled: bool, *, paged: bool = False) -> None:
     global USE_DECODE_KERNEL, USE_PAGED_DECODE
@@ -67,6 +75,11 @@ def set_decode_kernel(enabled: bool, *, paged: bool = False) -> None:
 def set_prefill_kernel(enabled: bool) -> None:
     global USE_PREFILL_KERNEL
     USE_PREFILL_KERNEL = enabled
+
+
+def set_suffix_kernel(enabled: bool) -> None:
+    global USE_SUFFIX_KERNEL
+    USE_SUFFIX_KERNEL = enabled
 
 
 # ------------------------------------------------------------------ params

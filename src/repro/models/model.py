@@ -41,11 +41,13 @@ class ModelAPI:
     # init_slot_cache(params, num_slots, max_seq, window=) -> per-slot cache
     # prefill_slot(params, cache, tokens (1,S), slot, window=) -> (cache, logits)
     # prefill_slots(params, cache, tokens (n,S), lengths (n,), slots (n,),
-    #               starts=None, window=) -> (cache, logits (n, Vp)) —
-    #               batched admission: n right-padded prompts into n
-    #               distinct slots, one forward; starts (n,) switches to
-    #               SUFFIX prefill over a pre-populated page table (prefix
-    #               sharing: row r's tokens start at position starts[r])
+    #               starts=None, prefix_pages=None, window=) ->
+    #               (cache, logits (n, Vp)) — batched admission: n
+    #               right-padded prompts into n distinct slots, one forward;
+    #               starts (n,) switches to SUFFIX prefill over a
+    #               pre-populated page table (prefix sharing: row r's
+    #               tokens start at position starts[r]); prefix_pages
+    #               statically bounds the prefix pages the attend streams
     # init_paged_cache(params, num_slots, num_pages, page_size, table_width,
     #               window=) -> shared paged pool + per-slot page tables;
     #               decode/prefill_slots accept either cache layout
@@ -89,10 +91,10 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
         )
 
     def prefill_slots(params, cache, tokens, lengths, slots, *, starts=None,
-                      window=0):
+                      prefix_pages=None, window=0):
         return transformer.prefill_slots(
             cfg, params, cache, tokens, lengths, slots, starts=starts,
-            ffn=ffn, window=window,
+            prefix_pages=prefix_pages, ffn=ffn, window=window,
         )
 
     def init_paged_cache(

@@ -355,6 +355,7 @@ def prefill_slots(
     slots: jax.Array,
     *,
     starts: jax.Array | None = None,
+    prefix_pages: int | None = None,
     ffn: FFNHooks = DENSE_FFN,
     window: int = 0,
 ) -> tuple[dict, jax.Array]:
@@ -395,6 +396,16 @@ def prefill_slots(
     tokens as the ``starts=None`` path. ``starts=None`` itself traces the
     pre-existing math unchanged, so non-sharing engines stay bitwise
     identical.
+
+    ``prefix_pages`` statically bounds how many leading table pages the
+    suffix attend streams (the engine passes a pow2-bucketed
+    ``ceil(max(starts)/page)`` so compile counts stay gated); it must cover
+    every row's live prefix. ``None`` streams the full table width —
+    bitwise the pre-bounding behavior. When ``attn.USE_SUFFIX_KERNEL`` is
+    set, the suffix attend runs the Pallas kernel
+    (kernels/flash_suffix_prefill.py), reading the prefix straight through
+    the page table with no HBM gather; the jnp gather-concat path below
+    stays as its oracle.
     """
     assert cache["pos"].ndim == 1, "prefill_slots requires a per-slot cache"
     n, s = tokens.shape
@@ -415,10 +426,13 @@ def prefill_slots(
         assert window == 0, "suffix prefill is windowless (no ring wrap)"
         starts = jnp.asarray(starts, jnp.int32)
         pos = starts[:, None] + positions_for(tokens)
+        # static bound on the prefix pages the attend streams; None keeps
+        # the full table width (bitwise the pre-bounding trace)
+        w_pfx = t_w if prefix_pages is None else max(1, min(prefix_pages, t_w))
         # global position held by ring slot c is c (windowless, no wrap);
         # lanes at/after each row's start hold no prefix yet — banish them
         # beyond any real query position so the causal mask excludes them
-        ring_c = jnp.arange(t_w * page)[None, :]
+        ring_c = jnp.arange(w_pfx * page)[None, :]
         prefix_pos = jnp.where(ring_c < starts[:, None], ring_c, attn.FAR_POS)
 
     def body(h, sl):
@@ -430,8 +444,27 @@ def prefill_slots(
                 lp["attn"], a, pos, cfg, causal=True, window=window,
                 q_chunk=q_chunk,
             )
+        elif attn.USE_SUFFIX_KERNEL:
+            # Pallas suffix kernel: the prefix is read straight through the
+            # page table (scalar prefetch), no HBM gather, no (w·page+S)
+            # score tensor. q is projected/roped here exactly as
+            # attend_full would.
+            from repro.kernels.ops import suffix_prefill_attention
+
+            hd = cfg.resolved_head_dim
+            g = cfg.n_heads // cfg.n_kv_heads
+            q = (a @ lp["attn"]["wq"]).reshape(n, s, cfg.n_heads, hd)
+            q = attn.apply_rope(q, pos, cfg.rope_theta)
+            o = suffix_prefill_attention(
+                q.reshape(n, s, cfg.n_kv_heads, g, hd), k, v, ck, cv,
+                t_rows, starts, prefix_width=w_pfx, use_kernel=True,
+            )
+            a = o.reshape(n, s, -1).astype(a.dtype) @ lp["attn"]["wo"]
         else:
             # gather the prefix pages once and attend over [prefix | suffix]
+            # — the displaced production path, kept as the kernel's oracle.
+            # Only the first w_pfx pages enter the attend (bounded score
+            # tensor); dead lanes past each row's start are FAR-banished.
             hkv, hd = ck.shape[-2], ck.shape[-1]
             gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
             gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
@@ -439,8 +472,8 @@ def prefill_slots(
                 lp["attn"], a, pos, cfg, causal=True, window=window,
                 q_chunk=q_chunk,
                 kv=(
-                    jnp.concatenate([gk, k], axis=1),
-                    jnp.concatenate([gv, v], axis=1),
+                    jnp.concatenate([gk[:, : w_pfx * page], k], axis=1),
+                    jnp.concatenate([gv[:, : w_pfx * page], v], axis=1),
                 ),
                 kv_positions=jnp.concatenate(
                     [prefix_pos, pos], axis=1
@@ -451,7 +484,10 @@ def prefill_slots(
         f, _ = ffn.apply(lp["ffn"], f, cfg)
         if table is not None:
             hkv, hd = ck.shape[-2], ck.shape[-1]
-            if starts is None:
+            if starts is None or attn.USE_SUFFIX_KERNEL:
+                # the ring WRITE always works over full-width gathered rows
+                # (fill_cache_rows may land the suffix on any page); the
+                # kernel branch above skipped the gather for the attend
                 gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
                 gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
             rows_k, rows_v = attn.fill_cache_rows(

@@ -1,5 +1,7 @@
 """Shared fixtures. NOTE: no XLA_FLAGS device override here — tests run on
 the real single CPU device; only launch/dryrun.py requests 512 host devices."""
+import gc
+
 import jax
 import pytest
 
@@ -7,6 +9,24 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_state_between_modules():
+    """Free compiled XLA executables after each test module.
+
+    Engine-heavy modules each build hundreds of jitted executables
+    (every ServeEngine wraps its own jit closures); reference cycles keep
+    them alive past the test that made them, and with enough modules in
+    one process the accumulated JIT code eventually segfaults XLA's CPU
+    backend_compile (reproducible at the same compile across full-suite
+    runs; any module alone is fine). Dropping the caches between modules
+    bounds live compiled state to one module's worth. Cross-module jit
+    reuse is almost nil — engines are per-test — so this costs little."""
+    yield
+    gc.collect()       # break engine cycles so cache entries are collectable
+    jax.clear_caches()
+    gc.collect()
 
 
 def pytest_addoption(parser):

@@ -294,19 +294,28 @@ def test_prefix_suffix_rounds_stay_in_bucket_ladder(model_and_params):
         engine.run(reqs)
         suffix_shapes.add((bucket_width(w, 4), bucket_length(sl)))
     assert engine.prefix_hit_pages > 0, "suffix rounds must actually hit"
-    allowed = len(cold_shapes) + len(suffix_shapes)
-    compiled = engine.compiles["prefill_slots"]
-    assert compiled <= allowed, (
-        f"prefix engine compiled prefill_slots {compiled} times; "
-        f"cold + suffix bucket ladders allow {allowed}"
+    # split dispatch: cold rounds trace prefill_slots, hit rounds trace
+    # prefill_suffix — each bounded by its OWN ladder. Every suffix round
+    # here hits the same 4 shared pages, so all land in one prefix-pages
+    # bucket (bucket_pages(4, t_w) = 4) and the suffix ladder is exactly
+    # the (width, length) bucket set.
+    compiled_cold = engine.compiles["prefill_slots"]
+    compiled_suffix = engine.compiles["prefill_suffix"]
+    assert compiled_cold <= len(cold_shapes), (
+        f"cold trace compiled {compiled_cold} times; ladder allows "
+        f"{len(cold_shapes)}"
+    )
+    assert compiled_suffix <= len(suffix_shapes), (
+        f"suffix trace compiled {compiled_suffix} times; "
+        f"width×length ladder (one start bucket) allows {len(suffix_shapes)}"
     )
     assert engine.compiles["decode"] == 1
     # covered buckets stay covered: repeat traffic, zero new traces
-    before = engine.compiles["prefill_slots"]
+    before = engine.prefill_compiles
     tail = rng.integers(1, cfg.vocab_size, 4).astype(np.int32)
     engine.run([Request(uid=uid, max_new_tokens=2,
                         prompt=np.concatenate([common, tail]))])
-    assert engine.compiles["prefill_slots"] == before
+    assert engine.prefill_compiles == before
 
 
 def test_paged_cache_donation(model_and_params):

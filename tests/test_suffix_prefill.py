@@ -1,0 +1,378 @@
+"""Suffix-prefill flash kernel + hit/cold round splitting.
+
+Two layers of contract:
+
+KERNEL (TestSuffixKernel): the Pallas table-reading kernel
+(kernels/flash_suffix_prefill.py) must match the displaced jnp
+gather-concat oracle (``ref.suffix_prefill_ref`` — bitwise the production
+path prefix sharing shipped with) across page-table layouts: shared /
+aliased pages between rows, CoW-split private copies, scattered physical
+placement, mixed starts including 0 (cold rows) and mid-page values, and
+every covering prefix-width bucket. Tolerances follow the flash_prefill
+suite (reassociation: 2e-5 f32, 2e-2 bf16).
+
+ENGINE: split admission must be INVISIBLE IN THE OUTPUT — a round mixing
+cold and hit rows is token-identical to admitting the same requests
+all-cold or all-hit, the fully-cached-prompt CoW corner included — while
+cold rounds compile and dispatch ZERO suffix traces, and preemption-resume
+re-admissions never inflate the external prefix hit rate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.kernels import ops, ref
+from repro.launch.engine import Request, ServeEngine, bucket_pages
+
+ARCH = "stablelm-1.6b"
+PS = 4  # page size used throughout the engine tests
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _build(model_and_params, *, prefix=True, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("paged_cache", True)
+    kw.setdefault("page_size", PS)
+    if prefix:
+        kw.setdefault("prefix_cache_pages", 16)
+    return ServeEngine(model, params, prefix_cache=prefix, **kw)
+
+
+def _assert_same_tokens(a, b):
+    got = {o.uid: o.tokens for o in b}
+    assert len(a) == len(b)
+    for o in a:
+        assert o.tokens == got[o.uid], f"uid {o.uid}: {o.tokens} != {got[o.uid]}"
+
+
+# ------------------------------------------------------------------- ladder
+def test_bucket_pages_ladder():
+    assert [bucket_pages(p, 8) for p in (0, 1, 2, 3, 4, 5, 8)] == [
+        1, 1, 2, 4, 4, 8, 8,
+    ]
+    assert bucket_pages(100, 8) == 8      # capped at the table width
+    assert bucket_pages(0, 0) == 1        # degenerate table still covers
+
+
+# ------------------------------------------------------------ kernel oracle
+def _rand_case(key, *, n, s, hkv, g, hd, n_pool, t_w, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return (
+        jax.random.normal(ks[0], (n, s, hkv, g, hd), dtype),
+        jax.random.normal(ks[1], (n, s, hkv, hd), dtype),
+        jax.random.normal(ks[2], (n, s, hkv, hd), dtype),
+        jax.random.normal(ks[3], (n_pool, PS, hkv, hd), dtype),
+        jax.random.normal(ks[4], (n_pool, PS, hkv, hd), dtype),
+    )
+
+
+class TestSuffixKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("s,g,hd", [(8, 1, 32), (16, 2, 64), (32, 4, 32)])
+    def test_sweep_vs_ref(self, dtype, s, g, hd):
+        n, hkv, t_w, n_pool = 3, 2, 8, 24
+        q, ksuf, vsuf, pk, pv = _rand_case(
+            jax.random.PRNGKey(s * g + hd), n=n, s=s, hkv=hkv, g=g, hd=hd,
+            n_pool=n_pool, t_w=t_w, dtype=dtype,
+        )
+        # scattered placement; row 2 is COLD (starts 0, table all-scratch)
+        table = jnp.array([
+            [5, 17, 3, 21, 9, 0, 0, 0],
+            [5, 17, 11, 2, 0, 0, 0, 0],
+            [0, 0, 0, 0, 0, 0, 0, 0],
+        ], jnp.int32)
+        starts = jnp.array([19, 16, 0], jnp.int32)  # mid-page, aligned, cold
+        w = bucket_pages(-(-19 // PS), t_w)
+        out = ops.suffix_prefill_attention(
+            q, ksuf, vsuf, pk, pv, table, starts,
+            prefix_width=w, use_kernel=True,
+        )
+        exp = ref.suffix_prefill_ref(q, ksuf, vsuf, pk, pv, table, starts)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+    def test_aliased_and_cow_pages(self):
+        """Rows SHARING physical pages (prefix hit) next to a row holding a
+        CoW-split private copy of the same logical page — layout must be
+        pure indirection, invisible in the output."""
+        n, s, hkv, g, hd, t_w, n_pool = 4, 8, 2, 2, 32, 6, 16
+        q, ksuf, vsuf, pk, pv = _rand_case(
+            jax.random.PRNGKey(7), n=n, s=s, hkv=hkv, g=g, hd=hd,
+            n_pool=n_pool, t_w=t_w,
+        )
+        # rows 0/1 alias pages (3, 8); row 2's last page CoW-split to 12;
+        # row 3 aliases only the first shared page
+        table = jnp.array([
+            [3, 8, 0, 0, 0, 0],
+            [3, 8, 5, 0, 0, 0],
+            [3, 12, 0, 0, 0, 0],
+            [3, 0, 0, 0, 0, 0],
+        ], jnp.int32)
+        starts = jnp.array([8, 12, 7, 4], jnp.int32)
+        out = ops.suffix_prefill_attention(
+            q, ksuf, vsuf, pk, pv, table, starts,
+            prefix_width=bucket_pages(3, t_w), use_kernel=True,
+        )
+        exp = ref.suffix_prefill_ref(q, ksuf, vsuf, pk, pv, table, starts)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+        )
+
+    def test_all_cold_rows(self):
+        """starts == 0 everywhere: the prefix phase is fully dead and the
+        kernel must reduce to plain causal flash over the suffix."""
+        n, s, hkv, g, hd, t_w, n_pool = 2, 16, 2, 2, 32, 4, 8
+        q, ksuf, vsuf, pk, pv = _rand_case(
+            jax.random.PRNGKey(3), n=n, s=s, hkv=hkv, g=g, hd=hd,
+            n_pool=n_pool, t_w=t_w,
+        )
+        table = jnp.zeros((n, t_w), jnp.int32)
+        starts = jnp.zeros((n,), jnp.int32)
+        out = ops.suffix_prefill_attention(
+            q, ksuf, vsuf, pk, pv, table, starts,
+            prefix_width=1, use_kernel=True,
+        )
+        exp = ref.flash_prefill_ref(q, ksuf, vsuf, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+        )
+
+    @pytest.mark.parametrize("w", [2, 4, 8])
+    def test_every_covering_width_bucket_agrees(self, w):
+        """Any static width that covers max(starts) pages must produce the
+        same output — dead pages past each row's live prefix contribute
+        exactly-zero probability mass."""
+        n, s, hkv, g, hd, t_w, n_pool = 2, 8, 1, 2, 64, 8, 20
+        q, ksuf, vsuf, pk, pv = _rand_case(
+            jax.random.PRNGKey(w), n=n, s=s, hkv=hkv, g=g, hd=hd,
+            n_pool=n_pool, t_w=t_w,
+        )
+        table = jnp.array([
+            [7, 2, 19, 4, 11, 0, 0, 0],
+            [7, 2, 0, 0, 0, 0, 0, 0],
+        ], jnp.int32)
+        starts = jnp.array([6, 5], jnp.int32)   # 2 pages max
+        out = ops.suffix_prefill_attention(
+            q, ksuf, vsuf, pk, pv, table, starts,
+            prefix_width=w, use_kernel=True,
+        )
+        exp = ref.suffix_prefill_ref(q, ksuf, vsuf, pk, pv, table, starts)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+        )
+
+    def test_bounded_ref_matches_full_ref(self):
+        """The width-bounded oracle == the full-table oracle whenever the
+        bound covers every live prefix (the engine's bucket contract)."""
+        n, s, hkv, g, hd, t_w, n_pool = 3, 8, 2, 1, 32, 8, 16
+        q, ksuf, vsuf, pk, pv = _rand_case(
+            jax.random.PRNGKey(11), n=n, s=s, hkv=hkv, g=g, hd=hd,
+            n_pool=n_pool, t_w=t_w,
+        )
+        table = jnp.arange(1, 1 + n * t_w, dtype=jnp.int32).reshape(n, t_w) % n_pool
+        starts = jnp.array([5, 0, 8], jnp.int32)
+        full = ref.suffix_prefill_ref(q, ksuf, vsuf, pk, pv, table, starts)
+        bounded = ref.suffix_prefill_ref(
+            q, ksuf, vsuf, pk, pv, table, starts, prefix_width=2
+        )
+        np.testing.assert_allclose(
+            np.asarray(bounded), np.asarray(full), rtol=1e-6, atol=1e-6
+        )
+
+    @given(
+        s0=st.integers(0, 31), s1=st.integers(0, 31),
+        seed=st.integers(0, 50),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_arbitrary_starts(self, s0, s1, seed):
+        """Kernel == oracle for arbitrary per-row starts (0, mid-page,
+        page-aligned, full-table) at the bucketed covering width."""
+        n, s, hkv, g, hd, t_w, n_pool = 2, 8, 1, 1, 32, 8, 34
+        q, ksuf, vsuf, pk, pv = _rand_case(
+            jax.random.PRNGKey(seed), n=n, s=s, hkv=hkv, g=g, hd=hd,
+            n_pool=n_pool, t_w=t_w,
+        )
+        table = (
+            1 + jax.random.permutation(
+                jax.random.PRNGKey(seed + 1), n_pool - 1
+            )[: n * t_w].reshape(n, t_w)
+        ).astype(jnp.int32)
+        starts = jnp.array([s0, s1], jnp.int32)
+        w = bucket_pages(-(-max(s0, s1) // PS), t_w)
+        out = ops.suffix_prefill_attention(
+            q, ksuf, vsuf, pk, pv, table, starts,
+            prefix_width=w, use_kernel=True,
+        )
+        exp = ref.suffix_prefill_ref(q, ksuf, vsuf, pk, pv, table, starts)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+        )
+
+
+# --------------------------------------------------------- engine contract
+def _shared_reqs(cfg, suffix_lens, *, prefix_tokens=16, gen=4, uid0=0,
+                 seed=0):
+    rng = np.random.default_rng(seed)
+    common = rng.integers(1, cfg.vocab_size, prefix_tokens).astype(np.int32)
+    reqs = []
+    for j, sl in enumerate(suffix_lens):
+        tail = rng.integers(1, cfg.vocab_size, sl).astype(np.int32)
+        prompt = np.concatenate([common, tail]) if sl else common.copy()
+        reqs.append(Request(uid=uid0 + j, prompt=prompt, max_new_tokens=gen))
+    return reqs
+
+
+def _cold_reqs(cfg, lens, *, gen=4, uid0=100, seed=9):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=uid0 + j,
+                prompt=rng.integers(1, cfg.vocab_size, L).astype(np.int32),
+                max_new_tokens=gen)
+        for j, L in enumerate(lens)
+    ]
+
+
+def test_cold_rounds_trace_and_dispatch_zero_suffix(model_and_params):
+    """A prefix-sharing engine serving cold-only traffic must never touch
+    the suffix path: zero prefill_suffix compiles, zero suffix
+    dispatches — cold rows pay exactly the non-sharing engine's cost."""
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params)
+    engine.run(_cold_reqs(cfg, [5, 9, 13, 7], seed=1))
+    engine.run(_cold_reqs(cfg, [6, 11], uid0=200, seed=2))
+    assert engine.compiles["prefill_suffix"] == 0
+    assert engine.pool_stats["suffix_dispatches"] == 0
+    assert engine.pool_stats["cold_dispatches"] >= 2
+    assert engine.pool_stats["prefix_cache_enabled"]
+
+
+def test_mixed_round_splits_into_cold_and_hit_dispatch(model_and_params):
+    cfg, _, _ = model_and_params
+    engine = _build(model_and_params)
+    engine.run(_shared_reqs(cfg, [4]))           # publish the prefix
+    base_cold = engine.pool_stats["cold_dispatches"]
+    # one admission round mixing 2 hits with 2 cold rows
+    mixed = _shared_reqs(cfg, [3, 7], uid0=10) + _cold_reqs(cfg, [6, 9])
+    engine.run(mixed)
+    ps = engine.pool_stats
+    assert ps["suffix_dispatches"] >= 1
+    assert ps["cold_dispatches"] >= base_cold + 1
+    assert engine.compiles["prefill_suffix"] >= 1
+
+
+def test_mixed_round_token_identical_to_split_admission(model_and_params):
+    """Satellite: a round mixing starts == 0 and starts > 0 rows emits
+    exactly the tokens of all-cold + all-hit admission of the same
+    requests, CoW fully-cached corner (suffix_start = len(feed)-1)
+    included."""
+    cfg, _, _ = model_and_params
+    # uid 20 re-sends the EXACT published prompt → fully cached prompt,
+    # suffix_start = len(feed) - 1, CoW split of the final page
+    hit_rows = lambda: _shared_reqs(cfg, [0, 5], uid0=20)
+    cold_rows = lambda: _cold_reqs(cfg, [7, 12])
+
+    mixed_engine = _build(model_and_params)
+    mixed_engine.run(_shared_reqs(cfg, [4]))
+    mixed = mixed_engine.run(hit_rows() + cold_rows())
+    assert mixed_engine.cow_copies > 0, "fully-cached corner must CoW"
+    assert mixed_engine.pool_stats["suffix_dispatches"] >= 1
+
+    split_engine = _build(model_and_params)
+    split_engine.run(_shared_reqs(cfg, [4]))
+    split = split_engine.run(hit_rows()) + split_engine.run(cold_rows())
+    _assert_same_tokens(mixed, split)
+
+    # and the non-sharing engine remains the outer oracle
+    ref_engine = _build(model_and_params, prefix=False)
+    ref_engine.run(_shared_reqs(cfg, [4]))
+    ref_out = ref_engine.run(hit_rows() + cold_rows())
+    _assert_same_tokens(mixed, ref_out)
+
+
+@given(
+    n_hit=st.integers(1, 3), n_cold=st.integers(1, 3),
+    sl=st.integers(0, 11), cl=st.integers(1, 15),
+)
+@settings(max_examples=6, deadline=None)
+def test_property_mixed_rounds_token_identical(
+    model_and_params, n_hit, n_cold, sl, cl
+):
+    """Bucket-ladder edges included: widths and lengths land on and around
+    the pow2 boundaries as hypothesis varies row counts and lengths."""
+    cfg, _, _ = model_and_params
+    hit_rows = lambda: _shared_reqs(
+        cfg, [sl + j for j in range(n_hit)], uid0=10
+    )
+    cold_rows = lambda: _cold_reqs(cfg, [cl + j for j in range(n_cold)])
+
+    mixed_engine = _build(model_and_params)
+    mixed_engine.run(_shared_reqs(cfg, [4]))
+    mixed = mixed_engine.run(hit_rows() + cold_rows())
+
+    split_engine = _build(model_and_params)
+    split_engine.run(_shared_reqs(cfg, [4]))
+    split = split_engine.run(hit_rows()) + split_engine.run(cold_rows())
+    _assert_same_tokens(mixed, split)
+
+
+def test_suffix_kernel_engine_token_identity(model_and_params):
+    """use_kernel=True routes hit rounds through the Pallas suffix kernel
+    (plus paged decode); tokens must equal the jnp engine's bitwise."""
+    cfg, _, _ = model_and_params
+    outs = []
+    for uk in (False, True):
+        engine = _build(model_and_params, use_kernel=uk)
+        engine.run(_shared_reqs(cfg, [4]))
+        outs.append(engine.run(
+            _shared_reqs(cfg, [0, 3, 7], uid0=10) + _cold_reqs(cfg, [6])
+        ))
+        if uk:
+            assert engine.pool_stats["suffix_dispatches"] >= 1
+    _assert_same_tokens(outs[0], outs[1])
+
+
+def test_resume_hits_excluded_from_external_hit_rate(model_and_params):
+    """Satellite: preemption-resume re-admissions (feed = prompt +
+    generated) must not inflate prefix_hit_rate — the tight engine (with
+    preemptions) reports the SAME external hit rate as a roomy engine
+    serving identical traffic, with the resume savings tracked
+    separately."""
+    cfg, _, _ = model_and_params
+
+    def traffic(engine):
+        engine.run(_shared_reqs(cfg, [4], gen=2))        # publish prefix
+        return engine.run(_shared_reqs(cfg, [2, 5], uid0=10, gen=10))
+
+    roomy = _build(model_and_params, num_slots=2, max_seq=40)
+    r_out = traffic(roomy)
+    assert roomy.preemptions == 0
+
+    # pool sized so decoding both hits past the prompt runs out of pages
+    tight = _build(model_and_params, num_slots=2, max_seq=40, num_pages=10,
+                   prefix_cache_pages=4)
+    t_out = traffic(tight)
+    assert tight.preemptions > 0, "pool must force preempt -> resume"
+    assert tight.pool_stats["prefix_resume_hit_tokens"] > 0, (
+        "resume re-admission must land in the resume counter"
+    )
+    _assert_same_tokens(t_out, r_out)
+    assert tight.pool_stats["prefix_lookup_tokens"] == \
+        roomy.pool_stats["prefix_lookup_tokens"]
+    assert tight.pool_stats["prefix_hit_rate"] == pytest.approx(
+        roomy.pool_stats["prefix_hit_rate"]
+    )
