@@ -3,9 +3,11 @@
 The serve-bench smoke run APPENDS one schema-2 entry per CI run to
 ``BENCH_serve.json`` at the repo root; this tool turns that trajectory
 into a markdown table so the perf history is readable at a glance —
-tokens/sec, TTFT p95, pool occupancy, preemptions, and the prefix-cache
+tokens/sec, TTFT p95, pool occupancy, preemptions, the prefix-cache
 columns (hit rate, prefilled-token savings, CoW splits, suffix-dispatch
-count, steady warm-round seconds) added with prefix sharing. In CI it
+count, steady warm-round seconds) added with prefix sharing, and the
+tensor-parallel columns (shard count, sharded tokens/sec) added with
+mesh-sharded serving. Entries predating a column render as "—". In CI it
 lands on the job's step summary page.
 
 Output goes to ``$GITHUB_STEP_SUMMARY`` when set (the GitHub Actions
@@ -31,6 +33,8 @@ COLUMNS = (
     ("when (UTC)", "timestamp", "{}"),
     ("tok/s", "tokens_per_second", "{:.1f}"),
     ("tok/s paged", "tokens_per_second_paged", "{:.1f}"),
+    ("shards", "sharded_shards", "{}"),
+    ("tok/s sharded", "tokens_per_second_sharded", "{:.1f}"),
     ("ttft p95 (s)", "ttft_p95", "{:.3f}"),
     ("lat p95 (s)", "latency_p95", "{:.3f}"),
     ("occ mean", "pool_occupancy_mean", "{:.0%}"),

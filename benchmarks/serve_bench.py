@@ -30,6 +30,18 @@ paged engine with and without the prefix cache, asserting identical
 greedy tokens, ≥ 50% fewer prefilled tokens, a nonzero prefix hit rate,
 and an exercised copy-on-write split (``bench_shared_prefix``).
 
+Burst mode also runs the SHARDED probe: the same burst trace through a
+tensor-parallel engine on a ``model``-axis CPU mesh
+(``ServeEngine(mesh=...)``) vs. the single-device paged engine, asserting
+BITWISE-identical greedy tokens and reporting sharded tokens/sec,
+per-shard occupancy, and compile counts. A one-device process (the plain
+local run) re-execs itself with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` so the trajectory
+still carries real multi-shard numbers; under the CI sharded job (4
+forced host devices) the probe runs in-process on 4 shards.
+``--sharded-probe`` runs just this probe and prints its JSON — the CI
+sharded job's entry point.
+
 ``--smoke`` is the CI-sized burst run. Besides the usual
 ``benchmarks/results.json`` entry it APPENDS a timestamped entry to
 ``BENCH_serve.json`` at the repo root — the perf trajectory future PRs
@@ -45,6 +57,8 @@ import argparse
 import datetime
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -329,6 +343,113 @@ def bench_shared_prefix(args) -> dict:
     }
 
 
+def _sharded_probe(args, shards: int) -> dict:
+    """The same burst trace through the paged engine unsharded and
+    tensor-parallel over ``shards`` devices (``model``-axis mesh,
+    per-shard kv-head page pool). Sharding must be invisible in the
+    output — the probe ASSERTS bitwise-identical greedy tokens — so the
+    contrast rows measure pure engine overhead/speedup, never quality."""
+    from repro.launch.mesh import make_serve_mesh
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_seq = max(args.prompt_lens) + args.gen
+
+    def trace():
+        return burst_trace(
+            cfg, n_requests=args.requests, burst_size=max(args.burst, 1),
+            gap=0.0, prompt_lens=tuple(args.prompt_lens),
+            gen_tokens=args.gen, seed=args.seed,
+        )
+
+    out = {}
+    for label, mesh in (
+        ("unsharded", None), ("sharded", make_serve_mesh(shards)),
+    ):
+        engine = ServeEngine(
+            model, params, num_slots=args.slots, max_seq=max_seq,
+            prefill="chunked", paged_cache=True, page_size=args.page_size,
+            mesh=mesh,
+        )
+        engine.warm(args.prompt_lens)
+        t0 = time.time()
+        outs = engine.run(trace())
+        wall = time.time() - t0
+        total = sum(len(o.tokens) for o in outs)
+        ps = engine.pool_stats
+        out[label] = {
+            "wall_seconds": wall,
+            "tokens_per_second": total / max(wall, 1e-9),
+            "engine_steps": engine.steps,
+            "prefill_compiles": engine.prefill_compiles,
+            "compiles": engine.compiles,
+            "shards": ps["shards"],
+            "mesh_axes": ps["mesh_axes"],
+            "occupancy": ps["occupancy"],
+            "occupancy_max": ps["occupancy_max"],
+            "preemptions": ps["preemptions"],
+            "generated": [o.tokens for o in outs],
+        }
+    assert out["sharded"]["generated"] == out["unsharded"]["generated"], (
+        "tensor-parallel serving changed greedy output"
+    )
+    for m in out.values():
+        del m["generated"]
+    return {"shards": shards, **out}
+
+
+_SHARDED_PROBE_MARK = "SHARDED_PROBE_JSON "
+
+
+def bench_sharded(args) -> dict:
+    """Run the sharded probe, in-process when this process already holds
+    enough devices (the CI sharded job forces 4 host devices), otherwise
+    by re-execing this module with a forced 2-device host platform —
+    XLA reads ``--xla_force_host_platform_device_count`` once at jaxlib
+    import, so an already-initialized one-device process can never shard
+    itself."""
+    ndev = len(jax.devices())
+    shards = args.shards or min(4, ndev)
+    if shards >= 2:
+        if ndev < shards:
+            raise RuntimeError(
+                f"sharded probe wants {shards} shards but only {ndev} "
+                "device(s) are visible; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={shards}"
+            )
+        return _sharded_probe(args, shards)
+    if args.sharded_probe:
+        # we ARE the re-exec (or the CI probe entry) — if the forced
+        # device count did not take, recursing would loop forever
+        raise RuntimeError(
+            "--sharded-probe needs >= 2 devices; XLA_FLAGS="
+            "--xla_force_host_platform_device_count was not applied"
+        )
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [
+        sys.executable, "-m", "benchmarks.serve_bench", "--sharded-probe",
+        "--shards", "2", "--arch", args.arch, "--slots", str(args.slots),
+        "--requests", str(args.requests), "--burst", str(max(args.burst, 1)),
+        "--gen", str(args.gen), "--page-size", str(args.page_size),
+        "--seed", str(args.seed), "--prompt-lens",
+        *map(str, args.prompt_lens),
+    ]
+    r = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=900, cwd=root,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+             "JAX_PLATFORMS": "cpu", "PYTHONPATH": "src:."},
+    )
+    for line in r.stdout.splitlines():
+        if line.startswith(_SHARDED_PROBE_MARK):
+            return json.loads(line[len(_SHARDED_PROBE_MARK):])
+    raise RuntimeError(
+        f"sharded probe subprocess failed (exit {r.returncode}):\n"
+        f"{r.stderr[-2000:]}"
+    )
+
+
 def bench_burst(args) -> dict:
     """Burst arrivals through the engine: bucketed-batched vs. unbucketed-
     batched vs. per-request prefill.
@@ -422,6 +543,7 @@ def bench_burst(args) -> dict:
         "window": args.window,
         "decode_occupancy": bench_decode_occupancy(slots=args.slots),
         "shared_prefix": bench_shared_prefix(args),
+        "sharded": bench_sharded(args),
         **out,
     }
 
@@ -440,6 +562,7 @@ def write_bench_seed(res: dict) -> None:
     tight = res["paged_tight"]
     occ = res["decode_occupancy"]
     sp = res["shared_prefix"]
+    sh = res["sharded"]
     entry = {
         "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"
@@ -483,6 +606,13 @@ def write_bench_seed(res: dict) -> None:
         "prefix_cold_dispatches": sp["prefix_on"]["pool"]["cold_dispatches"],
         "suffix_round_s": sp["prefix_on"]["steady_round_seconds"],
         "cold_round_s": sp["prefix_off"]["steady_round_seconds"],
+        "sharded_shards": sh["shards"],
+        "tokens_per_second_sharded": sh["sharded"]["tokens_per_second"],
+        "tokens_per_second_sharded_base": sh["unsharded"][
+            "tokens_per_second"
+        ],
+        "sharded_occupancy_max": sh["sharded"]["occupancy_max"],
+        "sharded_prefill_compiles": sh["sharded"]["prefill_compiles"],
     }
     trajectory = {"schema": 2, "entries": []}
     if os.path.exists(BENCH_SEED_PATH):
@@ -552,6 +682,14 @@ def _parser():
     ap.add_argument("--burst-gap", type=float, default=0.0,
                     help="seconds between bursts (0 = all at t=0 in "
                     "virtual time; > 0 runs realtime, honoring arrivals)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="model-axis shards for the sharded probe (0 = "
+                    "auto: min(4, visible devices), subprocess fallback "
+                    "on a one-device host)")
+    ap.add_argument("--sharded-probe", action="store_true",
+                    help="run ONLY the sharded-vs-unsharded probe and "
+                    "print its JSON (the CI sharded job entry point; also "
+                    "used internally by the one-device re-exec fallback)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized burst run: 8 requests in bursts of 4 "
                     "through 4 slots, mixed prompt lengths; writes the "
@@ -569,6 +707,11 @@ def run(argv: list[str] | None = None):
         # prefill_compiles contrast (bucketed vs. not) needs diversity
         args.prompt_lens = [5, 9, 16]
         args.gen = 8
+
+    if args.sharded_probe:
+        res = bench_sharded(args)
+        print(_SHARDED_PROBE_MARK + json.dumps(res))
+        return res
 
     if args.burst > 0:
         res = bench_burst(args)
@@ -616,6 +759,17 @@ def run(argv: list[str] | None = None):
             f"steady warm round {sp['prefix_on']['steady_round_seconds']:.2f}s"
             f" vs {sp['prefix_off']['steady_round_seconds']:.2f}s cold) — "
             "tokens identical",
+        )
+        sh = res["sharded"]
+        emit(
+            "serve_sharded",
+            1e6 * sh["sharded"]["wall_seconds"]
+            / max(sh["sharded"]["engine_steps"], 1),
+            f"{sh['shards']}-shard mesh {sh['sharded']['tokens_per_second']:.1f}"
+            f" tok/s vs {sh['unsharded']['tokens_per_second']:.1f} unsharded; "
+            f"per-shard occ {sh['sharded']['occupancy_max']:.0%}, "
+            f"{sh['sharded']['prefill_compiles']} prefill compiles — "
+            "tokens bitwise identical",
         )
         save_results("serve_bench_burst", res)
         if args.smoke:

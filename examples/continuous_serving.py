@@ -21,9 +21,27 @@ pool (token-identical to the ring engine), then an OVERSUBSCRIBED pool —
 half the memory, watermark admission, youngest-slot preemption with
 token-exact resume — plus one request whose prompt+gen exceeds max_seq,
 which ring mode must reject and the paged pool serves.
+
+The LAST act is tensor-parallel serving: the same engine sharded over a
+2-device ``model``-axis mesh (this script forces a 2-device CPU host
+platform, so it runs anywhere). Every shard holds its attention-head
+slice of EVERY page, so per-device KV bytes drop by the shard count while
+the page budget stays whole — a long prompt that an engine confined to
+one shard's proportional memory slice must reject (``AdmissionError:
+exceeds_pool``) streams through the meshed pool, with tokens bitwise
+identical to the single-device engine.
 """
 import dataclasses
+import os
 import time
+
+# XLA reads this once at jaxlib import — it cannot be set later, so the
+# sharded finale provisions its 2 virtual CPU devices before ``import jax``
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2"
+    ).strip()
 
 import jax
 import numpy as np
@@ -207,6 +225,56 @@ def main():
         f"without sharing (hit rate {stats['prefix_hit_rate']:.0%}, "
         f"{stats['prefix_hit_pages']} pages aliased) — "
         f"tokens identical: {agree}"
+    )
+
+    # tensor-parallel finale: shard the SAME engine over a 2-device
+    # `model`-axis mesh. Heads and the pool's kv-head dim split across
+    # shards; page tables stay host-side, so scheduling, preemption and
+    # prefix sharing are untouched — and the output is bitwise identical.
+    from repro.launch.engine import AdmissionError
+    from repro.launch.mesh import make_serve_mesh
+
+    S = 2
+    engine_m = ServeEngine(
+        model, params, num_slots=SLOTS, max_seq=2 * max_seq,
+        paged_cache=True, page_size=8, mesh=make_serve_mesh(S),
+    )
+    mouts = serve(
+        engine_m, build_trace(cfg), f"tensor-parallel · {S}-shard CPU mesh"
+    )
+    agree = all(a.tokens == b.tokens for a, b in zip(base, mouts))
+    ps = engine_m.pool_stats
+    print(
+        f"\n{ps['shards']}-shard mesh {ps['mesh_axes']}: per-shard KV "
+        f"bytes 1/{S} of the single-device pool — tokens bitwise "
+        f"identical to the unsharded engine: {agree}"
+    )
+
+    # memory headroom: every shard holds its HEAD SLICE of every page, so
+    # the meshed engine keeps the FULL page budget at 1/S the per-device
+    # bytes. The alternative — one device holding a proportional 1/S-page
+    # pool — must reject a long prompt the meshed pool streams through.
+    cap = engine_m.pool.capacity
+    long_req = build_trace(cfg, n=1, seed=11)[0]
+    long_req.arrival_time = 0.0
+    long_req.max_new_tokens = (cap // S + 2) * 8 - len(long_req.prompt)
+    slice_engine = ServeEngine(
+        model, params, num_slots=1, max_seq=2 * max_seq,
+        paged_cache=True, page_size=8, num_pages=cap // S + 1,
+    )
+    try:
+        slice_engine.run([dataclasses.replace(long_req)])
+        raise AssertionError("1/S-slice pool admitted an oversized request")
+    except AdmissionError as e:
+        print(
+            f"\n1/{S}-slice pool ({slice_engine.pool.capacity} pages) "
+            f"rejects the {len(long_req.prompt)}+{long_req.max_new_tokens}"
+            f"-token request: {e.reason}"
+        )
+    mlong = engine_m.run([dataclasses.replace(long_req)])
+    print(
+        f"meshed pool ({cap} pages × 1/{S} bytes each) serves it: "
+        f"{len(mlong[0].tokens)} tokens generated"
     )
 
 

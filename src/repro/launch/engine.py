@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import logging
 import time
 from typing import Callable
@@ -75,13 +76,23 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticCorpus
+from repro.launch.mesh import (
+    axis_size,
+    make_serve_mesh,
+    serve_cache_specs,
+    serve_param_specs,
+    serve_shardings,
+)
 from repro.launch.prefix_cache import PrefixCache
 from repro.launch.sampling import SamplingParams, sample_token
 from repro.models import attention, build_model
-from repro.models.model import ModelAPI
+from repro.models.model import ModelAPI, localize_config
+from repro.models.sharding import use_tensor_axis
 from repro.models.transformer import reset_slot
 
 PREFILL_MODES = ("chunked", "interleaved")
@@ -351,6 +362,18 @@ class ServeEngine:
         the ring buffers in place instead of copying the full cache through
         every step. The engine never re-reads a donated buffer: ``.cache``
         is rebound to the step's output before any other access.
+    mesh : optional 1-D ``jax.sharding.Mesh`` with a ``model`` axis
+        (``launch.mesh.make_serve_mesh``) — serve tensor-parallel. Attention
+        heads split over the axis; the KV pool (paged or ring) splits its
+        kv-head dim, so each shard holds its head slice of every physical
+        page while page tables stay host-side and shard-invariant; every
+        hot-path jit runs through ``shard_map``, each shard tracing the
+        single-device math on its head slice (``localize_config``) with an
+        all-gather of attention outputs before the replicated wo matmul.
+        That combine keeps sharded serving BITWISE token-identical to
+        ``mesh=None`` — which itself still traces the old single-device
+        code unchanged, so the unsharded engine remains the oracle.
+        Requires ``n_heads`` and ``n_kv_heads`` divisible by the axis size.
     paged_cache : replace the per-slot contiguous rings with ONE shared
         pool of physical pages + per-slot page tables. Decoupling logical
         sequence state from physical placement removes the
@@ -414,6 +437,7 @@ class ServeEngine:
         bucket_prefill: bool = True,
         paged_decode: bool = True,
         donate_cache: bool = True,
+        mesh: Mesh | None = None,
         paged_cache: bool = False,
         page_size: int = 16,
         num_pages: int = 0,
@@ -440,6 +464,27 @@ class ServeEngine:
         self.cfg = model.cfg
         self.model = model
         self.params = params
+        # Tensor-parallel serving: resolve the shard count and the PER-SHARD
+        # model. Inside shard_map each shard sees 1/S of the heads, so the
+        # shard-local trace is built from a localized config; a 1-shard mesh
+        # still exercises the full shard_map plumbing (useful as the
+        # any-machine identity probe) but keeps the global model.
+        self.mesh = mesh
+        self.num_shards = 1
+        self._tp_axis: str | None = None
+        serve_model = model
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis, got {mesh.axis_names}"
+                )
+            self.num_shards = axis_size(mesh, "model")
+            self._tp_axis = "model"
+            if self.num_shards > 1:
+                serve_model = build_model(
+                    localize_config(model.cfg, self.num_shards)
+                )
+        self._serve_model = serve_model
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.window = window
@@ -541,6 +586,20 @@ class ServeEngine:
             self.cache = model.init_slot_cache(
                 params, num_slots, max_seq, window=window
             )
+        # Mesh serving: commit params + cache as sharded arrays. wq/wk/wv
+        # split their head (output-feature) dim, KV pools split the kv-head
+        # axis — each shard's slice of every page — and everything else
+        # (incl. page tables / positions: host-mirrored, shard-invariant)
+        # replicates. ``serve_param_specs`` documents why wo replicates.
+        if mesh is not None:
+            self._pspecs = serve_param_specs(params)
+            self._cspecs = serve_cache_specs(self.cache)
+            self.params = jax.device_put(
+                params, serve_shardings(self._pspecs, mesh)
+            )
+            self.cache = jax.device_put(
+                self.cache, serve_shardings(self._cspecs, mesh)
+            )
         if self.prefix_disabled_reason is not None:
             logging.getLogger(__name__).warning(
                 "prefix_cache requested but disabled: %s",
@@ -572,23 +631,51 @@ class ServeEngine:
             "prefill_suffix": 0,
         }
         donate = (1,) if donate_cache else ()
+        tp_axis = self._tp_axis
+
+        def _shard(fn, n_extra):
+            """Wrap a hot-path fn ``(params, cache, *operands)`` in
+            shard_map on the serving mesh: params/cache by their serve
+            specs, every other operand replicated, (cache, logits) out.
+            Replication of the logits is real, not asserted-away — each
+            shard all-gathers the attention heads and runs the identical
+            replicated tail (``check_rep=False`` only because the rep
+            checker has no rule for the interpret-mode Pallas calls).
+            ``mesh=None`` returns fn untouched, so the single-device trace
+            stays bitwise the pre-mesh one."""
+            if mesh is None:
+                return fn
+            rep = PartitionSpec()
+            return shard_map(
+                fn, mesh=mesh,
+                in_specs=(self._pspecs, self._cspecs) + (rep,) * n_extra,
+                out_specs=(self._cspecs, rep),
+                check_rep=False,
+            )
 
         def _decode_fn(p, c, t):
             self._compiles["decode"] += 1
-            return model.decode(p, c, t, window=window)
+            with use_tensor_axis(tp_axis):
+                return serve_model.decode(p, c, t, window=window)
 
         def _prefill_fn(p, c, t, s):
             self._compiles["prefill"] += 1
-            return model.prefill_slot(p, c, t, s, window=window)
+            with use_tensor_axis(tp_axis):
+                return serve_model.prefill_slot(p, c, t, s, window=window)
 
-        self._decode = jax.jit(_decode_fn, donate_argnums=donate)
-        self._prefill = jax.jit(_prefill_fn, donate_argnums=donate)
+        self._decode = jax.jit(_shard(_decode_fn, 1), donate_argnums=donate)
+        self._prefill = jax.jit(_shard(_prefill_fn, 2), donate_argnums=donate)
         if model.prefill_slots is not None:
             def _prefill_slots_fn(p, c, t, l, s):
                 self._compiles["prefill_slots"] += 1
-                return model.prefill_slots(p, c, t, l, s, window=window)
+                with use_tensor_axis(tp_axis):
+                    return serve_model.prefill_slots(
+                        p, c, t, l, s, window=window
+                    )
 
-            self._prefill_slots = jax.jit(_prefill_slots_fn, donate_argnums=donate)
+            self._prefill_slots = jax.jit(
+                _shard(_prefill_slots_fn, 3), donate_argnums=donate
+            )
 
             # suffix-prefill entry (prefix sharing): its own compile
             # counter (cold rounds must never touch it — tests pin that)
@@ -597,13 +684,28 @@ class ServeEngine:
             # prefix_pages) triples
             def _prefill_suffix_fn(p, c, t, l, s, st, pw):
                 self._compiles["prefill_suffix"] += 1
-                return model.prefill_slots(p, c, t, l, s, starts=st,
-                                           prefix_pages=pw, window=window)
+                with use_tensor_axis(tp_axis):
+                    return serve_model.prefill_slots(
+                        p, c, t, l, s, starts=st, prefix_pages=pw,
+                        window=window,
+                    )
 
-            self._prefill_suffix = jax.jit(
-                _prefill_suffix_fn, donate_argnums=donate,
-                static_argnums=(6,),
-            )
+            if mesh is None:
+                self._prefill_suffix = jax.jit(
+                    _prefill_suffix_fn, donate_argnums=donate,
+                    static_argnums=(6,),
+                )
+            else:
+                # bind the static prefix width BEFORE the shard_map wrap —
+                # shard_map maps array operands only
+                def _suffix_entry(p, c, t, l, s, st, pw):
+                    return _shard(
+                        functools.partial(_prefill_suffix_fn, pw=pw), 4
+                    )(p, c, t, l, s, st)
+
+                self._prefill_suffix = jax.jit(
+                    _suffix_entry, donate_argnums=donate, static_argnums=(6,),
+                )
         else:
             self._prefill_slots = None
             self._prefill_suffix = None
@@ -654,6 +756,9 @@ class ServeEngine:
         self.suffix_dispatches = 0
         self.cold_dispatches = 0
         self.slot_history: dict[int, list[int]] = {}  # uid -> slots used
+        # bucket shapes already warmed, keyed by the full dispatch
+        # configuration (see ``warm``) — persists across warm() calls
+        self._warmed: set[tuple] = set()
 
     # ------------------------------------------------------------- plumbing
     def _now(self) -> float:
@@ -699,9 +804,17 @@ class ServeEngine:
         shape bucketing, many (width, length) pairs collapse onto one bucket
         shape, so only one representative per bucket is traced. Pass
         ``sampling`` when the trace will sample, so the (fixed-width)
-        batched sampler compiles here too."""
+        batched sampler compiles here too.
+
+        Dedup is keyed by the full dispatch configuration — bucket shape
+        plus the mesh shard count and whether prefix sharing is on (which
+        decides if a warm run traces the cold path alone or cold + suffix
+        rounds) — and PERSISTS across calls: re-warming an engine, or
+        warming a sharded engine after construction-time probing, skips
+        every shape already traced instead of re-running it (a sharded
+        engine dispatches only its own shard-count configuration, never
+        the single-device shapes)."""
         widths = range(1, self.num_slots + 1) if self.batch_prefill else [1]
-        seen: set[tuple[int, int]] = set()
         for p in sorted(set(prompt_lens)):
             for w in widths:
                 shape = (
@@ -709,9 +822,10 @@ class ServeEngine:
                     if self.bucket_prefill
                     else (w, p)
                 )
-                if shape in seen:
+                key = (self.num_shards, self.prefix_cache, *shape)
+                if key in self._warmed:
                     continue
-                seen.add(shape)
+                self._warmed.add(key)
                 self.run([
                     Request(uid=-1 - j, prompt=np.zeros(p, np.int32),
                             max_new_tokens=max(gen_tokens, 1),
@@ -753,6 +867,18 @@ class ServeEngine:
             return None
         occ = self.occupancy
         return {
+            "shards": self.num_shards,
+            "mesh_axes": (
+                dict(self.mesh.shape) if self.mesh is not None else None
+            ),
+            # per-shard pool fill: page tables are shard-invariant — every
+            # shard holds its kv-head slice of the same live pages — so
+            # each shard's occupancy equals the pool's. Reported per shard
+            # anyway: the equal entries ARE the invariant, and a future
+            # per-shard allocator would show skew here.
+            "occupancy": [
+                self.pool.in_use / max(self.pool.capacity, 1)
+            ] * self.num_shards,
             "page_size": self.page_size,
             "num_pages": self.num_pages,
             "allocatable_pages": self.pool.capacity,
@@ -1444,6 +1570,7 @@ def serve_continuous(
     watermark_pages: int = 0,
     prefix_cache: bool = True,
     prefix_cache_pages: int = 0,
+    num_shards: int = 0,
     sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
@@ -1453,7 +1580,9 @@ def serve_continuous(
 
     The serving CLI defaults to the PAGED cache (``--no-paged-cache``
     restores per-slot contiguous rings) — output is token-identical either
-    way; paged mode additionally reports pool occupancy and preemptions."""
+    way; paged mode additionally reports pool occupancy and preemptions.
+    ``num_shards > 0`` serves tensor-parallel on a ``model``-axis mesh over
+    that many devices (bitwise token-identical to the unsharded engine)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -1469,6 +1598,7 @@ def serve_continuous(
         bucket_prefill=bucket_prefill,
         paged_decode=paged_decode,
         donate_cache=donate_cache,
+        mesh=make_serve_mesh(num_shards) if num_shards > 0 else None,
         paged_cache=paged_cache,
         page_size=page_size,
         num_pages=num_pages,
@@ -1511,6 +1641,10 @@ def serve_continuous(
         "paged_decode": engine.paged_decode,
         "donate_cache": engine.donate_cache,
         "paged_cache": engine.paged_cache,
+        "shards": engine.num_shards,
+        "mesh_axes": (
+            dict(engine.mesh.shape) if engine.mesh is not None else None
+        ),
         "prefix_cache": engine.prefix_cache,
         "prefill_tokens": engine.prefill_tokens,
         "sampling": None if sampling is None else dataclasses.asdict(sampling),
@@ -1534,6 +1668,8 @@ def serve_continuous(
             f"{ps['allocatable_pages']} pages, "
             f"{ps['preemptions']} preemptions"
         )
+        if engine.mesh is not None:
+            pool_line += f", {ps['shards']}-shard mesh"
         if engine.prefix_cache:
             pool_line += (
                 f", prefix hit {ps['prefix_hit_rate']:.0%} "

@@ -234,6 +234,77 @@ def cache_pspec(cache_shapes: Pytree, cfg: ModelConfig, mesh: Mesh, batch: int) 
     return jax.tree_util.tree_map_with_path(spec_fn, cache_shapes)
 
 
+# ------------------------------------------------------------- serving (TP)
+# The continuous-batching engine runs tensor-parallel over a 1-D ``model``
+# mesh: attention heads split across shards, the paged KV pool holds each
+# shard's kv-head slice of every page (pages are addressed (shard, page) —
+# same page id on every shard, different head slice), and page tables stay
+# host-side and shard-invariant. Everything outside attention (embeddings,
+# norms, FFN, logits) is replicated: each shard redoes that math on identical
+# inputs, which keeps the shard-local trace equal to the single-device trace
+# on its head slice — the property the engine's token-identity tests pin.
+
+_SERVE_COL = re.compile(r"(attn|xattn)/(wq|wk|wv)$")   # column-parallel
+
+
+def make_serve_mesh(num_shards: int) -> Mesh:
+    """1-D tensor-parallel serving mesh over the ``model`` axis."""
+    devs = jax.devices()
+    if num_shards < 1 or num_shards > len(devs):
+        raise ValueError(
+            f"serve mesh wants {num_shards} device(s), have {len(devs)}; on "
+            "CPU set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before the first jax call"
+        )
+    return Mesh(np.asarray(devs[:num_shards]), ("model",))
+
+
+def serve_param_specs(params: Pytree) -> Pytree:
+    """Attention-TP specs for serving: wq/wk/wv split their output-feature
+    (head) dim over ``model``; every other leaf — including wo — replicates.
+    wo stays replicated on purpose: the per-shard head slices all-gather
+    back to the full pre-wo activation (``sharding.gather_heads``) and every
+    shard runs the identical full out-projection, which keeps sharded
+    serving bitwise token-identical to the single-device engine. The
+    row-parallel wo + psum alternative rounds partial sums differently and
+    flips near-tied argmaxes in bf16."""
+
+    def spec(path, leaf):
+        p = _leaf_path(path)
+        nd = getattr(leaf, "ndim", 0)
+        if _SERVE_COL.search(p) and nd >= 1:
+            return P(*([None] * (nd - 1)), "model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def serve_cache_specs(cache: Pytree) -> Pytree:
+    """KV caches split the kv-head axis — dim -2 in both the paged pool
+    (L, P, page, Hkv, hd) and ring (L, B, C, Hkv, hd) layouts — over
+    ``model``; positions and page tables are shard-invariant (replicated)."""
+
+    def spec(path, leaf):
+        name = _leaf_path(path)
+        nd = getattr(leaf, "ndim", 0)
+        if re.search(r"(^|/)(k|v)$", name) and nd >= 4:
+            axes: list = [None] * nd
+            axes[-2] = "model"
+            return P(*axes)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def serve_shardings(pspecs: Pytree, mesh: Mesh) -> Pytree:
+    """NamedShardings for a pytree of PartitionSpecs (P is a tuple subclass,
+    so plain tree_map would flatten it — pin it as a leaf)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
 # ---------------------------------------------------------------- constants
 # TPU v5e per chip
 PEAK_FLOPS = 197e12          # bf16

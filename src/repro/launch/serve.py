@@ -20,6 +20,10 @@ indexed in a radix trie and later requests with a common prefix alias the
 same physical pages, prefilling only their uncached suffix — same tokens,
 a fraction of the prefill FLOPs. Slots default to ring-equivalent logical
 width; --long-requests widens every slot's page table to the whole pool.
+Continuous mode also serves TENSOR-PARALLEL (--mesh N): attention heads and
+the KV pool's kv-head slices split over an N-device ``model`` mesh through
+``shard_map``, bitwise token-identical to the single-device engine; on CPU
+pair it with --num-devices N (host-device override, set before jax inits).
 
     # oracle (single fixed batch)
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
@@ -28,11 +32,45 @@ width; --long-requests widens every slot's page table to the whole pool.
     # continuous batching (slot pool + request queue)
     PYTHONPATH=src python -m repro.launch.serve --continuous \
         --arch stablelm-1.6b --slots 4 --requests 8 --stagger 0.05
+
+    # tensor-parallel serving on a 2-shard CPU mesh
+    PYTHONPATH=src python -m repro.launch.serve --continuous \
+        --arch stablelm-1.6b --mesh 2 --num-devices 2
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+
+def _apply_num_devices_flag() -> None:
+    """Honor ``--num-devices N`` BEFORE the jax import below — jax locks the
+    host device count at first init (the constraint dryrun.py documents), so
+    argparse in main() would see it too late. Argparse still owns the flag's
+    help text and value; this peek only mirrors it into XLA_FLAGS."""
+    argv = sys.argv[1:]
+    n = 0
+    for i, a in enumerate(argv):
+        if a == "--num-devices" and i + 1 < len(argv):
+            try:
+                n = int(argv[i + 1])
+            except ValueError:
+                return  # argparse will report the bad value
+        elif a.startswith("--num-devices="):
+            try:
+                n = int(a.split("=", 1)[1])
+            except ValueError:
+                return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 0 and "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+_apply_num_devices_flag()
 
 import jax
 import jax.numpy as jnp
@@ -209,6 +247,15 @@ def main(argv=None):
                     "entries are LRU-evicted under pool pressure")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="[continuous] serve tensor-parallel over this many "
+                    "model-axis shards (0 = single device); n_heads and "
+                    "n_kv_heads must divide by it; output is bitwise "
+                    "token-identical to the unsharded engine")
+    ap.add_argument("--num-devices", type=int, default=0,
+                    help="force this many host platform devices "
+                    "(--xla_force_host_platform_device_count, applied "
+                    "before jax initializes — CPU mesh simulation)")
     # sampling (0 temperature = greedy; per-request streams derive from
     # --seed + uid so every request samples independently)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -218,6 +265,16 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="[continuous] nucleus sampling mass (1.0 = off)")
     args = ap.parse_args(argv)
+    if args.mesh > 0:
+        if not args.continuous:
+            ap.error("--mesh requires --continuous (tensor-parallel serving "
+                     "is an engine path)")
+        if len(jax.devices()) < args.mesh:
+            ap.error(
+                f"--mesh {args.mesh} needs {args.mesh} devices, found "
+                f"{len(jax.devices())}; pass --num-devices {args.mesh} "
+                "(CPU host-device override) or run on a larger host"
+            )
     if args.temperature <= 0 and (args.top_k > 0 or args.top_p < 1.0):
         ap.error("--top-k/--top-p require --temperature > 0 "
                  "(temperature 0 is greedy decoding)")
@@ -273,6 +330,7 @@ def main(argv=None):
             watermark_pages=args.watermark_pages,
             prefix_cache=args.prefix_cache is not False,  # None = default on
             prefix_cache_pages=args.prefix_cache_pages,
+            num_shards=args.mesh,
             sampling=sampling,
             seed=args.seed, stagger=args.stagger,
         )

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope, he_init
-from repro.models.sharding import constrain
+from repro.models.sharding import constrain, gather_heads
 
 Params = Any
 
@@ -191,7 +191,7 @@ def attend_full(
             q, k, v, causal=causal, window=window, use_kernel=True
         )
         out = constrain(out.reshape(b, s, -1), "batch", "seq", "heads")
-        return out @ params["wo"]
+        return gather_heads(out) @ params["wo"]
 
     # query-side positions (kv_pos is the key side — different length under
     # cross-attention, so it must never stand in for the query positions)
@@ -212,7 +212,7 @@ def attend_full(
         attn = attn.swapaxes(0, 1).reshape(b, s, -1)
 
     attn = constrain(attn, "batch", "seq", "heads")
-    return attn @ params["wo"]
+    return gather_heads(attn) @ params["wo"]
 
 
 # ------------------------------------------------------------------- caches
@@ -400,7 +400,7 @@ def decode_attend(
         scores = jnp.where(mask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out = _gqa_out(probs, new_v, x.dtype)  # (B,1,H*hd)
-    out = out @ params["wo"]
+    out = gather_heads(out) @ params["wo"]
     new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
     return out, new_cache
 
@@ -527,7 +527,7 @@ def decode_attend_paged(
         scores = jnp.where(mask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out = _gqa_out(probs, g_v, x.dtype)  # (B,1,H*hd)
-    out = out @ params["wo"]
+    out = gather_heads(out) @ params["wo"]
     new_cache = {"k": new_k, "v": new_v, "pos": pos + 1, "table": table}
     return out, new_cache
 

@@ -208,6 +208,28 @@ def _audio_api(cfg: ModelConfig) -> ModelAPI:
     return ModelAPI(cfg, init, loss, forward, init_cache, decode, prefill)
 
 
+def localize_config(cfg: ModelConfig, shards: int) -> ModelConfig:
+    """Per-shard view of a tensor-parallel-served config.
+
+    Inside ``shard_map`` each shard sees its head slice of the attention
+    weights and KV pages; dividing the head counts (and pinning head_dim,
+    which would otherwise re-derive from the unchanged d_model) makes the
+    shard-local trace exactly the single-device math on that slice."""
+    if shards == 1:
+        return cfg
+    if cfg.n_heads % shards or cfg.n_kv_heads % shards:
+        raise ValueError(
+            f"{cfg.name}: n_heads={cfg.n_heads} / n_kv_heads={cfg.n_kv_heads}"
+            f" must both divide by the model-axis size {shards}"
+        )
+    return dataclasses.replace(
+        cfg,
+        n_heads=cfg.n_heads // shards,
+        n_kv_heads=cfg.n_kv_heads // shards,
+        head_dim=cfg.resolved_head_dim,
+    )
+
+
 def build_model(cfg: ModelConfig) -> ModelAPI:
     if cfg.arch_type == "dense":
         return _transformer_api(cfg, DENSE_FFN)

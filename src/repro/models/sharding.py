@@ -47,6 +47,42 @@ def use_rules(rules: ShardingRules | None):
         _state.rules = prev
 
 
+def tensor_axis() -> str | None:
+    return getattr(_state, "tensor_axis", None)
+
+
+@contextlib.contextmanager
+def use_tensor_axis(name: str | None):
+    """Activate a named all-gather axis for tensor-parallel attention.
+
+    The serving engine traces the model inside ``shard_map`` with attention
+    heads split over the mesh's ``model`` axis; each shard computes its
+    contiguous head-slice of the pre-``wo`` attention output (per-head math
+    is independent, so the slice is bitwise what the single device computes
+    for those heads). ``gather_heads`` reconstructs the full activation by
+    all-gather along the feature dim, and the replicated ``wo`` matmul that
+    follows is then the identical full matmul on every shard — which is what
+    makes sharded serving BITWISE token-identical to the single-device
+    engine (a row-parallel wo + psum would round partial sums differently
+    and flip near-tied argmaxes in bf16). With no active axis the hook is an
+    identity, so ``mesh=None`` traces are bitwise-unchanged."""
+    prev = getattr(_state, "tensor_axis", None)
+    _state.tensor_axis = name
+    try:
+        yield
+    finally:
+        _state.tensor_axis = prev
+
+
+def gather_heads(x: jax.Array) -> jax.Array:
+    """All-gather a per-shard head-slice activation (..., H_local*hd) into
+    the full (..., H*hd) over the active tensor axis; identity when off."""
+    ax = tensor_axis()
+    if ax is None:
+        return x
+    return jax.lax.all_gather(x, ax, axis=x.ndim - 1, tiled=True)
+
+
 def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     """Apply a sharding constraint if rules are active; else identity."""
     rules = active_rules()

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
+from repro.models import sharding
 from repro.models.common import (
     default_q_chunk,
     embed_tokens,
@@ -459,7 +460,9 @@ def prefill_slots(
                 q.reshape(n, s, cfg.n_kv_heads, g, hd), k, v, ck, cv,
                 t_rows, starts, prefix_width=w_pfx, use_kernel=True,
             )
-            a = o.reshape(n, s, -1).astype(a.dtype) @ lp["attn"]["wo"]
+            a = sharding.gather_heads(
+                o.reshape(n, s, -1).astype(a.dtype)
+            ) @ lp["attn"]["wo"]
         else:
             # gather the prefix pages once and attend over [prefix | suffix]
             # — the displaced production path, kept as the kernel's oracle.
