@@ -5,10 +5,12 @@ The serve-bench smoke run APPENDS one schema-2 entry per CI run to
 into a markdown table so the perf history is readable at a glance —
 tokens/sec, TTFT p95, pool occupancy, preemptions, the prefix-cache
 columns (hit rate, prefilled-token savings, CoW splits, suffix-dispatch
-count, steady warm-round seconds) added with prefix sharing, and the
+count, steady warm-round seconds) added with prefix sharing, the
 tensor-parallel columns (shard count, sharded tokens/sec) added with
-mesh-sharded serving. Entries predating a column render as "—". In CI it
-lands on the job's step summary page.
+mesh-sharded serving, and the fault-tolerance columns (migrations,
+migrated requests, sheds, per-replica occupancy, routed tokens/sec) added
+with the multi-replica router. Entries predating a column render as "—".
+In CI it lands on the job's step summary page.
 
 Output goes to ``$GITHUB_STEP_SUMMARY`` when set (the GitHub Actions
 step-summary file), else stdout — so the same invocation works locally:
@@ -47,6 +49,11 @@ COLUMNS = (
     ("CoW", "prefix_cow_copies", "{}"),
     ("suffix", "prefix_suffix_dispatches", "{}"),
     ("suffix round (s)", "suffix_round_s", "{:.2f}"),
+    ("migrations", "router_migrations", "{}"),
+    ("migrated", "router_migrated_requests", "{}"),
+    ("shed", "router_shed_requests", "{}"),
+    ("replica occ", "router_replica_occupancy", "{}"),
+    ("tok/s routed", "router_tokens_per_second", "{:.1f}"),
 )
 
 
@@ -56,6 +63,8 @@ def _cell(entry: dict, key: str, fmt: str) -> str:
         return "—"
     if key == "timestamp":
         return str(val).replace("+00:00", "Z")
+    if key == "router_replica_occupancy" and isinstance(val, list):
+        return "/".join(f"{v:.0%}" for v in val)
     try:
         return fmt.format(val)
     except (ValueError, TypeError):

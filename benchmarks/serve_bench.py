@@ -42,6 +42,14 @@ forced host devices) the probe runs in-process on 4 shards.
 ``--sharded-probe`` runs just this probe and prints its JSON — the CI
 sharded job's entry point.
 
+Burst mode also runs the ROUTER probe (``bench_router``): the burst trace
+through a 2-replica fault-tolerant ``ServeRouter`` with replica 0 KILLED
+mid-decode, asserting zero dropped requests and greedy+sampled token
+identity against a fault-free single engine, and reporting the failover
+round-trip (migrations, migrated requests, per-replica occupancy, sheds,
+retries). ``--router-probe`` runs just this probe — the CI chaos smoke
+job's entry point.
+
 ``--smoke`` is the CI-sized burst run. Besides the usual
 ``benchmarks/results.json`` entry it APPENDS a timestamped entry to
 ``BENCH_serve.json`` at the repo root — the perf trajectory future PRs
@@ -399,6 +407,104 @@ def _sharded_probe(args, shards: int) -> dict:
     return {"shards": shards, **out}
 
 
+def bench_router(args) -> dict:
+    """The fault-tolerance probe: the burst trace through a 2-replica
+    ``ServeRouter`` with replica 0 KILLED mid-decode, vs. a fault-free
+    single engine — greedy AND sampled.
+
+    Asserted here (CI runs this under --router-probe): zero dropped
+    requests (every submitted uid completes), token streams BITWISE
+    identical to the fault-free run in both decode modes, and the kill
+    actually landed mid-flight (``migrated_requests`` > 0 — a kill that
+    migrates nothing proves nothing). The reported numbers are the
+    failover round-trip the trajectory tracks: migrations, migrated
+    requests, per-replica occupancy, sheds, retries, and merged
+    throughput under the fault."""
+    from repro.launch.router import FaultPlan, ServeRouter
+    from repro.launch.sampling import SamplingParams
+    import dataclasses
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_seq = max(args.prompt_lens) + args.gen
+    engine_kw = dict(
+        num_slots=args.slots, max_seq=max_seq, prefill="chunked",
+        paged_cache=True, page_size=args.page_size, prefix_cache=True,
+        seed=args.seed,
+    )
+
+    def trace(sampling):
+        reqs = burst_trace(
+            cfg, n_requests=args.requests, burst_size=max(args.burst, 1),
+            gap=0.0, prompt_lens=tuple(args.prompt_lens),
+            gen_tokens=args.gen, seed=args.seed,
+        )
+        if sampling is not None:
+            for r in reqs:
+                r.sampling = dataclasses.replace(
+                    sampling, seed=sampling.seed + r.uid
+                )
+        return reqs
+
+    out = {}
+    for label, sampling in (
+        ("greedy", None),
+        ("sampled", SamplingParams(
+            temperature=0.8, top_p=0.95, seed=args.seed + 17,
+        )),
+    ):
+        baseline = ServeEngine(model, params, **engine_kw)
+        baseline.warm(args.prompt_lens, sampling=sampling)
+        base = {o.uid: o.tokens for o in baseline.run(trace(sampling))}
+
+        router = ServeRouter(
+            model, params, replicas=2,
+            fault_plan=FaultPlan(kill={0: args.kill_step}), **engine_kw,
+        )
+        router.warm(args.prompt_lens, sampling=sampling)
+        t0 = time.time()
+        outs = router.run(trace(sampling))
+        wall = time.time() - t0
+        got = {o.uid: o.tokens for o in outs}
+        rs = router.router_stats
+
+        assert len(outs) == args.requests and not router.shed_errors, (
+            f"[{label}] dropped requests under failover: "
+            f"{len(outs)}/{args.requests} completed, "
+            f"shed {[(e.uid, e.reason) for e in router.shed_errors]}"
+        )
+        assert got == base, (
+            f"[{label}] failover changed output tokens"
+        )
+        assert rs["migrated_requests"] > 0, (
+            f"[{label}] kill at step {args.kill_step} migrated nothing — "
+            "the fault missed the in-flight window"
+        )
+        total = sum(len(t) for t in got.values())
+        out[label] = {
+            "wall_seconds": wall,
+            "tokens_per_second": total / max(wall, 1e-9),
+            "completed": len(outs),
+            "migrations": rs["migrations"],
+            "migrated_requests": rs["migrated_requests"],
+            "shed_requests": rs["shed_requests"],
+            "retries": rs["retries"],
+            "occupancy": rs["occupancy"],
+            "replica_requests": rs["replica_requests"],
+            "replica_steps": rs["replica_steps"],
+            "healthy": rs["healthy"],
+            "affinity_routed": rs["affinity_routed"],
+            "balance_routed": rs["balance_routed"],
+        }
+    return {
+        "replicas": 2,
+        "kill_step": args.kill_step,
+        "token_identical": True,  # asserted above, recorded for the seed
+        **out,
+    }
+
+
 _SHARDED_PROBE_MARK = "SHARDED_PROBE_JSON "
 
 
@@ -544,6 +650,7 @@ def bench_burst(args) -> dict:
         "decode_occupancy": bench_decode_occupancy(slots=args.slots),
         "shared_prefix": bench_shared_prefix(args),
         "sharded": bench_sharded(args),
+        "router": bench_router(args),
         **out,
     }
 
@@ -563,6 +670,7 @@ def write_bench_seed(res: dict) -> None:
     occ = res["decode_occupancy"]
     sp = res["shared_prefix"]
     sh = res["sharded"]
+    rt = res["router"]
     entry = {
         "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"
@@ -613,6 +721,18 @@ def write_bench_seed(res: dict) -> None:
         ],
         "sharded_occupancy_max": sh["sharded"]["occupancy_max"],
         "sharded_prefill_compiles": sh["sharded"]["prefill_compiles"],
+        "router_replicas": rt["replicas"],
+        "router_kill_step": rt["kill_step"],
+        "router_token_identical": rt["token_identical"],
+        "router_migrations": rt["greedy"]["migrations"],
+        "router_migrated_requests": rt["greedy"]["migrated_requests"],
+        "router_shed_requests": rt["greedy"]["shed_requests"],
+        "router_retries": rt["greedy"]["retries"],
+        "router_replica_occupancy": rt["greedy"]["occupancy"],
+        "router_tokens_per_second": rt["greedy"]["tokens_per_second"],
+        "router_tokens_per_second_sampled": rt["sampled"][
+            "tokens_per_second"
+        ],
     }
     trajectory = {"schema": 2, "entries": []}
     if os.path.exists(BENCH_SEED_PATH):
@@ -690,6 +810,15 @@ def _parser():
                     help="run ONLY the sharded-vs-unsharded probe and "
                     "print its JSON (the CI sharded job entry point; also "
                     "used internally by the one-device re-exec fallback)")
+    ap.add_argument("--router-probe", action="store_true",
+                    help="run ONLY the fault-tolerant router probe (2 "
+                    "replicas, one injected kill mid-decode; asserts zero "
+                    "dropped requests and greedy+sampled token identity "
+                    "vs. a fault-free engine) and print its JSON — the CI "
+                    "chaos smoke job entry point")
+    ap.add_argument("--kill-step", type=int, default=3,
+                    help="[router probe] kill replica 0 at its own step "
+                    "number (default lands mid-decode for smoke sizes)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized burst run: 8 requests in bursts of 4 "
                     "through 4 slots, mixed prompt lengths; writes the "
@@ -711,6 +840,21 @@ def run(argv: list[str] | None = None):
     if args.sharded_probe:
         res = bench_sharded(args)
         print(_SHARDED_PROBE_MARK + json.dumps(res))
+        return res
+
+    if args.router_probe:
+        res = bench_router(args)
+        g = res["greedy"]
+        emit(
+            "serve_router_failover",
+            g["migrated_requests"],
+            f"2 replicas, kill@{res['kill_step']}: {g['completed']} reqs "
+            f"completed, {g['migrations']} migration "
+            f"({g['migrated_requests']} reqs moved), "
+            f"{g['shed_requests']} shed — greedy+sampled tokens identical "
+            "to fault-free engine",
+        )
+        print("ROUTER_PROBE_JSON " + json.dumps(res))
         return res
 
     if args.burst > 0:
@@ -770,6 +914,18 @@ def run(argv: list[str] | None = None):
             f"per-shard occ {sh['sharded']['occupancy_max']:.0%}, "
             f"{sh['sharded']['prefill_compiles']} prefill compiles — "
             "tokens bitwise identical",
+        )
+        rt = res["router"]
+        emit(
+            "serve_router_failover",
+            rt["greedy"]["migrated_requests"],
+            f"2 replicas, kill@{rt['kill_step']}: "
+            f"{rt['greedy']['completed']} reqs completed, "
+            f"{rt['greedy']['migrations']} migration "
+            f"({rt['greedy']['migrated_requests']} reqs moved), "
+            f"{rt['greedy']['shed_requests']} shed, occ "
+            f"{['%.0f%%' % (100 * o) for o in rt['greedy']['occupancy']]} — "
+            "greedy+sampled tokens identical to fault-free engine",
         )
         save_results("serve_bench_burst", res)
         if args.smoke:

@@ -264,12 +264,24 @@ class _ResumeState:
 class Request:
     """One generation request. ``arrival_time`` is seconds relative to the
     engine clock; the engine never admits a request before it arrives.
-    ``sampling=None`` (or temperature 0) decodes greedily."""
+    ``sampling=None`` (or temperature 0) decodes greedily.
+
+    ``priority`` orders preemption, not admission: when the paged pool
+    runs dry the LOWEST-priority live slot is preempted first (ties break
+    youngest-first, the pre-SLO behavior — priority 0 everywhere
+    reproduces it exactly). Higher numbers are more important.
+    ``deadline_s`` is an SLO relative to ``arrival_time``: a request still
+    QUEUED past its deadline is shed with a structured
+    ``AdmissionError("deadline_exceeded")`` record instead of being served
+    uselessly late (and instead of wedging admission behind it). A request
+    already decoding is never deadline-shed — its tokens are real work."""
     uid: int
     prompt: np.ndarray            # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival_time: float = 0.0
     sampling: SamplingParams | None = None
+    priority: int = 0
+    deadline_s: float | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -283,7 +295,7 @@ class RequestOutput:
     prompt: list[int]
     tokens: list[int]             # generated ids (greedy or sampled), <= max_new
     slot: int                     # slot the request was served from
-    finish_reason: str            # "eos" | "length"
+    finish_reason: str            # "eos" | "length" | "timeout"
     arrival_time: float
     admit_time: float
     first_token_time: float
@@ -420,6 +432,15 @@ class ServeEngine:
     seed : engine-level sampling seed; requests without an explicit
         ``SamplingParams.seed`` draw from PRNGKey(seed) folded with their
         uid, so slot reuse never reuses a stream.
+    max_wall_s : per-request wall-clock watchdog (0 = off). A live slot
+        older than this (measured from its ORIGINAL admission — preemption
+        round trips don't reset it) is retired with
+        ``finish_reason="timeout"`` and whatever tokens it generated, so a
+        request whose slot stops advancing (a stalled dispatch under fault
+        injection, a runaway generation) can never wedge ``run()`` forever.
+        Timed-out prompt pages are freed WITHOUT being published to the
+        prefix index (a mid-prefill timeout may hold partially written
+        pages).
     time_fn : monotonic clock; injectable for deterministic tests.
     """
 
@@ -448,6 +469,7 @@ class ServeEngine:
         prefix_cache_pages: int = 0,
         eos_id: int | None = None,
         seed: int = 0,
+        max_wall_s: float = 0.0,
         time_fn: Callable[[], float] | None = None,
     ):
         if model.init_slot_cache is None or model.prefill_slot is None:
@@ -499,12 +521,27 @@ class ServeEngine:
         self.donate_cache = donate_cache
         self.eos_id = eos_id
         self.seed = seed
+        self.max_wall_s = max_wall_s
         self._time_fn = time_fn or time.monotonic
         self._t0 = self._time_fn()
 
         self.paged_cache = paged_cache
         self.preemptions = 0
         self.occupancy: list[float] = []  # pool fill fraction per decode step
+        # SLO bookkeeping (both cache modes): deadline-expired queued
+        # requests are recorded here as structured AdmissionErrors instead
+        # of being raised (shedding happens inside the scheduler, where
+        # there is no caller to catch); watchdog retirements count below.
+        self.shed: list[AdmissionError] = []
+        self.shed_requests = 0
+        self.timeouts = 0
+        # preemption-resume records + admission sequence live in BOTH cache
+        # modes: a router may migrate another engine's in-flight requests
+        # into this one (``import_inflight``), and the re-prefill resume
+        # path is layout-independent. Only paged mode CREATES records
+        # itself (ring mode never preempts).
+        self._resume: dict[int, _ResumeState] = {}
+        self._admit_seq = 0
         if paged_cache:
             if model.init_paged_cache is None or model.prefill_slots is None:
                 raise ValueError(
@@ -546,8 +583,6 @@ class ServeEngine:
             self._table_np = np.zeros((num_slots, self.table_width), np.int32)
             self._table_dirty = False
             self._slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
-            self._resume: dict[int, _ResumeState] = {}
-            self._admit_seq = 0
             self.cache = model.init_paged_cache(
                 params, num_slots, num_pages, page_size, self.table_width,
                 window=window,
@@ -778,6 +813,9 @@ class ServeEngine:
         self.steps = 0
         self.prefill_dispatches = 0
         self.preemptions = 0
+        self.shed.clear()
+        self.shed_requests = 0
+        self.timeouts = 0
         self.occupancy = []
         self.prefix_hit_pages = 0
         self.prefix_hit_tokens = 0
@@ -885,6 +923,8 @@ class ServeEngine:
             "pages_in_use": self.pool.in_use,
             "peak_pages_in_use": self.pool.peak_in_use,
             "preemptions": self.preemptions,
+            "shed_requests": self.shed_requests,
+            "timeouts": self.timeouts,
             "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             "occupancy_max": float(np.max(occ)) if occ else 0.0,
             "prefix_cache": self.prefix_cache,
@@ -925,42 +965,98 @@ class ServeEngine:
         """Earliest arrival among waiting requests, or None."""
         return min((r.arrival_time for r in self.waiting), default=None)
 
-    def submit(self, req: Request) -> None:
-        """Enqueue a request, or reject it with a structured
-        ``AdmissionError`` if the engine could NEVER serve it. Rejection
-        happens HERE, not mid-``_admit``: a doomed request must not enter
-        the queue, where it would wedge a scheduling round at the head of
-        FIFO admission. A rejected submit leaves the engine fully usable."""
+    def prefix_probe(self, tokens) -> int:
+        """Predicted cached-prefix TOKENS for a prompt: a READ-ONLY walk
+        of the radix index — no LRU touch, no hit/lookup counting, no
+        page refs taken. The trie's page-chunk keys make hit prediction
+        O(prompt/page_size) dict lookups, so a router can score every
+        replica's affinity for a prompt without prefilling anything (and
+        without the probe itself perturbing eviction order or the honest
+        ``prefix_hit_rate``). 0 when prefix sharing is off."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.probe(tokens) * self.page_size
+
+    def capacity_shortfall(self, req: Request) -> int:
+        """Tokens by which ``req`` exceeds this engine's STATIC capacity
+        (0 = servable). Non-mutating — a router probes every replica with
+        this before rejecting a request anywhere, so the best-fit shortfall
+        it reports is the true system-wide one, not one pool's."""
         need = len(req.prompt) + req.max_new_tokens
+        if self.window != 0:
+            return 0  # the sliding-window ring wraps; any length fits
         if self.paged_cache:
             # Windowless sequences are bounded by BOTH limits: the logical
             # table (cap tokens) and the physical pool (allocatable pages —
             # a tight pool may be smaller than the table, and a request
             # whose pages can never all be resident would otherwise sit at
             # the queue head forever while alloc keeps returning None).
-            need_pages = -(-need // self.page_size)
-            if self.window == 0 and (
-                need > self.cap or need_pages > self.pool.capacity
-            ):
+            limit = min(self.cap, self.pool.capacity * self.page_size)
+            return max(0, need - limit)
+        return max(0, need - self.max_seq)
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request, or reject it with a structured
+        ``AdmissionError`` if the engine could NEVER serve it. Rejection
+        happens HERE, not mid-``_admit``: a doomed request must not enter
+        the queue, where it would wedge a scheduling round at the head of
+        FIFO admission. A rejected submit leaves the engine fully usable."""
+        short = self.capacity_shortfall(req)
+        if short > 0:
+            if self.paged_cache:
                 raise AdmissionError(
                     req.uid, "exceeds_pool",
                     f"request {req.uid}: prompt {len(req.prompt)} + gen "
-                    f"{req.max_new_tokens} exceeds pool capacity "
+                    f"{req.max_new_tokens} exceeds pool capacity by {short} "
+                    f"tokens "
                     f"({min(self.cap, self.pool.capacity * self.page_size)} "
                     f"tokens: table {self.table_width} pages × "
                     f"{self.page_size}, pool {self.pool.capacity} "
                     "allocatable pages)",
                 )
-        elif self.window == 0 and need > self.max_seq:
             raise AdmissionError(
                 req.uid, "exceeds_max_seq",
                 f"request {req.uid}: prompt {len(req.prompt)} + gen "
-                f"{req.max_new_tokens} exceeds max_seq {self.max_seq} "
+                f"{req.max_new_tokens} exceeds max_seq {self.max_seq} by "
+                f"{short} tokens "
                 "(full-attention ring would overwrite live context)",
             )
         self.waiting.append(req)
 
     # ------------------------------------------------------------ scheduling
+    def _shed_expired(self, now: float) -> None:
+        """Shed QUEUED requests whose deadline has passed, recording a
+        structured ``AdmissionError("deadline_exceeded")`` per shed instead
+        of raising (shedding happens inside the scheduler — there is no
+        submit caller to catch). Serving an already-expired request wastes
+        slots and, worse, an unservable-but-expired head would sit in front
+        of FIFO admission forever. Mid-stream requests (a preemption-resume
+        record with generated tokens — the client has already received
+        output) are exempt: their remaining tokens are real work."""
+        if not any(r.deadline_s is not None for r in self.waiting):
+            return
+        kept: collections.deque[Request] = collections.deque()
+        while self.waiting:
+            req = self.waiting.popleft()
+            resume = self._resume.get(req.uid)
+            mid_stream = resume is not None and bool(resume.generated)
+            if (
+                req.deadline_s is not None
+                and not mid_stream
+                and now - req.arrival_time > req.deadline_s
+            ):
+                self._resume.pop(req.uid, None)
+                self.shed.append(AdmissionError(
+                    req.uid, "deadline_exceeded",
+                    f"request {req.uid}: queued {now - req.arrival_time:.3f}s"
+                    f" past arrival, deadline was {req.deadline_s:.3f}s; "
+                    "shed unserved",
+                ))
+                self.shed_requests += 1
+            else:
+                kept.append(req)
+        self.waiting = kept
+
     def _greedy(self, logits_row) -> int:
         return int(jnp.argmax(logits_row[: self.cfg.vocab_size]))
 
@@ -1000,6 +1096,7 @@ class ServeEngine:
         watermark; the request waits for retirements to free pages. The
         watermark is waived when no other slot is live, so the queue can
         always make progress."""
+        self._shed_expired(now)
         while True:
             free = [i for i, s in enumerate(self.slots) if s is None]
             claimed: list[int] = []
@@ -1007,9 +1104,7 @@ class ServeEngine:
                 req = self.waiting[0]
                 if respect_arrivals and req.arrival_time > now:
                     break
-                resume = (
-                    self._resume.get(req.uid) if self.paged_cache else None
-                )
+                resume = self._resume.get(req.uid)
                 feed = req.prompt
                 if resume is not None and resume.generated:
                     feed = np.concatenate([
@@ -1069,9 +1164,9 @@ class ServeEngine:
                     feed=feed,
                     prefix_len=suffix_start,
                 )
+                self._admit_seq += 1
+                slot.seq = self._admit_seq
                 if self.paged_cache:
-                    self._admit_seq += 1
-                    slot.seq = self._admit_seq
                     self._table_np[i, :] = 0
                     if self.prefill_mode == "chunked":
                         pages = list(hits)
@@ -1107,13 +1202,17 @@ class ServeEngine:
                     else:
                         self._slot_pages[i] = []
                     self._table_dirty = True
-                    if resume is not None:
-                        self._resume.pop(req.uid)
-                        slot.generated = list(resume.generated)
-                        slot.key = resume.key
-                        slot.first_token_time = resume.first_token_time
-                        slot.admit_time = resume.admit_time
-                        slot.resumed = bool(resume.generated)
+                if resume is not None:
+                    # resume restoration is cache-layout independent: the
+                    # re-prefill of prompt + generated[:-1] (the feed built
+                    # above) works over rings and page tables alike, so a
+                    # router may migrate paged-engine state into any engine
+                    self._resume.pop(req.uid)
+                    slot.generated = list(resume.generated)
+                    slot.key = resume.key
+                    slot.first_token_time = resume.first_token_time
+                    slot.admit_time = resume.admit_time
+                    slot.resumed = bool(resume.generated)
                 self.slot_history.setdefault(req.uid, []).append(i)
                 self.slots[i] = slot
                 if self.prefill_mode == "chunked":
@@ -1321,6 +1420,47 @@ class ServeEngine:
             self._table_np[i, :] = 0
             self._table_dirty = True
 
+    def _retire_timeout(self, i: int, slot: _Slot) -> None:
+        """Watchdog retirement: the slot exceeded ``max_wall_s`` of wall
+        clock since its ORIGINAL admission. It leaves with a structured
+        ``finish_reason="timeout"`` result carrying whatever it generated,
+        so callers distinguish a timed-out stream from a complete one.
+        Pages are freed WITHOUT publishing to the prefix index — a
+        mid-prefill (interleaved) timeout may hold a partially written
+        final page, which must never be aliased by another request."""
+        self.timeouts += 1
+        self.finished.append(
+            RequestOutput(
+                uid=slot.req.uid,
+                prompt=slot.req.prompt.tolist(),
+                tokens=list(slot.generated),
+                slot=i,
+                finish_reason="timeout",
+                arrival_time=slot.req.arrival_time,
+                admit_time=slot.admit_time,
+                first_token_time=slot.first_token_time,
+                finish_time=self._now(),
+            )
+        )
+        self.slots[i] = None
+        if self.paged_cache:
+            self.pool.free(self._slot_pages[i])
+            self._slot_pages[i] = []
+            self._table_np[i, :] = 0
+            self._table_dirty = True
+
+    def _watchdog(self) -> None:
+        """Per-request wall-clock guard (``max_wall_s``): retire any live
+        slot older than the budget. Runs at the top of every engine step,
+        so even a step loop whose slots never advance (a stalled dispatch
+        under fault injection) keeps shedding rather than hanging."""
+        if self.max_wall_s <= 0:
+            return
+        now = self._now()
+        for i, slot in enumerate(self.slots):
+            if slot is not None and now - slot.admit_time > self.max_wall_s:
+                self._retire_timeout(i, slot)
+
     # ----------------------------------------------------------- paged pool
     def _sync_table(self) -> None:
         """Push the host page-table mirror to the device before a dispatch.
@@ -1331,10 +1471,15 @@ class ServeEngine:
             self.cache = {**self.cache, "table": jnp.asarray(self._table_np)}
             self._table_dirty = False
 
-    def _youngest_live(self) -> int:
-        return max(
+    def _preempt_victim(self) -> int:
+        """SLO-aware preemption order: the LOWEST-priority live slot goes
+        first; within a priority tier, the YOUNGEST (max admission seq) —
+        stalling the most recently admitted work keeps the oldest requests
+        flowing, the recency order vLLM uses. All-default-priority traffic
+        reproduces the pre-SLO youngest-first behavior exactly."""
+        return min(
             (i for i, s in enumerate(self.slots) if s is not None),
-            key=lambda i: self.slots[i].seq,
+            key=lambda i: (self.slots[i].req.priority, -self.slots[i].seq),
         )
 
     def _preempt(self, i: int) -> None:
@@ -1358,13 +1503,77 @@ class ServeEngine:
         self.slots[i] = None
         self.preemptions += 1
 
+    # ------------------------------------------------------------ migration
+    def export_inflight(self) -> list[tuple[Request, _ResumeState | None]]:
+        """Strip EVERY in-flight request off this engine for migration to
+        another one: live slots first (admission order), then the waiting
+        queue (front first, with any preemption-resume records attached).
+        Slots are cleared and their pages freed — after this the engine
+        holds no work.
+
+        The returned records are pure host-side state: generated tokens,
+        the sampling key, and timing stamps. That is exactly what a
+        router fronting real replica processes would hold anyway — it has
+        streamed every generated token to the client, and the request-keyed
+        PRNG stream is derivable from (seed, uid, tokens emitted), since
+        each emission advances the key by one ``jax.random.split``. No
+        device (KV) state crosses engines: ``import_inflight`` re-derives
+        it through the resume re-prefill path, which is what makes failover
+        token-exact rather than approximate."""
+        items: list[tuple[Request, _ResumeState | None]] = []
+        live = sorted(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: self.slots[i].seq,
+        )
+        for i in live:
+            slot = self.slots[i]
+            resume = None
+            if slot.generated:
+                resume = _ResumeState(
+                    generated=list(slot.generated),
+                    key=slot.key,
+                    first_token_time=slot.first_token_time,
+                    admit_time=slot.admit_time,
+                )
+            items.append((slot.req, resume))
+            self.slots[i] = None
+            if self.paged_cache:
+                self.pool.free(self._slot_pages[i])
+                self._slot_pages[i] = []
+                self._table_np[i, :] = 0
+                self._table_dirty = True
+        while self.waiting:
+            req = self.waiting.popleft()
+            items.append((req, self._resume.pop(req.uid, None)))
+        return items
+
+    def import_inflight(
+        self, items: list[tuple[Request, _ResumeState | None]]
+    ) -> None:
+        """Adopt migrated requests at the FRONT of the queue, preserving
+        their order — in-flight work from a failed replica is older than
+        anything queued locally, and FIFO admission owes it first service.
+        Requests with generated tokens re-enter through the preemption-
+        resume path (re-prefill prompt + generated[:-1], re-feed the last
+        token, continue the sampling stream where it stopped), so the
+        merged output stream is token-identical to an uninterrupted run."""
+        for req, resume in reversed(items):
+            if self.capacity_shortfall(req) > 0:
+                raise AdmissionError(
+                    req.uid, "exceeds_pool",
+                    f"migrated request {req.uid} exceeds this engine's "
+                    "static capacity",
+                )
+            if resume is not None and resume.generated:
+                self._resume[req.uid] = resume
+            self.waiting.appendleft(req)
+
     def _ensure_decode_pages(self, live: list[int]) -> None:
         """Lazy per-step allocation: before a decode dispatch, every live
         slot whose next write position crosses into an unallocated logical
-        page gets one. When the pool is dry, the YOUNGEST slot is preempted
-        (repeatedly, until a page frees up) — preferring to stall the most
-        recently admitted work keeps the oldest requests flowing, the same
-        recency order vLLM uses. If the starving slot preempts ITSELF the
+        page gets one. When the pool is dry, the LOWEST-priority-then-
+        youngest slot is preempted (repeatedly, until a page frees up) —
+        see ``_preempt_victim``. If the starving slot preempts ITSELF the
         loop stops: its request is back in the queue, its pages freed."""
         for i in live:
             slot = self.slots[i]
@@ -1383,7 +1592,7 @@ class ServeEngine:
                 # shed cold prefix-index pages before preempting live work
                 if self.prefix is not None and self.prefix.evict(1) > 0:
                     continue
-                victim = self._youngest_live()
+                victim = self._preempt_victim()
                 self._preempt(victim)
                 if victim == i:
                     break  # the needy slot itself went back to the queue
@@ -1402,6 +1611,7 @@ class ServeEngine:
         # the Pallas suffix-prefill kernel under the same engine-wide flag
         attention.set_suffix_kernel(self.use_kernel)
         try:
+            self._watchdog()
             self._admit(self._now(), respect_arrivals)
             live = [i for i, s in enumerate(self.slots) if s is not None]
             if live and self.paged_cache:
@@ -1574,6 +1784,7 @@ def serve_continuous(
     sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
+    max_wall_s: float = 0.0,
     log_fn=print,
 ) -> dict:
     """Build a model + engine, serve a synthetic trace, report throughput.
@@ -1607,6 +1818,7 @@ def serve_continuous(
         prefix_cache=prefix_cache,
         prefix_cache_pages=prefix_cache_pages,
         seed=seed,
+        max_wall_s=max_wall_s,
     )
     reqs = make_requests(
         cfg, n_requests=n_requests, prompt_len=prompt_len,

@@ -113,6 +113,22 @@ class PrefixCache:
         return True
 
     # ----------------------------------------------------------------- api
+    def probe(self, tokens) -> int:
+        """READ-ONLY hit prediction: how many leading full pages of
+        ``tokens`` are indexed. Unlike ``match`` it neither touches the
+        LRU clock nor counts a lookup nor returns page ids — it exists so
+        a multi-replica router can score cache affinity for a prompt on
+        every replica without perturbing any replica's eviction order or
+        hit-rate accounting."""
+        node, pages = self._root, 0
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            pages += 1
+            node = child
+        return pages
+
     def match(self, tokens) -> list[int]:
         """Longest indexed prefix of ``tokens`` in full pages: physical
         page ids, in logical order. Touches the matched path (LRU)."""

@@ -1,0 +1,622 @@
+"""Fault-tolerant multi-replica serve router: prefix-affinity routing,
+SLO-aware scheduling, and token-exact failover.
+
+``ServeRouter`` fronts N in-process ``ServeEngine`` replicas — the
+serving-side incarnation of the paper's cross-cloud scheduling problem,
+where any participating cloud can slow down, saturate, or drop out
+mid-round. The router owns four behaviors, each mirroring a federated
+robustness requirement:
+
+* **Placement** (``submit`` → ``_place_pending``): requests route to the
+  replica whose radix prefix index already holds the longest prefix of the
+  prompt (cache-affinity — ``ServeEngine.prefix_probe`` walks the trie's
+  page-chunk keys read-only, so hit prediction costs a few dict lookups,
+  no prefill, and no LRU perturbation). With no predicted hit anywhere,
+  the least-occupied replica wins (``pool_stats`` occupancy). A request no
+  replica could EVER serve is rejected up front with a structured
+  ``AdmissionError`` reporting the best-fit shortfall — the smallest
+  margin by which any replica's pool falls short, not the first pool's.
+* **Backpressure**: when every healthy replica is saturated (slots full
+  AND its admission queue at the router's cap), placement holds the
+  request in the router's own queue and retries with bounded backoff
+  (``retries`` counts attempts; realtime runs sleep ``backoff_s`` ×
+  attempt). After ``max_retries`` the request is force-placed on the
+  least-occupied replica rather than erroring — saturation degrades to
+  queueing, never to failure.
+* **Fault tolerance**: a ``FaultPlan`` injects kill / stall / slow faults
+  at deterministic per-replica step counts (the in-process stand-in for a
+  cloud dropping out). The router's step loop health-checks every round:
+  a KILL surfaces as ``ReplicaFault`` and is detected immediately; a
+  STALL is detected by progress tracking (a replica with work whose
+  observable state doesn't change for ``stall_patience`` consecutive
+  rounds is declared hung — the router never reads the fault plan to
+  decide health, only to inject). Either way the replica is marked dead
+  and its ENTIRE in-flight population — live slots and queue — migrates
+  through ``export_inflight``/``import_inflight``: requests with
+  generated tokens re-enter a healthy replica via the preemption-resume
+  re-prefill path, so the merged output streams are TOKEN-IDENTICAL
+  (greedy and sampled) to a fault-free run. A SLOW replica is left alone:
+  occupancy-based placement naturally shifts new work away from it.
+* **SLO enforcement** rides the engine: per-request ``priority`` orders
+  preemption (lowest-priority-then-youngest), ``deadline_s`` sheds
+  expired queued requests with structured errors, and ``max_wall_s``
+  watchdog-retires slots that stop advancing. ``router_stats`` aggregates
+  per-replica occupancy, migrations, sheds, timeouts, and retries.
+
+The replicas share one ``model``/``params`` (and the engine-level sampling
+seed), so a request's PRNG stream — keyed by (seed, uid), advanced one
+``jax.random.split`` per emitted token — is identical wherever it runs.
+That, plus scheduling-invariance of the engine's per-row math, is why
+failover can promise bitwise identity rather than "approximately resumes".
+
+    PYTHONPATH=src python -m repro.launch.serve --continuous \
+        --arch stablelm-1.6b --replicas 2 --fault kill:1@8
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.engine import (
+    AdmissionError,
+    Request,
+    RequestOutput,
+    ServeEngine,
+    make_requests,
+)
+from repro.launch.sampling import SamplingParams
+from repro.models import build_model
+
+
+class ReplicaFault(RuntimeError):
+    """Injected replica failure, surfaced at a router step boundary — the
+    in-process stand-in for a cross-cloud worker process dying."""
+
+    def __init__(self, replica: int, kind: str):
+        super().__init__(f"replica {replica}: injected {kind}")
+        self.replica = replica
+        self.kind = kind
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault-injection schedule, keyed by each replica's own
+    attempted-step counter (so a plan is reproducible regardless of how
+    rounds interleave across replicas).
+
+    ``kill[r] = k``: replica r's step k (and every later one) raises
+    ``ReplicaFault`` — the process is gone. Permanent.
+    ``stall[r] = k``: from step k the replica silently does nothing — the
+    hung-process case the router must DETECT (no exception to catch).
+    Permanent until the router gives up on it.
+    ``slow[r] = (k, seconds)``: from step k every step first sleeps —
+    the straggler case. Never fatal.
+
+    Kill wins over stall wins over slow when one replica carries several.
+    """
+
+    kill: dict[int, int] = dataclasses.field(default_factory=dict)
+    stall: dict[int, int] = dataclasses.field(default_factory=dict)
+    slow: dict[int, tuple[int, float]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def action(self, replica: int, step: int) -> tuple[str, float] | None:
+        k = self.kill.get(replica)
+        if k is not None and step >= k:
+            return ("kill", 0.0)
+        s = self.stall.get(replica)
+        if s is not None and step >= s:
+            return ("stall", 0.0)
+        sl = self.slow.get(replica)
+        if sl is not None and step >= sl[0]:
+            return ("slow", sl[1])
+        return None
+
+
+def parse_fault_spec(specs) -> FaultPlan:
+    """CLI fault grammar: ``kill:R@S`` / ``stall:R@S`` / ``slow:R@S@SEC``
+    (replica R, per-replica step S). Several specs compose one plan."""
+    plan = FaultPlan()
+    for spec in specs or ():
+        try:
+            kind, rest = spec.split(":", 1)
+            parts = rest.split("@")
+            rid, step = int(parts[0]), int(parts[1])
+            if kind == "kill":
+                plan.kill[rid] = step
+            elif kind == "stall":
+                plan.stall[rid] = step
+            elif kind == "slow":
+                plan.slow[rid] = (step, float(parts[2]))
+            else:
+                raise ValueError(kind)
+        except (ValueError, IndexError) as e:
+            raise ValueError(
+                f"bad fault spec {spec!r} (want kill:R@S, stall:R@S or "
+                f"slow:R@S@SEC): {e}"
+            ) from None
+    return plan
+
+
+class ServeRouter:
+    """Router over N in-process ``ServeEngine`` replicas.
+
+    Parameters
+    ----------
+    model, params : shared by every replica (identical params are what
+        make failover token-exact). Ignored when ``engines`` is given.
+    replicas : number of homogeneous replicas to build from
+        ``engine_kw``.
+    engines : pre-built replica list instead — may be HETEROGENEOUS
+        (different pool sizes, meshes). Placement and the best-fit
+        shortfall report handle mixed capacities.
+    fault_plan : optional ``FaultPlan`` injected at step boundaries.
+    stall_patience : consecutive no-progress rounds (on a replica with
+        work) before the router declares it hung and migrates. Progress is
+        judged from observable engine state only — finished/steps/queue
+        counters and slot positions — never from the fault plan.
+    max_retries : placement attempts while every candidate is saturated
+        before force-placing on the least-occupied replica.
+    backoff_s : realtime-mode sleep per failed placement attempt (scaled
+        by the attempt count). Virtual-time runs skip the sleep — stepping
+        the replicas IS the backoff.
+    max_queue : per-replica queued-request cap that defines "saturated"
+        (0 = 2 × that replica's ``num_slots``).
+    engine_kw : forwarded to every built ``ServeEngine`` (num_slots,
+        paged_cache, page_size, seed, max_wall_s, ...).
+    """
+
+    def __init__(
+        self,
+        model=None,
+        params=None,
+        *,
+        replicas: int = 2,
+        engines: list[ServeEngine] | None = None,
+        fault_plan: FaultPlan | None = None,
+        stall_patience: int = 3,
+        max_retries: int = 8,
+        backoff_s: float = 0.01,
+        max_queue: int = 0,
+        time_fn: Callable[[], float] | None = None,
+        **engine_kw,
+    ):
+        if engines is not None:
+            self.engines = list(engines)
+        else:
+            if model is None or params is None:
+                raise ValueError("need model+params or pre-built engines")
+            self.engines = [
+                ServeEngine(model, params, time_fn=time_fn, **engine_kw)
+                for _ in range(replicas)
+            ]
+        if not self.engines:
+            raise ValueError("router needs at least one replica")
+        n = len(self.engines)
+        self.fault_plan = fault_plan
+        self.stall_patience = stall_patience
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.max_queue = max_queue
+        self._time_fn = time_fn or time.monotonic
+        self._t0 = self._time_fn()
+        self._realtime = False
+
+        self.healthy = [True] * n
+        self.fail_reason: list[str | None] = [None] * n
+        self._steps = [0] * n          # attempted steps — the fault clock
+        self._sig: list[tuple | None] = [None] * n
+        self._no_progress = [0] * n
+
+        self.pending: collections.deque[Request] = collections.deque()
+        self._attempts: dict[int, int] = {}   # uid -> placement attempts
+        self.finished: list[RequestOutput] = []
+        self.shed: list[AdmissionError] = []  # router-level sheds only
+
+        self.migrations = 0            # replica-death events that moved work
+        self.migrated_requests = 0
+        self.retries = 0
+        self.forced_placements = 0
+        self.affinity_routed = 0
+        self.balance_routed = 0
+        self.replica_requests = [0] * n
+
+    # ------------------------------------------------------------- plumbing
+    def _now(self) -> float:
+        return self._time_fn() - self._t0
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(
+            e.has_work for e, h in zip(self.engines, self.healthy) if h
+        )
+
+    def occupancy(self, rid: int) -> float:
+        """Replica load fraction: paged-pool fill, or live-slot fraction
+        for ring replicas (which have no pool)."""
+        e = self.engines[rid]
+        if e.paged_cache:
+            return e.pool.in_use / max(e.pool.capacity, 1)
+        return e.active_slots / max(e.num_slots, 1)
+
+    def _queue_cap(self, rid: int) -> int:
+        return self.max_queue or 2 * self.engines[rid].num_slots
+
+    def _saturated(self, rid: int) -> bool:
+        """A replica is saturated when its total uncompleted load — live
+        slots plus queued admissions — fills the slots AND the queue cap.
+        Counting load (not stepped state) keeps one burst from dumping
+        every request on a replica that merely hasn't stepped yet."""
+        e = self.engines[rid]
+        return (
+            e.active_slots + len(e.waiting)
+            >= e.num_slots + self._queue_cap(rid)
+        )
+
+    def warm(self, prompt_lens, **kw) -> None:
+        """Warm every replica's jit caches, then restart all engine clocks
+        at ONE instant — sequential warming would otherwise skew the
+        replicas' relative clocks (deadlines and latency metrics compare
+        across replicas)."""
+        for e in self.engines:
+            e.warm(prompt_lens, **kw)
+        for e in self.engines:
+            e.reset_clock()
+        self._t0 = self._time_fn()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request) -> None:
+        """Accept a request, or reject it with the BEST-FIT shortfall when
+        no replica could ever serve it. Unlike a single engine's
+        ``submit`` — which rejects against one pool — the router probes
+        every replica (including heterogeneous ones with larger pools)
+        before giving up, and the error names the closest fit."""
+        shorts = [e.capacity_shortfall(req) for e in self.engines]
+        if min(shorts) > 0:
+            best = int(np.argmin(shorts))
+            raise AdmissionError(
+                req.uid, "exceeds_pool",
+                f"request {req.uid}: prompt {len(req.prompt)} + gen "
+                f"{req.max_new_tokens} exceeds every replica's capacity; "
+                f"best fit is replica {best}, short {shorts[best]} tokens "
+                f"(per-replica shortfalls: {shorts})",
+            )
+        self.pending.append(req)
+
+    def _choose_replica(self, req: Request, candidates: list[int]) -> int:
+        """Affinity first: the candidate whose prefix index predicts the
+        deepest hit for this prompt (read-only probe). No predicted hit
+        anywhere → least occupied, ties to the least-routed replica."""
+        hits = [
+            (self.engines[rid].prefix_probe(req.prompt), rid)
+            for rid in candidates
+        ]
+        best_hit = max(h for h, _ in hits)
+        if best_hit > 0:
+            rid = max(hits, key=lambda t: (t[0], -self.occupancy(t[1])))[1]
+            self.affinity_routed += 1
+            return rid
+        self.balance_routed += 1
+        return min(
+            candidates,
+            key=lambda rid: (
+                self.occupancy(rid),
+                self.replica_requests[rid],
+                rid,
+            ),
+        )
+
+    def _place_pending(self) -> None:
+        """Move router-queued requests onto replicas, FIFO. Stops at the
+        first request it cannot place this round (later arrivals must not
+        jump an earlier one under backpressure)."""
+        now = self._now()
+        while self.pending:
+            req = self.pending[0]
+            if self._realtime and req.arrival_time > now:
+                break
+            capable = [
+                rid
+                for rid, e in enumerate(self.engines)
+                if self.healthy[rid] and e.capacity_shortfall(req) == 0
+            ]
+            if not capable:
+                # every replica that could hold it is dead; erroring the
+                # whole run would drop the healthy replicas' work, so the
+                # request is shed with a structured record instead
+                self.pending.popleft()
+                self.shed.append(AdmissionError(
+                    req.uid, "no_healthy_replica",
+                    f"request {req.uid}: every replica with capacity for "
+                    "it has failed",
+                ))
+                continue
+            free = [rid for rid in capable if not self._saturated(rid)]
+            if not free:
+                attempts = self._attempts.get(req.uid, 0) + 1
+                self._attempts[req.uid] = attempts
+                self.retries += 1
+                if attempts <= self.max_retries:
+                    if self._realtime and self.backoff_s > 0:
+                        time.sleep(self.backoff_s * attempts)
+                    break  # hold the queue; replicas drain, we retry
+                free = capable  # bounded retry exhausted: force-place
+                self.forced_placements += 1
+            rid = self._choose_replica(req, free)
+            self.pending.popleft()
+            self.engines[rid].submit(req)
+            self.replica_requests[rid] += 1
+
+    # --------------------------------------------------------- health/fault
+    def _progress_sig(self, e: ServeEngine) -> tuple:
+        """Observable engine state a healthy step must change: counters
+        plus per-slot write positions. Deliberately excludes anything the
+        fault plan knows — stall detection has to be honest."""
+        return (
+            len(e.finished), e.steps, e.prefill_dispatches,
+            len(e.waiting), e.shed_requests, e.timeouts, e.preemptions,
+            tuple(s.pos_host if s is not None else -1 for s in e.slots),
+        )
+
+    def _note_progress(self, rid: int) -> None:
+        e = self.engines[rid]
+        sig = self._progress_sig(e)
+        if not e.has_work:
+            self._no_progress[rid] = 0
+        elif self._realtime and e.active_slots == 0 and (
+            (nxt := e.next_arrival()) is not None and nxt > self._now()
+        ):
+            self._no_progress[rid] = 0  # idle awaiting a future arrival
+        elif sig == self._sig[rid]:
+            self._no_progress[rid] += 1
+            if self._no_progress[rid] >= self.stall_patience:
+                self._mark_dead(rid, "stalled (no progress)")
+        else:
+            self._no_progress[rid] = 0
+        self._sig[rid] = sig
+
+    def _mark_dead(self, rid: int, why: str) -> None:
+        """Retire a replica and migrate its whole in-flight population to
+        the survivors. Host-side resume state is all that crosses; KV is
+        re-derived by resume re-prefill on the target, which keeps the
+        merged streams token-identical."""
+        self.healthy[rid] = False
+        self.fail_reason[rid] = why
+        items = self.engines[rid].export_inflight()
+        if not items:
+            return
+        if not any(self.healthy):
+            raise RuntimeError(
+                f"replica {rid} failed ({why}) with {len(items)} requests "
+                "in flight and no healthy replica remains"
+            )
+        self.migrations += 1
+        self.migrated_requests += len(items)
+        # group per chosen target, order preserved (import prepends the
+        # whole group at the target's queue head)
+        per_target: dict[int, list] = {}
+        for req, resume in items:
+            capable = [
+                r for r, e in enumerate(self.engines)
+                if self.healthy[r] and e.capacity_shortfall(req) == 0
+            ]
+            if not capable:
+                self.shed.append(AdmissionError(
+                    req.uid, "no_healthy_replica",
+                    f"request {req.uid}: migrated off replica {rid} but no "
+                    "healthy replica has capacity for it",
+                ))
+                continue
+            # saturation is ignored here: migrated work is the oldest in
+            # the system and queues at the head wherever it lands
+            t = self._choose_replica(req, capable)
+            per_target.setdefault(t, []).append((req, resume))
+            self.replica_requests[t] += 1
+        for t, group in per_target.items():
+            self.engines[t].import_inflight(group)
+
+    def _step_replicas(self) -> list[RequestOutput]:
+        """One router round: step every healthy replica that has work,
+        injecting scheduled faults at the boundary, and health-check each.
+        Returns the requests that finished this round."""
+        done: list[RequestOutput] = []
+        for rid, e in enumerate(self.engines):
+            if not self.healthy[rid] or not e.has_work:
+                continue
+            act = (
+                self.fault_plan.action(rid, self._steps[rid])
+                if self.fault_plan is not None
+                else None
+            )
+            self._steps[rid] += 1
+            try:
+                if act is not None and act[0] == "kill":
+                    raise ReplicaFault(rid, "kill")
+                if act is not None and act[0] == "stall":
+                    self._note_progress(rid)  # nothing ran: sig frozen
+                    continue
+                if act is not None and act[0] == "slow":
+                    time.sleep(act[1])
+                done.extend(e.step(respect_arrivals=self._realtime))
+            except ReplicaFault as f:
+                self._mark_dead(rid, f"killed (injected at step "
+                                     f"{self._steps[rid] - 1}): {f}")
+                continue
+            self._note_progress(rid)
+        return done
+
+    # ------------------------------------------------------------------ run
+    def step(self) -> list[RequestOutput]:
+        """One scheduling round: place pending requests, step replicas,
+        health-check. Composable for callers driving their own loop."""
+        self._place_pending()
+        outs = self._step_replicas()
+        self.finished.extend(outs)
+        return outs
+
+    def run(
+        self, requests=(), *, realtime: bool = False
+    ) -> list[RequestOutput]:
+        """Drain ``requests`` (plus anything pending) to completion across
+        the replica fleet. Completed outputs merge across replicas and
+        migrations; shed requests (deadline, no-healthy-replica) appear in
+        ``shed_errors``, never here."""
+        for req in sorted(requests, key=lambda r: r.arrival_time):
+            self.submit(req)
+        self._realtime = realtime
+        while self.has_work:
+            if not any(self.healthy):
+                raise RuntimeError("every replica has failed")
+            if realtime and all(
+                e.active_slots == 0
+                for e, h in zip(self.engines, self.healthy) if h
+            ):
+                nxts = [
+                    t for e, h in zip(self.engines, self.healthy)
+                    if h
+                    for t in [e.next_arrival()] if t is not None
+                ]
+                if not self.pending and nxts:
+                    delay = min(nxts) - self._now()
+                    if delay > 0:
+                        time.sleep(delay)
+            self.step()
+        return sorted(self.finished, key=lambda o: o.uid)
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def shed_errors(self) -> list[AdmissionError]:
+        """Every structured shed across the system: router-level (no
+        healthy replica) plus each replica's deadline sheds."""
+        out = list(self.shed)
+        for e in self.engines:
+            out.extend(e.shed)
+        return out
+
+    @property
+    def router_stats(self) -> dict:
+        return {
+            "replicas": len(self.engines),
+            "healthy": list(self.healthy),
+            "fail_reasons": list(self.fail_reason),
+            "occupancy": [
+                self.occupancy(rid) for rid in range(len(self.engines))
+            ],
+            "active_slots": [e.active_slots for e in self.engines],
+            "queued": [len(e.waiting) for e in self.engines],
+            "replica_requests": list(self.replica_requests),
+            "replica_steps": list(self._steps),
+            "migrations": self.migrations,
+            "migrated_requests": self.migrated_requests,
+            "shed_requests": len(self.shed)
+            + sum(e.shed_requests for e in self.engines),
+            "timeouts": sum(e.timeouts for e in self.engines),
+            "preemptions": sum(e.preemptions for e in self.engines),
+            "retries": self.retries,
+            "forced_placements": self.forced_placements,
+            "affinity_routed": self.affinity_routed,
+            "balance_routed": self.balance_routed,
+        }
+
+
+# ----------------------------------------------------------------- serving
+def serve_router_continuous(
+    arch: str,
+    *,
+    smoke: bool = True,
+    replicas: int = 2,
+    num_slots: int = 4,
+    n_requests: int = 8,
+    prompt_len: int = 32,
+    gen_tokens: int = 32,
+    window: int = 0,
+    use_kernel: bool = False,
+    paged_cache: bool = True,
+    page_size: int = 16,
+    num_pages: int = 0,
+    watermark_pages: int = 0,
+    prefix_cache: bool = True,
+    sampling: SamplingParams | None = None,
+    fault_plan: FaultPlan | None = None,
+    seed: int = 0,
+    stagger: float = 0.0,
+    max_wall_s: float = 0.0,
+    log_fn=print,
+) -> dict:
+    """Build ONE model + N engine replicas behind a ``ServeRouter``, serve
+    a synthetic trace (optionally under an injected fault plan), report
+    merged throughput and the router's robustness counters."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    router = ServeRouter(
+        model,
+        params,
+        replicas=replicas,
+        fault_plan=fault_plan,
+        num_slots=num_slots,
+        max_seq=prompt_len + gen_tokens,
+        window=window,
+        use_kernel=use_kernel,
+        paged_cache=paged_cache,
+        page_size=page_size,
+        num_pages=num_pages,
+        watermark_pages=watermark_pages,
+        prefix_cache=prefix_cache,
+        seed=seed,
+        max_wall_s=max_wall_s,
+    )
+    reqs = make_requests(
+        cfg, n_requests=n_requests, prompt_len=prompt_len,
+        gen_tokens=gen_tokens, seed=seed, stagger=stagger,
+    )
+    if sampling is not None and not sampling.is_greedy:
+        for r in reqs:
+            r.sampling = dataclasses.replace(
+                sampling,
+                seed=None if sampling.seed is None else sampling.seed + r.uid,
+            )
+    router.warm(
+        [prompt_len], gen_tokens=min(2, gen_tokens), sampling=sampling
+    )
+    t0 = time.time()
+    outs = router.run(reqs, realtime=stagger > 0)
+    wall = time.time() - t0
+    total = sum(len(o.tokens) for o in outs)
+    lat = [o.latency for o in outs] or [0.0]
+    rs = router.router_stats
+    result = {
+        "arch": cfg.name,
+        "replicas": replicas,
+        "num_slots": num_slots,
+        "n_requests": n_requests,
+        "prompt_len": prompt_len,
+        "gen_tokens": gen_tokens,
+        "sampling": None if sampling is None else dataclasses.asdict(sampling),
+        "wall_seconds": wall,
+        "tokens_per_second": total / max(wall, 1e-9),
+        "latency_p50": float(np.percentile(lat, 50)),
+        "latency_p95": float(np.percentile(lat, 95)),
+        "completed": len(outs),
+        "shed": [(e.uid, e.reason) for e in router.shed_errors],
+        "router": rs,
+        "generated": [o.tokens for o in outs],
+    }
+    log_fn(
+        f"{cfg.name}: {len(outs)}/{n_requests} reqs over {replicas} replicas"
+        f" × {num_slots} slots in {wall:.2f}s "
+        f"({result['tokens_per_second']:.1f} tok/s); "
+        f"healthy={rs['healthy']}, occ="
+        f"{['%.0f%%' % (100 * o) for o in rs['occupancy']]}, "
+        f"{rs['migrations']} migrations ({rs['migrated_requests']} reqs), "
+        f"{rs['shed_requests']} shed, {rs['retries']} retries, "
+        f"affinity {rs['affinity_routed']} / balance {rs['balance_routed']}"
+    )
+    return result

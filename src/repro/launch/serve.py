@@ -24,6 +24,11 @@ Continuous mode also serves TENSOR-PARALLEL (--mesh N): attention heads and
 the KV pool's kv-head slices split over an N-device ``model`` mesh through
 ``shard_map``, bitwise token-identical to the single-device engine; on CPU
 pair it with --num-devices N (host-device override, set before jax inits).
+With --replicas N the trace is served through the fault-tolerant router
+(``launch/router.py``): prefix-affinity + occupancy placement over N
+engine replicas, SLO-aware preemption, and token-exact failover — inject
+failures with --fault kill:R@S / stall:R@S / slow:R@S@SEC to watch
+in-flight requests migrate without changing a single output token.
 
     # oracle (single fixed batch)
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
@@ -247,6 +252,20 @@ def main(argv=None):
                     "entries are LRU-evicted under pool pressure")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="[continuous] serve through a fault-tolerant "
+                    "router over this many engine replicas (prefix-"
+                    "affinity + occupancy routing, token-exact failover); "
+                    "1 = single engine, no router")
+    ap.add_argument("--fault", action="append", default=None,
+                    metavar="KIND:R@S",
+                    help="[router] inject a fault: kill:R@S / stall:R@S / "
+                    "slow:R@S@SEC (replica R at its own step S); "
+                    "repeatable — specs compose one FaultPlan")
+    ap.add_argument("--max-wall-s", type=float, default=0.0,
+                    help="[continuous] per-request wall-clock watchdog: "
+                    "retire a slot that exceeds this with a structured "
+                    "timeout result (0 = off)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="[continuous] serve tensor-parallel over this many "
                     "model-axis shards (0 = single device); n_heads and "
@@ -275,6 +294,17 @@ def main(argv=None):
                 f"{len(jax.devices())}; pass --num-devices {args.mesh} "
                 "(CPU host-device override) or run on a larger host"
             )
+    if args.replicas > 1 and not args.continuous:
+        ap.error("--replicas requires --continuous (the router fronts "
+                 "continuous-batching engine replicas)")
+    if args.replicas > 1 and args.mesh > 0:
+        ap.error("--replicas with --mesh is not supported yet: the router "
+                 "builds single-device replicas (data-parallel across "
+                 "replicas, not tensor-parallel within one)")
+    if args.fault and args.replicas <= 1:
+        ap.error("--fault requires --replicas > 1 (fault injection is a "
+                 "router harness; a single engine has nowhere to fail "
+                 "over to)")
     if args.temperature <= 0 and (args.top_k > 0 or args.top_p < 1.0):
         ap.error("--top-k/--top-p require --temperature > 0 "
                  "(temperature 0 is greedy decoding)")
@@ -314,6 +344,27 @@ def main(argv=None):
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, seed=args.seed,
             )
+        if args.replicas > 1:
+            from repro.launch.router import (
+                parse_fault_spec, serve_router_continuous,
+            )
+
+            return serve_router_continuous(
+                args.arch, smoke=args.smoke, replicas=args.replicas,
+                num_slots=args.slots, n_requests=args.requests,
+                prompt_len=args.prompt_len, gen_tokens=args.gen,
+                window=args.window, use_kernel=args.use_kernel,
+                paged_cache=args.paged_cache, page_size=args.page_size,
+                num_pages=args.num_pages,
+                watermark_pages=args.watermark_pages,
+                prefix_cache=args.prefix_cache is not False,
+                sampling=sampling,
+                fault_plan=(
+                    parse_fault_spec(args.fault) if args.fault else None
+                ),
+                seed=args.seed, stagger=args.stagger,
+                max_wall_s=args.max_wall_s,
+            )
         return serve_continuous(
             args.arch, smoke=args.smoke, num_slots=args.slots,
             n_requests=args.requests, prompt_len=args.prompt_len,
@@ -333,6 +384,7 @@ def main(argv=None):
             num_shards=args.mesh,
             sampling=sampling,
             seed=args.seed, stagger=args.stagger,
+            max_wall_s=args.max_wall_s,
         )
     return serve_batch(
         args.arch, smoke=args.smoke, batch=args.batch,

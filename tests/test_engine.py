@@ -30,7 +30,7 @@ def oracle():
 
 
 def _build(num_slots=2, window=0, use_kernel=False, prefill="chunked",
-           max_seq=P + G, batch_prefill=True, time_fn=None):
+           max_seq=P + G, batch_prefill=True, time_fn=None, **kw):
     cfg = get_smoke_config(ARCH)
     model_params = getattr(_build, "_cache", None)
     if model_params is None:
@@ -44,7 +44,7 @@ def _build(num_slots=2, window=0, use_kernel=False, prefill="chunked",
     return ServeEngine(
         _build._cache[0], _build._cache[1], num_slots=num_slots,
         max_seq=max_seq, window=window, use_kernel=use_kernel, prefill=prefill,
-        batch_prefill=batch_prefill, time_fn=time_fn,
+        batch_prefill=batch_prefill, time_fn=time_fn, **kw,
     )
 
 
@@ -328,3 +328,72 @@ def test_first_token_time_stamps(oracle):
             f"{prefill}: first token stamped at step {out.first_token_time}, "
             f"expected {expect}"
         )
+
+
+def test_watchdog_retires_stuck_slot(oracle):
+    """Per-request wall-clock watchdog (``max_wall_s``): a slot older than
+    the budget retires with a structured ``timeout`` result carrying its
+    partial tokens, and the queue behind it keeps flowing. Step-indexed
+    clock: one time unit per executed decode step."""
+    cfg = get_smoke_config(ARCH)
+    holder = {}
+    engine = _build(
+        num_slots=1, max_wall_s=3.0,
+        time_fn=lambda: float(holder["e"].steps) if "e" in holder else 0.0,
+    )
+    holder["e"] = engine
+    reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)[:2]
+    outs = engine.run(reqs)
+    assert len(outs) == 2 and not engine.has_work
+    assert [o.finish_reason for o in outs] == ["timeout", "timeout"], (
+        "a 6-token request cannot beat a 3-step budget"
+    )
+    assert engine.timeouts == 2
+    for o in outs:
+        assert 0 < len(o.tokens) < G
+        # the partial stream is a PREFIX of the fault-free output
+        assert o.tokens == oracle["generated"][o.uid][: len(o.tokens)]
+
+
+def test_watchdog_ample_budget_never_fires(oracle):
+    """A budget the trace fits inside is invisible: identical tokens, zero
+    timeouts — the watchdog is pure insurance."""
+    cfg = get_smoke_config(ARCH)
+    holder = {}
+    engine = _build(
+        num_slots=2, max_wall_s=100.0,
+        time_fn=lambda: float(holder["e"].steps) if "e" in holder else 0.0,
+    )
+    holder["e"] = engine
+    reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)
+    outs = engine.run(reqs)
+    assert engine.timeouts == 0
+    for o in outs:
+        assert o.tokens == oracle["generated"][o.uid]
+        assert o.finish_reason != "timeout"
+
+
+def test_deadline_shed_structured(oracle):
+    """``deadline_s``: a request still QUEUED past its deadline is shed
+    with a structured ``deadline_exceeded`` error instead of wedging the
+    queue; an already-decoding request is never shed. Step-indexed
+    clock."""
+    cfg = get_smoke_config(ARCH)
+    holder = {}
+    engine = _build(
+        num_slots=1,
+        time_fn=lambda: float(holder["e"].steps) if "e" in holder else 0.0,
+    )
+    holder["e"] = engine
+    reqs = make_requests(cfg, n_requests=5, prompt_len=P, gen_tokens=G, seed=0)[:3]
+    # uid0 occupies the only slot for ~G steps; uid1's deadline expires
+    # while it waits; uid2 (no deadline) must still be served
+    reqs[0].deadline_s = 100.0   # admitted immediately — decoding exempt
+    reqs[1].deadline_s = 2.0
+    outs = engine.run(reqs)
+    assert [o.uid for o in outs] == [0, 2]
+    assert engine.shed_requests == 1
+    assert [e.uid for e in engine.shed] == [1]
+    assert engine.shed[0].reason == "deadline_exceeded"
+    for o in outs:
+        assert o.tokens == oracle["generated"][o.uid]

@@ -489,3 +489,115 @@ def test_retired_slot_drift_is_harmless(model_and_params):
     outs = paged.run(reqs())
     oracle = _build(model_and_params, max_seq=P + max(gens)).run(reqs())
     _assert_same_tokens(outs, oracle)
+
+
+# ------------------------------------------------------ SLO-aware preemption
+def test_priority_overrides_youngest_preemption(model_and_params):
+    """Decode-OOM victim selection is lowest-priority-then-youngest: a
+    LOW-priority OLD slot is preempted before a default-priority younger
+    one (pre-SLO behavior picked the youngest unconditionally) — and the
+    preempted request still resumes token-identically."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7]
+    ample = _build(model_and_params, paged_cache=True, page_size=4)
+    ref = ample.run(_reqs(cfg, lens))
+
+    def reqs_with_prio():
+        rs = _reqs(cfg, lens)
+        rs[0].priority = -1  # oldest slot, but lowest priority
+        return rs
+
+    tight = _build(
+        model_and_params, paged_cache=True, page_size=4, num_pages=6
+    )
+    outs = tight.run(reqs_with_prio())
+    assert tight.preemptions > 0, "tight pool must preempt"
+    _assert_same_tokens(outs, ref)
+    # uid0 (not the youngest) paid the preemptions: it re-admitted at
+    # least once, while the default-priority slots never did
+    assert len(tight.slot_history[0]) > 1
+    assert all(len(tight.slot_history[u]) == 1 for u in (1, 2))
+
+
+def test_equal_priorities_preempt_youngest_as_before(model_and_params):
+    """All-default-priority traffic must reproduce the pre-SLO victim
+    order exactly: the YOUNGEST slot is preempted, never an older one."""
+    cfg, _, _ = model_and_params
+    lens = [P, P]
+    tight = _build(
+        model_and_params, paged_cache=True, page_size=4, num_pages=6
+    )
+    outs = tight.run(_reqs(cfg, lens))
+    assert tight.preemptions > 0
+    assert len(tight.slot_history[1]) > 1, "youngest must be the victim"
+    assert len(tight.slot_history[0]) == 1
+    ample = _build(model_and_params, paged_cache=True, page_size=4)
+    _assert_same_tokens(outs, ample.run(_reqs(cfg, lens)))
+
+
+# ----------------------------------------------------- migration export/import
+def test_export_import_mid_decode_token_identical(model_and_params):
+    """The failover primitive: strip a half-served engine's in-flight
+    population (live slots + queue) and adopt it on a fresh engine; the
+    merged outputs equal an uninterrupted single-engine run."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7, 6]
+    ref = _build(model_and_params, paged_cache=True, page_size=4).run(
+        _reqs(cfg, lens)
+    )
+    a = _build(model_and_params, paged_cache=True, page_size=4)
+    for r in _reqs(cfg, lens):
+        a.submit(r)
+    early = []
+    for _ in range(3):  # mid-decode: slots live, queue non-empty
+        early += a.step()
+    items = a.export_inflight()
+    assert items and not a.has_work, "export must strip everything"
+    assert a.pool.in_use - (
+        0 if a.prefix is None else a.prefix.size
+    ) == 0, "exported slots must release their pages"
+    b = _build(model_and_params, paged_cache=True, page_size=4)
+    b.import_inflight(items)
+    outs = early + b.run()
+    _assert_same_tokens(outs, ref)
+
+
+def test_export_import_sampled_streams_continue(model_and_params):
+    """Migration re-enters via the resume path: per-request PRNG streams
+    continue where they stopped — no draw replayed or skipped."""
+    cfg, _, _ = model_and_params
+    lens = [P, 7]
+
+    def reqs():
+        rs = _reqs(cfg, lens)
+        for r in rs:
+            r.sampling = SamplingParams(
+                temperature=0.9, top_k=7, seed=100 + r.uid
+            )
+        return rs
+
+    ref = _build(model_and_params, paged_cache=True, page_size=4).run(reqs())
+    a = _build(model_and_params, paged_cache=True, page_size=4)
+    for r in reqs():
+        a.submit(r)
+    early = []
+    for _ in range(3):
+        early += a.step()
+    b = _build(model_and_params, paged_cache=True, page_size=4)
+    b.import_inflight(a.export_inflight())
+    _assert_same_tokens(early + b.run(), ref)
+
+
+def test_import_rejects_over_capacity(model_and_params):
+    """A migrated request no replica-sized pool can hold is refused with a
+    structured error, not silently truncated."""
+    _, model, params = model_and_params
+    cfg, _, _ = model_and_params
+    big = _reqs(cfg, [P], gen=20)[0]
+    small = ServeEngine(
+        model, params, num_slots=1, max_seq=P + G,
+        paged_cache=True, page_size=4,
+    )
+    with pytest.raises(AdmissionError) as ei:
+        small.import_inflight([(big, None)])
+    assert ei.value.reason == "exceeds_pool"

@@ -366,3 +366,31 @@ def test_property_sharing_token_identical(
         model_and_params, prefix=True, max_seq=32, page_size=page_size
     )
     _assert_same_tokens(engine.run(reqs()), ref)
+
+def test_probe_is_read_only():
+    """``probe`` predicts hit depth for router affinity WITHOUT the side
+    effects of ``match``: no lookup/hit accounting, and no LRU touch — a
+    probed-but-never-matched chain must still be the eviction victim."""
+    pool = PagePool(num_pages=16, page_size=2)
+    cache = PrefixCache(pool)
+    a = np.asarray([1, 1, 2, 2], np.int32)       # chain A: [11][22]
+    b = np.asarray([1, 1, 3, 3], np.int32)       # chain B: [11][33]
+    pa = pool.alloc(2)
+    cache.insert(a, pa)
+    pb_tail = pool.alloc(1)
+    cache.insert(b, [pa[0], pb_tail[0]])
+    pool.free(pa), pool.free(pb_tail)
+    cache.match(b)                               # B hottest; A's leaf is LRU
+    lookups, hits = cache.lookups, cache.hit_pages
+    assert cache.probe(a) == 2                   # full chain indexed
+    assert cache.probe(a[:2]) == 1
+    assert cache.probe(np.asarray([9, 9], np.int32)) == 0
+    for _ in range(5):
+        cache.probe(a)                           # hammer A via probe only
+    assert cache.lookups == lookups and cache.hit_pages == hits, (
+        "probe must not count as a lookup"
+    )
+    assert cache.evict(1) == 1
+    assert cache.match(a) == [pa[0]], (
+        "probes touched the LRU clock: A's leaf should have been evicted"
+    )

@@ -1,0 +1,380 @@
+"""Fault-tolerant multi-replica router tests (launch/router.py).
+
+The contract extends the engine suite's invariance theme one level up:
+WHERE a request runs — which replica, before or after a migration — must
+be invisible in its output. A fault-free single engine is the oracle; the
+router under injected kill/stall/slow faults must emit bitwise identical
+token streams (greedy and sampled), complete every submitted request, and
+report what happened through ``router_stats`` instead of raising. Routing
+policy (prefix affinity, occupancy balance, backpressure) and the SLO
+machinery (deadline shed, best-fit rejection) are pinned alongside.
+"""
+import jax
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import (
+    AdmissionError,
+    Request,
+    ServeEngine,
+    make_requests,
+)
+from repro.launch.router import (
+    FaultPlan,
+    ReplicaFault,
+    ServeRouter,
+    parse_fault_spec,
+)
+from repro.launch.sampling import SamplingParams
+
+ARCH = "stablelm-1.6b"
+P, G = 8, 6  # default prompt / generated tokens (ring cap 14)
+PS = 4       # page size used throughout
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+ENGINE_KW = dict(paged_cache=True, page_size=PS, prefix_cache=True, seed=0)
+
+
+def _router(model_and_params, **kw):
+    _, model, params = model_and_params
+    for k, v in ENGINE_KW.items():
+        kw.setdefault(k, v)
+    kw.setdefault("replicas", 2)
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_seq", P + G)
+    return ServeRouter(model, params, **kw)
+
+
+def _engine(model_and_params, **kw):
+    _, model, params = model_and_params
+    for k, v in ENGINE_KW.items():
+        kw.setdefault(k, v)
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_seq", P + G)
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(cfg, lens, *, gen=G, uid0=0, seed=0, sampled=False):
+    base = make_requests(
+        cfg, n_requests=len(lens), prompt_len=max(lens), gen_tokens=gen,
+        seed=seed,
+    )
+    reqs = [
+        Request(uid=uid0 + j, prompt=r.prompt[: lens[j]], max_new_tokens=gen)
+        for j, r in enumerate(base)
+    ]
+    if sampled:
+        for r in reqs:
+            r.sampling = SamplingParams(
+                temperature=0.9, top_p=0.95, seed=100 + r.uid
+            )
+    return reqs
+
+
+def _assert_same_tokens(a, b):
+    ref = {o.uid: o.tokens for o in b}
+    assert len(a) == len(b)
+    for o in a:
+        assert o.tokens == ref[o.uid], (
+            f"uid {o.uid}: {o.tokens} != {ref[o.uid]}"
+        )
+
+
+@pytest.fixture(scope="module")
+def fault_free(model_and_params):
+    """Single fault-free engine outputs for the shared 5-request trace —
+    the oracle every failover scenario is pinned against."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7, P, 6]
+    out = {}
+    out["greedy"] = _engine(model_and_params).run(_reqs(cfg, lens))
+    out["sampled"] = _engine(model_and_params).run(
+        _reqs(cfg, lens, sampled=True)
+    )
+    out["lens"] = lens
+    return out
+
+
+# ------------------------------------------------------- failover identity
+def test_kill_mid_decode_token_identical_greedy(model_and_params, fault_free):
+    """The acceptance pin: kill 1 of 2 replicas mid-decode; every in-flight
+    request completes on the survivor with BITWISE identical greedy
+    tokens."""
+    cfg, _, _ = model_and_params
+    r = _router(model_and_params, fault_plan=FaultPlan(kill={0: 3}))
+    outs = r.run(_reqs(cfg, fault_free["lens"]))
+    _assert_same_tokens(outs, fault_free["greedy"])
+    rs = r.router_stats
+    assert rs["healthy"] == [False, True]
+    assert "killed" in rs["fail_reasons"][0]
+    assert rs["migrations"] == 1 and rs["migrated_requests"] > 0, (
+        "kill at step 3 must catch requests in flight"
+    )
+    assert not r.shed_errors
+
+
+def test_kill_mid_decode_token_identical_sampled(
+    model_and_params, fault_free
+):
+    """Same failover, sampled decoding: the per-request PRNG stream rides
+    the resume record, so migration neither replays nor skips a draw."""
+    cfg, _, _ = model_and_params
+    r = _router(model_and_params, fault_plan=FaultPlan(kill={0: 3}))
+    outs = r.run(_reqs(cfg, fault_free["lens"], sampled=True))
+    _assert_same_tokens(outs, fault_free["sampled"])
+    assert r.router_stats["migrated_requests"] > 0
+
+
+def test_stall_detected_by_progress_tracking(model_and_params, fault_free):
+    """A stalled replica raises nothing — the router must notice frozen
+    observable state within ``stall_patience`` rounds and migrate."""
+    cfg, _, _ = model_and_params
+    r = _router(
+        model_and_params,
+        fault_plan=FaultPlan(stall={1: 2}),
+        stall_patience=3,
+    )
+    outs = r.run(_reqs(cfg, fault_free["lens"]))
+    _assert_same_tokens(outs, fault_free["greedy"])
+    rs = r.router_stats
+    assert rs["healthy"] == [True, False]
+    assert "stalled" in rs["fail_reasons"][1]
+    assert rs["migrated_requests"] > 0
+
+
+def test_slow_replica_survives(model_and_params, fault_free):
+    """A straggler is not a failure: a slowed replica keeps its work and
+    its health; only its pace changes."""
+    cfg, _, _ = model_and_params
+    r = _router(
+        model_and_params, fault_plan=FaultPlan(slow={1: (1, 0.001)})
+    )
+    outs = r.run(_reqs(cfg, fault_free["lens"]))
+    _assert_same_tokens(outs, fault_free["greedy"])
+    rs = r.router_stats
+    assert rs["healthy"] == [True, True]
+    assert rs["migrations"] == 0
+
+
+def test_kill_with_queued_requests_migrates_queue(model_and_params):
+    """More requests than the dead replica's slots: the waiting queue
+    (not just live slots) migrates, in order, and everything completes."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7, 6, P, 5, 7, P]
+    ref = _engine(model_and_params, num_slots=4).run(_reqs(cfg, lens))
+    r = _router(
+        model_and_params, num_slots=2, fault_plan=FaultPlan(kill={0: 2})
+    )
+    outs = r.run(_reqs(cfg, lens))
+    _assert_same_tokens(outs, ref)
+    assert len(outs) == len(lens) and not r.shed_errors
+
+
+# ------------------------------------------------------------ routing policy
+def test_prefix_affinity_routes_to_warm_replica(model_and_params):
+    """A prompt whose chunk-chain is indexed on one replica routes THERE,
+    not to the emptier one — predicted hits beat occupancy balance."""
+    cfg, _, _ = model_and_params
+    r = _router(model_and_params)
+    warm = _reqs(cfg, [P])           # lands on replica 0 (balance tie)
+    r.run(warm)
+    assert r.replica_requests == [1, 0]
+    # probe reports predicted hit TOKENS (full pages × page size)
+    assert r.engines[0].prefix_probe(warm[0].prompt) == (P // PS) * PS
+    hit = _reqs(cfg, [P], uid0=1)    # identical prompt → replica 0 again
+    r.run(hit)
+    assert r.replica_requests == [2, 0]
+    assert r.router_stats["affinity_routed"] == 1
+
+
+def test_migrated_prefix_hit_request_token_identical(model_and_params):
+    """The migrate-of-prefix-hit pin: a request riding replica 0's warm
+    prefix index is mid-decode when replica 0 dies; it must finish on
+    replica 1 (whose index never saw the prefix) token-identically."""
+    cfg, _, _ = model_and_params
+    warm = _reqs(cfg, [P])
+    # uid1 re-sends the warm PROMPT verbatim (same tokens → full-page
+    # chunk-chain hit on whichever replica served uid0); uid2/3 differ
+    burst = [
+        Request(uid=1, prompt=warm[0].prompt.copy(), max_new_tokens=G),
+        *_reqs(cfg, [7, 6], uid0=2),
+    ]
+    base = _engine(model_and_params)
+    ref = base.run([Request(
+        uid=r.uid, prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+    ) for r in warm]) + base.run([Request(
+        uid=r.uid, prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+    ) for r in burst])
+    r = _router(model_and_params)
+    outs = r.run(warm)
+    # arm the kill two steps into the burst — phase 1 already consumed
+    # replica 0 steps, so the plan is anchored to its live counter
+    r.fault_plan = FaultPlan(kill={0: r.router_stats["replica_steps"][0] + 2})
+    outs += [o for o in r.run(burst) if o.uid != warm[0].uid]
+    _assert_same_tokens(outs, ref)
+    rs = r.router_stats
+    assert rs["healthy"] == [False, True]
+    assert rs["affinity_routed"] >= 1 and rs["migrated_requests"] > 0
+
+
+def test_occupancy_balance_spreads_load(model_and_params):
+    """Distinct prompts (no affinity anywhere): admissions spread across
+    replicas by occupancy instead of piling onto one."""
+    cfg, _, _ = model_and_params
+    r = _router(model_and_params, prefix_cache=False)
+    r.run(_reqs(cfg, [P, 7, 6, 5]))
+    assert all(n > 0 for n in r.replica_requests), r.replica_requests
+    assert r.router_stats["balance_routed"] == 4
+
+
+def test_backpressure_bounded_retry_then_completion(model_and_params):
+    """Every replica saturated (slots full + queue at cap): the router
+    holds requests with bounded retries — nothing errors, nothing drops,
+    tokens stay identical."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7, 6, P, 5]
+    ref = _engine(model_and_params, num_slots=4).run(_reqs(cfg, lens))
+    r = _router(model_and_params, num_slots=1, max_queue=1, max_retries=4)
+    outs = r.run(_reqs(cfg, lens))
+    _assert_same_tokens(outs, ref)
+    assert r.retries > 0, "six requests over two 1-slot replicas with a "\
+        "1-deep queue cap must exercise backpressure"
+    assert not r.shed_errors
+
+
+# --------------------------------------------------------------- SLO / sheds
+def test_deadline_shed_under_saturation(model_and_params):
+    """Saturated replicas + an expiring deadline: the queued request is
+    shed with a structured ``deadline_exceeded`` error; survivors finish
+    token-identically. Virtual step-indexed clock — one tick per router
+    round."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 6]
+    ref = _engine(model_and_params).run(_reqs(cfg, lens))
+    clock = {"t": 0.0}
+    r = _router(
+        model_and_params, num_slots=1, time_fn=lambda: clock["t"]
+    )
+    reqs = _reqs(cfg, lens)
+    doomed = Request(
+        uid=99, prompt=reqs[0].prompt.copy(), max_new_tokens=G,
+        deadline_s=2.0,
+    )
+    for q in [*reqs, doomed]:
+        r.submit(q)
+    while r.has_work:
+        r.step()
+        clock["t"] += 1.0
+    shed = r.shed_errors
+    assert [e.uid for e in shed] == [99]
+    assert shed[0].reason == "deadline_exceeded"
+    assert r.router_stats["shed_requests"] == 1
+    _assert_same_tokens(r.finished, ref)
+
+
+def test_exceeds_pool_checks_every_replica_best_fit(model_and_params):
+    """Heterogeneous replicas: a request only the BIG replica can hold is
+    accepted (and served there); one exceeding both is rejected with the
+    best-fit shortfall, not the first pool's."""
+    _, model, params = model_and_params
+    small = ServeEngine(model, params, num_slots=1, max_seq=10)
+    big = ServeEngine(model, params, num_slots=1, max_seq=P + G)
+    r = ServeRouter(engines=[small, big])
+    cfg, _, _ = model_and_params
+    fits_big = _reqs(cfg, [P])       # needs 14: small is 4 short
+    outs = r.run(fits_big)
+    assert len(outs) == 1 and r.replica_requests == [0, 1]
+    with pytest.raises(AdmissionError) as ei:
+        r.submit(Request(
+            uid=7, prompt=fits_big[0].prompt.copy(), max_new_tokens=12,
+        ))                           # needs 20: best fit is big, short 6
+    assert ei.value.reason == "exceeds_pool"
+    assert "replica 1" in str(ei.value) and "6 tokens" in str(ei.value)
+
+
+def test_all_capable_replicas_dead_sheds_structured(model_and_params):
+    """When the only replicas with capacity for a queued request have all
+    died, the request is shed with ``no_healthy_replica`` — the healthy
+    remainder's work is not torn down by an exception."""
+    _, model, params = model_and_params
+    cfg, _, _ = model_and_params
+    small = ServeEngine(model, params, num_slots=1, max_seq=10)
+    big = ServeEngine(model, params, num_slots=1, max_seq=P + G)
+    r = ServeRouter(engines=[big, small], fault_plan=FaultPlan(kill={0: 1}))
+    fits_small = _reqs(cfg, [4], gen=4)              # either replica
+    only_big = _reqs(cfg, [P], uid0=1)               # replica 0 only
+    outs = r.run(fits_small + only_big)
+    assert [o.uid for o in outs] == [0]
+    assert [e.uid for e in r.shed_errors] == [1]
+    assert r.shed_errors[0].reason == "no_healthy_replica"
+
+
+# ----------------------------------------------------------- chaos property
+@given(chaos=st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=4, deadline=None)
+def test_property_random_faults_token_identical(
+    model_and_params, fault_free, chaos
+):
+    """Chaos pin: a random kill/stall fault on a random replica at a
+    random early step — interleaved with the standard submission burst —
+    never changes a single output token versus the fault-free engine, and
+    never drops a request."""
+    import random
+
+    cfg, _, _ = model_and_params
+    rng = random.Random(chaos)
+    kind = rng.choice(["kill", "stall"])
+    rid = rng.randrange(2)
+    step = rng.randrange(1, 7)
+    plan = (
+        FaultPlan(kill={rid: step}) if kind == "kill"
+        else FaultPlan(stall={rid: step})
+    )
+    r = _router(model_and_params, fault_plan=plan)
+    outs = r.run(_reqs(cfg, fault_free["lens"]))
+    assert not r.shed_errors, f"{kind}@{rid}:{step} shed requests"
+    _assert_same_tokens(outs, fault_free["greedy"])
+    # the replica's step counter only advances while it holds work, so
+    # counter > fault step ⟺ the fault engaged — and an engaged fault
+    # must have been detected (a drained replica has nothing to stall)
+    engaged = r.router_stats["replica_steps"][rid] > step
+    assert r.router_stats["healthy"][rid] is (not engaged), (
+        f"{kind}@{rid}:{step} engaged={engaged} but health disagrees"
+    )
+
+
+# ----------------------------------------------------------------- plumbing
+def test_parse_fault_spec_grammar():
+    plan = parse_fault_spec(["kill:1@8", "stall:0@4", "slow:1@2@0.05"])
+    assert plan.kill == {1: 8}
+    assert plan.stall == {0: 4}
+    assert plan.slow == {1: (2, 0.05)}
+    # precedence on a shared replica: kill > stall > slow
+    assert plan.action(1, 7) == ("slow", 0.05)
+    assert plan.action(1, 8) == ("kill", 0.0)
+    assert plan.action(0, 3) is None
+    for bad in ["boom:1@2", "kill:x@2", "slow:1@2", "kill:1"]:
+        with pytest.raises(ValueError):
+            parse_fault_spec([bad])
+
+
+def test_router_stats_shape(model_and_params):
+    cfg, _, _ = model_and_params
+    r = _router(model_and_params)
+    r.run(_reqs(cfg, [P, 6]))
+    rs = r.router_stats
+    assert rs["replicas"] == 2
+    assert len(rs["occupancy"]) == len(rs["queued"]) == 2
+    assert rs["migrations"] == 0 and rs["shed_requests"] == 0
+    assert rs["affinity_routed"] + rs["balance_routed"] == 2
