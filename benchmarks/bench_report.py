@@ -7,9 +7,12 @@ tokens/sec, TTFT p95, pool occupancy, preemptions, the prefix-cache
 columns (hit rate, prefilled-token savings, CoW splits, suffix-dispatch
 count, steady warm-round seconds) added with prefix sharing, the
 tensor-parallel columns (shard count, sharded tokens/sec) added with
-mesh-sharded serving, and the fault-tolerance columns (migrations,
+mesh-sharded serving, the fault-tolerance columns (migrations,
 migrated requests, sheds, per-replica occupancy, routed tokens/sec) added
-with the multi-replica router. Entries predating a column render as "—".
+with the multi-replica router, and the tiered/quantized-KV columns (int8
+residency ratio and token agreement at an equal pool byte budget,
+host-tier swap-ins, swap-vs-recompute resume walls) added with the
+host↔device KV tier. Entries predating a column render as "—".
 In CI it lands on the job's step summary page.
 
 Output goes to ``$GITHUB_STEP_SUMMARY`` when set (the GitHub Actions
@@ -49,6 +52,11 @@ COLUMNS = (
     ("CoW", "prefix_cow_copies", "{}"),
     ("suffix", "prefix_suffix_dispatches", "{}"),
     ("suffix round (s)", "suffix_round_s", "{:.2f}"),
+    ("int8 resident ×", "kv_int8_residency_ratio", "{:.1f}"),
+    ("int8 agree", "kv_int8_token_agreement", "{:.0%}"),
+    ("swap in", "tiered_swapped_in_pages", "{}"),
+    ("swap wall (s)", "tiered_wall_swap_s", "{:.2f}"),
+    ("recompute wall (s)", "tiered_wall_recompute_s", "{:.2f}"),
     ("migrations", "router_migrations", "{}"),
     ("migrated", "router_migrated_requests", "{}"),
     ("shed", "router_shed_requests", "{}"),

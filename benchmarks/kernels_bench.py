@@ -107,11 +107,21 @@ def decode_occupancy_sweep(
         ),
     }
     out = {}
-    for label, pos in occupancies.items():
-        pos = jnp.asarray(pos, jnp.int32)
+    pos_arrs = {
+        label: jnp.asarray(pos, jnp.int32)
+        for label, pos in occupancies.items()
+    }
+    # warm EVERY (variant, label) dispatch before any timing. bench_min
+    # already excludes each call's own compile, but the first variant timed
+    # would still absorb one-time process costs (allocator growth, dispatch
+    # caches) that later variants inherit for free — min-of-N cannot remove
+    # a bias that never recurs, so pay all of it up front.
+    for fn in fns.values():
+        for pos in pos_arrs.values():
+            jax.block_until_ready(fn(pos))
+    for label, pos in pos_arrs.items():
         for variant, fn in fns.items():
-            us = bench_min(fn, pos, iters=iters)
-            out[f"{variant}_{label}_us"] = us
+            out[f"{variant}_{label}_us"] = bench_min(fn, pos, iters=iters)
     return out
 
 
@@ -219,6 +229,17 @@ def bench_decode_occupancy(rows: dict, *, smoke: bool) -> None:
     sweep = decode_occupancy_sweep(
         occupancies, slots=slots, cap=cap, iters=iters
     )
+    if smoke:
+        # CI guard: page skipping must make an all-shallow paged decode
+        # cheaper than a full-ring unpaged one — the probe's load-bearing
+        # contrast. A silently broken skip path (kernel visiting dead
+        # pages) would otherwise hide inside timing noise.
+        assert sweep["paged_allshallow_us"] < sweep["unpaged_alllive_us"], (
+            "occupancy probe inverted: shallow paged decode "
+            f"({sweep['paged_allshallow_us']:.0f}us) should beat full "
+            f"unpaged ({sweep['unpaged_alllive_us']:.0f}us) — page "
+            "skipping is not skipping"
+        )
     for key, us in sweep.items():
         variant, label, _ = key.split("_", 2)
         name = f"decode_{variant}_{label}"

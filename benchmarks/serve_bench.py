@@ -50,6 +50,21 @@ round-trip (migrations, migrated requests, per-replica occupancy, sheds,
 retries). ``--router-probe`` runs just this probe — the CI chaos smoke
 job's entry point.
 
+Burst mode also runs the KV-QUANT and TIERED-KV probes. ``bench_kv_int8``
+sizes an int8 page pool (int8 payload + per-page-slot per-kv-head fp32
+scales) to a float32 pool's exact device-byte budget
+(``dataclasses.replace(cfg, dtype="float32")``) and asserts ≥ 2×
+concurrent resident sequences, actually serving that many simultaneous
+requests without a single preemption, and records the int8 engine's
+greedy-token agreement against the float32 one. ``bench_tiered`` replays
+an oversubscribed long-prompt trace with the host KV tier ON (preempted
+pages swap to host, resume = device scatter) vs. OFF (resume = full
+re-prefill), asserting bitwise-identical greedy tokens, real host-tier
+swap-ins, and strictly fewer prefilled tokens with swap, and records both
+walls — the swap-vs-recompute resume contrast in the trajectory.
+``--tiered-probe`` runs just these two probes — the CI tiered smoke job's
+entry point.
+
 ``--smoke`` is the CI-sized burst run. Besides the usual
 ``benchmarks/results.json`` entry it APPENDS a timestamped entry to
 ``BENCH_serve.json`` at the repo root — the perf trajectory future PRs
@@ -62,6 +77,7 @@ file is migrated by wrapping its single snapshot as the first entry).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import datetime
 import json
 import os
@@ -347,6 +363,198 @@ def bench_shared_prefix(args) -> dict:
     return {
         "prefix_len": prefix_len,
         "prefill_tokens_saved_frac": saved,
+        **out,
+    }
+
+
+def _pool_kv_bytes(cache) -> int:
+    """Device bytes held by the shared KV pool — payload planes plus, when
+    quantized, the fp32 scale planes. This is the HBM budget the residency
+    probe equates across dtypes."""
+    return sum(
+        int(cache[n].size) * cache[n].dtype.itemsize
+        for n in ("k", "v", "ks", "vs")
+        if n in cache
+    )
+
+
+def bench_kv_int8(args) -> dict:
+    """int8 KV residency probe: at an EQUAL pool byte budget, how many
+    sequences stay resident with int8 pages vs. a float32 pool
+    (``dataclasses.replace(cfg, dtype="float32")`` — same float32 weights
+    drive both engines, only the pool dtype differs)?
+
+    An int8 page costs ``head_dim + 4`` bytes per kv-head per token slot
+    (1-byte payload + one fp32 scale each) against the float32 pool's
+    ``4·head_dim`` — ×3.6 at head_dim 32 — so the probe sizes the int8
+    pool to the float32 pool's measured byte budget, asserts ≥ 2× resident
+    sequences, then actually serves that many SIMULTANEOUS requests
+    through the int8 engine and asserts zero preemptions (the claim is
+    residency, not arithmetic). Quantization quality is pinned in
+    tests/test_kv_int8.py; here the greedy-token agreement against the
+    float32 engine is just recorded (and sanity-bounded)."""
+    cfg = dataclasses.replace(get_smoke_config(args.arch), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    plen = max(args.prompt_lens)
+    max_seq = plen + args.gen
+    pages_per_seq = -(-max_seq // args.page_size)
+    base_slots = 2
+    fp_pages = base_slots * pages_per_seq + 1  # + the reserved scratch page
+    eng_fp = ServeEngine(
+        model, params, num_slots=base_slots, max_seq=max_seq,
+        prefill="chunked", paged_cache=True, page_size=args.page_size,
+        num_pages=fp_pages,
+    )
+    fp_bytes = _pool_kv_bytes(eng_fp.cache)
+    # int8 page bytes from the float32 pool's geometry: payload 4 → 1
+    # byte/element plus one fp32 scale per (token slot, kv head) per page
+    layers, _, page, hkv, hd = eng_fp.cache["k"].shape
+    per_page_int8 = 2 * layers * page * hkv * (hd + 4)
+    int8_pages = int(fp_bytes // per_page_int8)
+    resident_fp = (fp_pages - 1) // pages_per_seq
+    resident_int8 = (int8_pages - 1) // pages_per_seq
+    assert resident_int8 >= 2 * resident_fp, (
+        f"int8 pool at the float32 byte budget holds only {resident_int8} "
+        f"resident sequences vs {resident_fp} float32 (< 2x)"
+    )
+    eng8 = ServeEngine(
+        model, params, num_slots=resident_int8, max_seq=max_seq,
+        prefill="chunked", paged_cache=True, page_size=args.page_size,
+        num_pages=int8_pages, kv_dtype="int8",
+    )
+    int8_bytes = _pool_kv_bytes(eng8.cache)
+    assert int8_bytes <= fp_bytes, (
+        f"int8 pool ({int8_bytes}B) exceeds the float32 budget ({fp_bytes}B)"
+    )
+    rng = np.random.default_rng(args.seed)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        for _ in range(resident_int8)
+    ]
+
+    def trace():
+        return [
+            Request(uid=r, prompt=p, max_new_tokens=args.gen)
+            for r, p in enumerate(prompts)
+        ]
+
+    t0 = time.time()
+    outs8 = eng8.run(trace())
+    wall8 = time.time() - t0
+    pool8 = eng8.pool_stats
+    assert pool8["preemptions"] == 0, (
+        f"{resident_int8} sequences did not fit resident in the int8 pool "
+        f"({pool8['preemptions']} preemptions)"
+    )
+    outs_fp = eng_fp.run(trace())  # 2 slots: same trace, serialized
+    tok8 = [o.tokens for o in outs8]
+    tokfp = [o.tokens for o in outs_fp]
+    agreement = sum(a == b for a, b in zip(tok8, tokfp)) / len(tok8)
+    assert agreement >= 0.5, (
+        f"int8 engine agreed with float32 on only {agreement:.0%} of "
+        "requests — quantization is off the rails, see tests/test_kv_int8.py"
+    )
+    return {
+        "pool_bytes_fp32": fp_bytes,
+        "pool_bytes_int8": int8_bytes,
+        "pages_fp32": fp_pages,
+        "pages_int8": int8_pages,
+        "pages_per_seq": pages_per_seq,
+        "resident_seqs_fp32": resident_fp,
+        "resident_seqs_int8": resident_int8,
+        "residency_ratio": resident_int8 / max(resident_fp, 1),
+        "token_agreement": agreement,
+        "wall_seconds_int8": wall8,
+        "occupancy_max_int8": pool8["occupancy_max"],
+    }
+
+
+def bench_tiered(args) -> dict:
+    """Tiered-KV resume probe: the SAME oversubscribed trace with the host
+    tier ON (preempted pages swap out to host, resume = one device
+    scatter + table rewrite) vs. OFF (resume = re-prefill the victim's
+    whole token stream). Long prompts + short gens make the run
+    prefill-dominated, so the recompute engine's extra resume prefills
+    land directly in its wall time.
+
+    Asserted: bitwise-identical greedy tokens across both engines, both
+    engines actually preempt, the swap engine resumes from the host tier
+    (``swapped_in_pages > 0`` — the CI smoke gate for the tiered path),
+    and it prefills STRICTLY fewer tokens than the recompute engine (the
+    deterministic form of "swap resume does no prefill work"). Walls for
+    both engines go to the trajectory as the resume-cost contrast."""
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    plen = 24 * args.page_size  # long prompts: resume cost ≈ prefill cost
+    gen = 4
+    max_seq = plen + gen
+    pages_per_seq = -(-max_seq // args.page_size)
+    # both prompts fit, both COMPLETIONS don't: the collision lands
+    # mid-decode, which is where a swap resume is a pure page scatter
+    num_pages = 2 * pages_per_seq
+    n_reqs = 4
+    rng = np.random.default_rng(args.seed + 1)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        for _ in range(n_reqs)
+    ]
+    out = {}
+    for label, host_pages in (("recompute", 0), ("swap", n_reqs * pages_per_seq)):
+        engine = ServeEngine(
+            model, params, num_slots=2, max_seq=max_seq, prefill="chunked",
+            paged_cache=True, page_size=args.page_size, num_pages=num_pages,
+            prefix_cache=False, host_pages=host_pages,
+        )
+        reqs = [
+            Request(uid=r, prompt=prompts[r], max_new_tokens=gen)
+            for r in range(n_reqs)
+        ]
+        engine.warm([plen])
+        t0 = time.time()
+        outs = engine.run(reqs)
+        wall = time.time() - t0
+        out[label] = {
+            "wall_seconds": wall,
+            "prefill_tokens": engine.prefill_tokens,
+            "prefill_dispatches": engine.prefill_dispatches,
+            "engine_steps": engine.steps,
+            "pool": engine.pool_stats,
+            "generated": [o.tokens for o in outs],
+        }
+    sw, rc = out["swap"], out["recompute"]
+    assert sw["generated"] == rc["generated"], (
+        "host-tier swap changed greedy output"
+    )
+    assert rc["pool"]["preemptions"] > 0 and sw["pool"]["preemptions"] > 0, (
+        f"tight pool never preempted (recompute "
+        f"{rc['pool']['preemptions']}, swap {sw['pool']['preemptions']}) — "
+        "the probe is not exercising resume at all"
+    )
+    assert sw["pool"]["swapped_in_pages"] > 0, (
+        "swap engine preempted but never resumed from the host tier"
+    )
+    assert rc["pool"]["swapped_in_pages"] == 0, (
+        "recompute engine (host tier off) reported host swap-ins"
+    )
+    assert sw["prefill_tokens"] < rc["prefill_tokens"], (
+        f"swap resume should prefill fewer tokens than recompute "
+        f"({sw['prefill_tokens']} vs {rc['prefill_tokens']})"
+    )
+    # prefill-dominated by construction, so the extra resume prefills are
+    # the wall-time story (locally ~2x; the margin absorbs CI jitter)
+    assert sw["wall_seconds"] < rc["wall_seconds"], (
+        f"swap resume was not faster than recompute "
+        f"({sw['wall_seconds']:.3f}s vs {rc['wall_seconds']:.3f}s)"
+    )
+    for m in out.values():
+        del m["generated"]
+    return {
+        "prompt_len": plen,
+        "gen_tokens": gen,
+        "num_pages": num_pages,
+        "requests": n_reqs,
         **out,
     }
 
@@ -649,6 +857,8 @@ def bench_burst(args) -> dict:
         "window": args.window,
         "decode_occupancy": bench_decode_occupancy(slots=args.slots),
         "shared_prefix": bench_shared_prefix(args),
+        "kv_int8": bench_kv_int8(args),
+        "tiered": bench_tiered(args),
         "sharded": bench_sharded(args),
         "router": bench_router(args),
         **out,
@@ -671,6 +881,8 @@ def write_bench_seed(res: dict) -> None:
     sp = res["shared_prefix"]
     sh = res["sharded"]
     rt = res["router"]
+    k8 = res["kv_int8"]
+    td = res["tiered"]
     entry = {
         "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"
@@ -733,6 +945,19 @@ def write_bench_seed(res: dict) -> None:
         "router_tokens_per_second_sampled": rt["sampled"][
             "tokens_per_second"
         ],
+        "kv_int8_resident_seqs": k8["resident_seqs_int8"],
+        "kv_int8_resident_seqs_fp32": k8["resident_seqs_fp32"],
+        "kv_int8_residency_ratio": k8["residency_ratio"],
+        "kv_int8_pool_bytes": k8["pool_bytes_int8"],
+        "kv_fp32_pool_bytes": k8["pool_bytes_fp32"],
+        "kv_int8_token_agreement": k8["token_agreement"],
+        "tiered_preemptions": td["swap"]["pool"]["preemptions"],
+        "tiered_swapped_out_pages": td["swap"]["pool"]["swapped_out_pages"],
+        "tiered_swapped_in_pages": td["swap"]["pool"]["swapped_in_pages"],
+        "tiered_wall_swap_s": td["swap"]["wall_seconds"],
+        "tiered_wall_recompute_s": td["recompute"]["wall_seconds"],
+        "tiered_prefill_tokens_swap": td["swap"]["prefill_tokens"],
+        "tiered_prefill_tokens_recompute": td["recompute"]["prefill_tokens"],
     }
     trajectory = {"schema": 2, "entries": []}
     if os.path.exists(BENCH_SEED_PATH):
@@ -816,6 +1041,12 @@ def _parser():
                     "dropped requests and greedy+sampled token identity "
                     "vs. a fault-free engine) and print its JSON — the CI "
                     "chaos smoke job entry point")
+    ap.add_argument("--tiered-probe", action="store_true",
+                    help="run ONLY the tiered-KV probes (int8 page pool "
+                    "residency at the fp32 byte budget; swap-vs-recompute "
+                    "preemption resume — asserts swapped_in_pages > 0, "
+                    "fewer prefill tokens, and token identity) and print "
+                    "their JSON — the CI tiered smoke job entry point")
     ap.add_argument("--kill-step", type=int, default=3,
                     help="[router probe] kill replica 0 at its own step "
                     "number (default lands mid-decode for smoke sizes)")
@@ -855,6 +1086,32 @@ def run(argv: list[str] | None = None):
             "to fault-free engine",
         )
         print("ROUTER_PROBE_JSON " + json.dumps(res))
+        return res
+
+    if args.tiered_probe:
+        res = {"kv_int8": bench_kv_int8(args), "tiered": bench_tiered(args)}
+        k8, td = res["kv_int8"], res["tiered"]
+        emit(
+            "serve_kv_int8",
+            k8["residency_ratio"],
+            f"int8 pool at the fp32 byte budget: {k8['resident_seqs_int8']} "
+            f"resident seqs vs {k8['resident_seqs_fp32']} fp32 "
+            f"({k8['pool_bytes_int8']}B vs {k8['pool_bytes_fp32']}B), 0 "
+            f"preempt, token agreement {k8['token_agreement']:.0%}",
+        )
+        emit(
+            "serve_tiered_kv",
+            td["swap"]["pool"]["swapped_in_pages"],
+            f"tight pool {td['num_pages']} pages: swap resume "
+            f"{td['swap']['wall_seconds']:.2f}s "
+            f"({td['swap']['pool']['swapped_out_pages']}↓/"
+            f"{td['swap']['pool']['swapped_in_pages']}↑ pages, "
+            f"{td['swap']['prefill_tokens']} prefill tok) vs recompute "
+            f"{td['recompute']['wall_seconds']:.2f}s "
+            f"({td['recompute']['prefill_tokens']} prefill tok) — tokens "
+            "identical",
+        )
+        print("TIERED_PROBE_JSON " + json.dumps(res))
         return res
 
     if args.burst > 0:
@@ -903,6 +1160,28 @@ def run(argv: list[str] | None = None):
             f"steady warm round {sp['prefix_on']['steady_round_seconds']:.2f}s"
             f" vs {sp['prefix_off']['steady_round_seconds']:.2f}s cold) — "
             "tokens identical",
+        )
+        k8 = res["kv_int8"]
+        emit(
+            "serve_kv_int8",
+            k8["residency_ratio"],
+            f"int8 pool at the fp32 byte budget: {k8['resident_seqs_int8']} "
+            f"resident seqs vs {k8['resident_seqs_fp32']} fp32 "
+            f"({k8['pool_bytes_int8']}B vs {k8['pool_bytes_fp32']}B), 0 "
+            f"preempt, token agreement {k8['token_agreement']:.0%}",
+        )
+        td = res["tiered"]
+        emit(
+            "serve_tiered_kv",
+            td["swap"]["pool"]["swapped_in_pages"],
+            f"tight pool {td['num_pages']} pages: swap resume "
+            f"{td['swap']['wall_seconds']:.2f}s "
+            f"({td['swap']['pool']['swapped_out_pages']}↓/"
+            f"{td['swap']['pool']['swapped_in_pages']}↑ pages, "
+            f"{td['swap']['prefill_tokens']} prefill tok) vs recompute "
+            f"{td['recompute']['wall_seconds']:.2f}s "
+            f"({td['recompute']['prefill_tokens']} prefill tok) — tokens "
+            "identical",
         )
         sh = res["sharded"]
         emit(

@@ -36,6 +36,13 @@ LOCAL coordinates, identical to ``flash_prefill``. The streaming order
 kernel is the flash reassociation of the same reduction; tests pin it
 allclose against ``ref.suffix_prefill_ref`` and the engine pins greedy
 tokens bitwise through ``use_kernel=True``.
+
+int8 pool mode (``pool_k_scale``/``pool_v_scale`` passed): prefix pages are
+int8 with (P, page, Hkv) f32 scales riding the same table indirection;
+the prefix phase dequantizes in-body to the q dtype (bitwise
+``quantize.kv_dequant``) before the unchanged flash math, while the fresh
+suffix k/v stay fp — bitwise equal to the fp kernel over the
+jnp-dequantized pool.
 """
 from __future__ import annotations
 
@@ -54,10 +61,17 @@ NEG = -2.0**30
 def _suffix_kernel(
     starts_ref, pp_ref, table_ref,
     q_ref, ks_ref, vs_ref, pk_ref, pv_ref,
-    o_ref, m_ref, l_ref, acc_ref,
-    *, bq: int, bk: int, w: int, page: int, n_total: int, g: int, hd: int,
-    scale: float,
+    *rest,
+    bq: int, bk: int, w: int, page: int, n_total: int, g: int, hd: int,
+    scale: float, deq=None,
 ):
+    # rest = ([pks_ref, pvs_ref,] o_ref, m_ref, l_ref, acc_ref) — with
+    # ``deq`` set (int8 pool mode) the POOL pages are int8 and pks/pvs hold
+    # one f32 scale per page slot per kv-head; the fresh suffix k/v stay fp.
+    if deq is not None:
+        pks_ref, pvs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     i = pl.program_id(2)          # query block
     j = pl.program_id(3)          # streaming axis: W prefix pages, then
@@ -87,8 +101,14 @@ def _suffix_kernel(
     @pl.when((j < w) & (j < pp_ref[b]))
     def _prefix_block():
         q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, hd)
-        k = pk_ref[0, :, 0].astype(jnp.float32)          # (page, hd)
-        v = pv_ref[0, :, 0].astype(jnp.float32)
+        k = pk_ref[0, :, 0]                              # (page, hd)
+        v = pv_ref[0, :, 0]
+        if deq is not None:
+            # in-body dequant, bitwise ``kv_dequant(..., dtype=deq)``
+            k = (k.astype(jnp.float32) * pks_ref[0, :, 0][:, None]).astype(deq)
+            v = (v.astype(jnp.float32) * pvs_ref[0, :, 0][:, None]).astype(deq)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                        # (BQ·G, page)
@@ -141,6 +161,8 @@ def suffix_prefill(
     *,
     prefix_width: int,   # STATIC pages streamed per row (bucketed
     #                      ceil(max(starts)/page); must cover every row)
+    pool_k_scale: jax.Array | None = None,  # (P, page, Hkv) f32 — int8 pool
+    pool_v_scale: jax.Array | None = None,
     bq: int = 256,
     bk: int = 256,
     interpret: bool = True,
@@ -151,6 +173,8 @@ def suffix_prefill(
     t_w = table.shape[1]
     w = min(prefix_width, t_w)
     assert w >= 1, f"prefix_width must be >= 1, got {prefix_width}"
+    quant = pool_k_scale is not None
+    assert quant == (pool_v_scale is not None), "need both or neither scale"
     bq = _block_size(s, bq)
     bk = _block_size(s, bk)
     scale = hd**-0.5
@@ -164,7 +188,7 @@ def suffix_prefill(
 
     kernel = functools.partial(
         _suffix_kernel, bq=bq, bk=bk, w=w, page=page, n_total=n_total,
-        g=g, hd=hd, scale=scale,
+        g=g, hd=hd, scale=scale, deq=q.dtype if quant else None,
     )
 
     def q_map(b, h, i, j, *_):
@@ -183,16 +207,29 @@ def suffix_prefill(
         jp = jnp.minimum(jnp.minimum(j, w - 1), pp_ref[b] - 1)
         return (table_ref[b, jnp.maximum(jp, 0)], 0, h, 0)
 
+    def pool_scale_map(b, h, i, j, starts_ref, pp_ref, table_ref):
+        jp = jnp.minimum(jnp.minimum(j, w - 1), pp_ref[b] - 1)
+        return (table_ref[b, jnp.maximum(jp, 0)], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, 1, g, hd), q_map),
+        pl.BlockSpec((1, bk, 1, hd), suf_map),
+        pl.BlockSpec((1, bk, 1, hd), suf_map),
+        pl.BlockSpec((1, page, 1, hd), pool_map),
+        pl.BlockSpec((1, page, 1, hd), pool_map),
+    ]
+    inputs = [q, k_suf, v_suf, pool_k, pool_v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, page, 1), pool_scale_map),
+            pl.BlockSpec((1, page, 1), pool_scale_map),
+        ]
+        inputs += [pool_k_scale, pool_v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(n, hkv, s // bq, n_total),
-        in_specs=[
-            pl.BlockSpec((1, bq, 1, g, hd), q_map),
-            pl.BlockSpec((1, bk, 1, hd), suf_map),
-            pl.BlockSpec((1, bk, 1, hd), suf_map),
-            pl.BlockSpec((1, page, 1, hd), pool_map),
-            pl.BlockSpec((1, page, 1, hd), pool_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, 1, g, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((bq * g, 1), jnp.float32),
@@ -205,4 +242,4 @@ def suffix_prefill(
         out_shape=jax.ShapeDtypeStruct((n, s, hkv, g, hd), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(starts, pp, table, q, k_suf, v_suf, pool_k, pool_v)
+    )(starts, pp, table, *inputs)

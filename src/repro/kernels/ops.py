@@ -123,6 +123,8 @@ def swa_decode_attention(
     use_kernel: bool = False,
     paged: bool = False,
     table: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     """(B, Hkv, G, hd) x ring cache (B, C, Hkv, hd) → (B, Hkv, G, hd).
@@ -136,14 +138,26 @@ def swa_decode_attention(
     (P, page, Hkv, hd) and ``table`` (B, T) maps each row's logical pages
     into it (capacity = T·page). The kernel reads the pool through
     scalar-prefetched table rows; the reference path gathers the pages
-    into contiguous rings first — both bitwise-match the ring semantics."""
+    into contiguous rings first — both bitwise-match the ring semantics.
+
+    ``k_scale``/``v_scale`` (with ``table``) select the int8-pool variant:
+    pages are int8 with (P, page, Hkv) f32 scales; the kernel dequantizes
+    in-body and the reference dequantizes the pool before gathering —
+    bitwise the same value set either way."""
     if table is not None:
         if use_kernel:
             return _paged.paged_decode(
                 q, k_cache, v_cache, pos, window, table=table,
-                interpret=interpret,
+                k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+            )
+        if k_scale is not None:
+            return _ref.paged_table_decode_int8_ref(
+                q, k_cache, v_cache, k_scale, v_scale, pos, table, window
             )
         return _ref.paged_table_decode_ref(q, k_cache, v_cache, pos, table, window)
+    assert k_scale is None and v_scale is None, (
+        "int8 pool scales require page-table mode"
+    )
     if use_kernel:
         if paged:
             return _paged.paged_decode(
@@ -182,6 +196,8 @@ def suffix_prefill_attention(
     starts: jax.Array,
     *,
     prefix_width: int,
+    pool_k_scale: jax.Array | None = None,
+    pool_v_scale: jax.Array | None = None,
     use_kernel: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
@@ -191,13 +207,21 @@ def suffix_prefill_attention(
     table: (n,T); starts: (n,). ``prefix_width`` statically bounds the pages
     streamed per row (engine buckets max(starts) up a pow2 ladder). The
     reference path is the displaced gather-concat attend — the house-rules
-    oracle for the kernel."""
+    oracle for the kernel. ``pool_k_scale``/``pool_v_scale`` select the
+    int8-pool variant (in-body dequant in the kernel, dequantized-pool
+    gather in the reference)."""
     if use_kernel:
         from repro.kernels import flash_suffix_prefill as _fsp
 
         return _fsp.suffix_prefill(
             q, k_suf, v_suf, pool_k, pool_v, table, starts,
-            prefix_width=prefix_width, interpret=interpret,
+            prefix_width=prefix_width, pool_k_scale=pool_k_scale,
+            pool_v_scale=pool_v_scale, interpret=interpret,
+        )
+    if pool_k_scale is not None:
+        return _ref.suffix_prefill_int8_ref(
+            q, k_suf, v_suf, pool_k, pool_v, pool_k_scale, pool_v_scale,
+            table, starts, prefix_width=prefix_width,
         )
     return _ref.suffix_prefill_ref(
         q, k_suf, v_suf, pool_k, pool_v, table, starts,

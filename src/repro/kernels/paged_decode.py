@@ -47,6 +47,15 @@ equal to the contiguous paged kernel at the SAME page size run over the
 gathered cache ``pool[table].reshape(B, C, Hkv, hd)`` (tests pin exactly
 that; comparing against ``swa_decode`` instead is only allclose when the
 page size differs from its auto chunk — online softmax reassociates).
+
+int8 pool mode (``k_scale``/``v_scale`` passed with ``table``): the pool
+pages are int8 with one f32 scale per page slot per kv-head, shape
+(P, page, Hkv), riding the SAME scalar-prefetched table indirection as the
+pages themselves. The body dequantizes each block to the fp pool dtype
+(``kv_quant``'s row scheme inverted: ``q·s`` in f32, cast) before the
+unchanged online-softmax math, so the int8 kernel is bitwise equal to the
+fp kernel run over the jnp-dequantized pool — the pin the tests use; the
+tolerance story vs. the fp ENGINE lives at engine level.
 """
 from __future__ import annotations
 
@@ -63,14 +72,23 @@ NEG = -2.0**30
 
 
 def _paged_kernel(
-    *refs, page: int, cap: int, window: int, scale: float,
+    *refs, page: int, cap: int, window: int, scale: float, deq=None,
 ):
     # refs = (pos_ref, pages_ref, [table_ref,] q_ref, k_ref, v_ref,
-    #         o_ref, m_ref, l_ref, acc_ref) — the optional table_ref (page-
-    #         table mode) is consumed by the kv index maps, not the body:
-    #         the body masks LOGICAL slot indices, identical in both modes.
+    #         [ks_ref, vs_ref,] o_ref, m_ref, l_ref, acc_ref) — the optional
+    #         table_ref (page-table mode) is consumed by the kv index maps,
+    #         not the body: the body masks LOGICAL slot indices, identical
+    #         in both modes. With ``deq`` set (int8 pool mode) the k/v pool
+    #         blocks are int8 and ks/vs carry one f32 scale per page slot
+    #         per kv-head; dequant happens here, in-body, reproducing
+    #         ``quantize.kv_dequant(..., dtype=deq)`` bitwise so the output
+    #         equals the fp kernel run over the jnp-dequantized pool.
     pos_ref, pages_ref = refs[0], refs[1]
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs[-7:]
+    if deq is not None:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs[-9:]
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs[-7:]
     b = pl.program_id(0)
     j = pl.program_id(2)
     n_pages = cap // page
@@ -85,8 +103,13 @@ def _paged_kernel(
     def _live_page():
         pos = pos_ref[b]
         q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
-        k = k_ref[0, :, 0].astype(jnp.float32)         # (page, hd)
-        v = v_ref[0, :, 0].astype(jnp.float32)
+        k = k_ref[0, :, 0]                             # (page, hd)
+        v = v_ref[0, :, 0]
+        if deq is not None:
+            k = (k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]).astype(deq)
+            v = (v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]).astype(deq)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -127,13 +150,19 @@ def paged_decode(
     *,
     page: int = 0,         # 0 = auto (largest of 512/256/128/64 dividing C)
     table: jax.Array | None = None,  # (B, T) i32 page table → pool mode
+    k_scale: jax.Array | None = None,  # (P, page, Hkv) f32 — int8 pool mode
+    v_scale: jax.Array | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     b, hkv, g, hd = q.shape
     if table is not None:
         return _table_decode(
-            q, k_cache, v_cache, pos, table, window=window, interpret=interpret
+            q, k_cache, v_cache, pos, table, window=window,
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret,
         )
+    assert k_scale is None and v_scale is None, (
+        "int8 pool scales require page-table mode"
+    )
     cap = k_cache.shape[1]
     pg = page or _chunk(cap)
     assert cap % pg == 0, f"cap {cap} not divisible by page {pg}"
@@ -187,6 +216,9 @@ def _table_decode(
     #                        clamps to the last live page first)
     *,
     window: int = 0,
+    k_scale: jax.Array | None = None,  # (P, page, Hkv) f32 per-slot-per-head
+    v_scale: jax.Array | None = None,  # scales → int8 pool mode (dequant
+    #                        in-body to q.dtype, the fp pool dtype)
     interpret: bool = True,
 ) -> jax.Array:
     b, hkv, g, hd = q.shape
@@ -194,6 +226,8 @@ def _table_decode(
     t_w = table.shape[1]
     cap = t_w * pg         # logical ring capacity per row
     scale = hd**-0.5
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "need both or neither scale pool"
 
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     live = jnp.minimum(pos_b + 1, cap)
@@ -201,7 +235,8 @@ def _table_decode(
     table = jnp.asarray(table, jnp.int32)
 
     kernel = functools.partial(
-        _paged_kernel, page=pg, cap=cap, window=window, scale=scale
+        _paged_kernel, page=pg, cap=cap, window=window, scale=scale,
+        deq=q.dtype if quant else None,
     )
 
     def kv_map(b_, h, j, pos_ref, pages_ref, table_ref):
@@ -212,14 +247,27 @@ def _table_decode(
         # the target of a fresh DMA for a live computation)
         return (table_ref[b_, jnp.minimum(j, pages_ref[b_] - 1)], 0, h, 0)
 
+    def scale_map(b_, h, j, pos_ref, pages_ref, table_ref):
+        # scales ride the same table indirection as their pages
+        return (table_ref[b_, jnp.minimum(j, pages_ref[b_] - 1)], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
+        pl.BlockSpec((1, pg, 1, hd), kv_map),
+        pl.BlockSpec((1, pg, 1, hd), kv_map),
+    ]
+    inputs = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, pg, 1), scale_map),
+            pl.BlockSpec((1, pg, 1), scale_map),
+        ]
+        inputs += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, hkv, t_w),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
-            pl.BlockSpec((1, pg, 1, hd), kv_map),
-            pl.BlockSpec((1, pg, 1, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h, j, *_: (b_, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
@@ -232,4 +280,4 @@ def _table_decode(
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(pos_b, pages, table, q, k_pool, v_pool)
+    )(pos_b, pages, table, *inputs)

@@ -124,6 +124,52 @@ def gather_pages_ref(pool: jax.Array, table: jax.Array) -> jax.Array:
     return pool[table].reshape(b, t_w * page, hkv, hd)
 
 
+def dequant_pool_ref(
+    pool_q: jax.Array,   # (P, page, Hkv, hd) int8 pages
+    scales: jax.Array,   # (P, page, Hkv) f32 per-slot-per-head scales
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantize an int8 page pool to its fp equivalent (the value set the
+    int8 kernels' in-body dequant reproduces bitwise): q·s in f32, cast.
+    Identical math to ``quantize.kv_dequant`` — duplicated here so the
+    oracle module stays self-contained."""
+    return (pool_q.astype(jnp.float32) * scales[..., None]).astype(dtype)
+
+
+def paged_table_decode_int8_ref(
+    q: jax.Array,        # (B, Hkv, G, hd)
+    k_pool: jax.Array,   # (P, page, Hkv, hd) int8
+    v_pool: jax.Array,   # (P, page, Hkv, hd) int8
+    k_scale: jax.Array,  # (P, page, Hkv) f32
+    v_scale: jax.Array,  # (P, page, Hkv) f32
+    pos: jax.Array,
+    table: jax.Array,
+    window: int,
+) -> jax.Array:
+    """int8 page-table decode oracle: dequantize the pool to the q dtype
+    (what the kernel does in-body), then the plain gather + ring oracle."""
+    return paged_table_decode_ref(
+        q,
+        dequant_pool_ref(k_pool, k_scale, q.dtype),
+        dequant_pool_ref(v_pool, v_scale, q.dtype),
+        pos, table, window,
+    )
+
+
+def suffix_prefill_int8_ref(
+    q, k_suf, v_suf, pool_k, pool_v, k_scale, v_scale, table, starts,
+    *, prefix_width=None,
+):
+    """int8-pool suffix-prefill oracle: dequantized pool through the
+    gather-concat reference."""
+    return suffix_prefill_ref(
+        q, k_suf, v_suf,
+        dequant_pool_ref(pool_k, k_scale, q.dtype),
+        dequant_pool_ref(pool_v, v_scale, q.dtype),
+        table, starts, prefix_width=prefix_width,
+    )
+
+
 def paged_table_decode_ref(
     q: jax.Array,       # (B, Hkv, G, hd)
     k_pool: jax.Array,  # (P, page, Hkv, hd) shared physical page pool

@@ -248,16 +248,101 @@ class PagePool:
                 self._rc[p] = rc - 1
 
 
+class HostTier:
+    """Host-RAM page store backing the device pool: the second tier of the
+    KV cache hierarchy.
+
+    Two kinds of entry share one LRU budget of ``capacity_pages``:
+
+    * SWAP entries (key ``("swap", uid)``): every page of a preempted slot,
+      gathered device→host before the pool reference drops. Re-admission
+      restores them with one batched host→device scatter instead of
+      recomputing the KV through a resume re-prefill.
+    * PREFIX entries (key ``("prefix", token_tuple)``): a prefix-index page
+      demoted at LRU eviction; a later radix match promotes it back into a
+      freshly allocated pool page.
+
+    Content is immutable once stored (pages are copied, never aliased), so
+    a dropped entry is never a correctness event — the engine falls back to
+    recompute (swap) or a cold prefill (prefix). Pure host-side numpy; all
+    device traffic lives in the engine's gather/scatter jits."""
+
+    def __init__(self, capacity_pages: int):
+        if capacity_pages < 1:
+            raise ValueError(
+                f"host tier capacity must be >= 1 page, got {capacity_pages}"
+            )
+        self.capacity_pages = capacity_pages
+        self._entries: collections.OrderedDict[tuple, dict] = (
+            collections.OrderedDict()
+        )
+        self._pages = 0
+        self.evictions = 0  # entries dropped by LRU pressure
+
+    @property
+    def pages(self) -> int:
+        """Pages currently resident in the tier."""
+        return self._pages
+
+    def put(self, key: tuple, arrays: dict, n_pages: int) -> bool:
+        """Store ``arrays`` (name → (L, n_pages, …) numpy) under ``key``,
+        LRU-evicting older entries to fit. False (and no store) when the
+        entry alone exceeds the tier."""
+        if n_pages > self.capacity_pages:
+            return False
+        self.pop(key)
+        while self._pages + n_pages > self.capacity_pages:
+            _, old = self._entries.popitem(last=False)
+            self._pages -= old["n"]
+            self.evictions += 1
+        self._entries[key] = {"arrays": arrays, "n": n_pages}
+        self._pages += n_pages
+        return True
+
+    def get(self, key: tuple) -> dict | None:
+        """Entry arrays for ``key`` (LRU touch), or None."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        self._entries.move_to_end(key)
+        return entry["arrays"]
+
+    def n_pages(self, key: tuple) -> int:
+        entry = self._entries.get(key)
+        return 0 if entry is None else entry["n"]
+
+    def pop(self, key: tuple) -> dict | None:
+        entry = self._entries.pop(key, None)
+        if entry is None:
+            return None
+        self._pages -= entry["n"]
+        return entry["arrays"]
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._pages = 0
+
+
 @dataclasses.dataclass
 class _ResumeState:
     """Generation state of a preempted request, carried across its trip
     back through the waiting queue. Re-admission prefills prompt +
     generated[:-1] in one chunked forward, restores these fields, and
-    continues decoding exactly where the preempted slot stopped."""
+    continues decoding exactly where the preempted slot stopped.
+
+    ``host_key`` marks a SWAPPED preemption: the slot's KV pages were
+    copied to the ``HostTier`` before its pool refs dropped, and
+    re-admission restores them with a device scatter (no prefill at all) —
+    bitwise the pages the slot held, so token-identity is trivial. A
+    dropped tier entry (LRU) falls back to the recompute path above.
+    ``pos`` is the slot's write position at preemption (tokens written =
+    prompt + generated[:-1] for a decoding slot)."""
     generated: list[int]
     key: jax.Array | None
     first_token_time: float
     admit_time: float
+    host_key: tuple | None = None
+    pos: int = 0
 
 
 @dataclasses.dataclass
@@ -467,6 +552,9 @@ class ServeEngine:
         watermark_pages: int = 0,
         prefix_cache: bool = False,
         prefix_cache_pages: int = 0,
+        kv_dtype: str = "fp",
+        host_pages: int = 0,
+        swap: bool = True,
         eos_id: int | None = None,
         seed: int = 0,
         max_wall_s: float = 0.0,
@@ -542,6 +630,18 @@ class ServeEngine:
         # itself (ring mode never preempts).
         self._resume: dict[int, _ResumeState] = {}
         self._admit_seq = 0
+        if kv_dtype not in ("fp", "int8"):
+            raise ValueError(f"kv_dtype must be 'fp' or 'int8', got {kv_dtype!r}")
+        if kv_dtype == "int8" and not paged_cache:
+            raise ValueError(
+                "kv_dtype='int8' quantizes POOL pages; it requires "
+                "paged_cache=True (the contiguous ring cache stays fp)"
+            )
+        if host_pages > 0 and not paged_cache:
+            raise ValueError(
+                "host_pages tiers the page pool; it requires paged_cache=True"
+            )
+        self.kv_dtype = kv_dtype
         if paged_cache:
             if model.init_paged_cache is None or model.prefill_slots is None:
                 raise ValueError(
@@ -585,8 +685,23 @@ class ServeEngine:
             self._slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
             self.cache = model.init_paged_cache(
                 params, num_slots, num_pages, page_size, self.table_width,
-                window=window,
+                window=window, kv_dtype=kv_dtype,
             )
+            # Host tier: second level of the KV hierarchy. Gated off under a
+            # mesh — the pool is sharded across devices there and the
+            # host-side gather/scatter below assumes a single-device layout.
+            self.swap_disabled_reason = None
+            if host_pages > 0 and mesh is not None:
+                self.swap_disabled_reason = (
+                    "mesh serving (KV pool is sharded; host tier assumes a "
+                    "single-device pool)"
+                )
+            self.host = (
+                HostTier(host_pages)
+                if host_pages > 0 and self.swap_disabled_reason is None
+                else None
+            )
+            self.swap = swap and self.host is not None
             # Prefix sharing rides the page table: it needs chunked prefill
             # (suffix rounds) and a non-wrapping logical ring (windowless).
             # A requested-but-unsatisfiable config stays off, WITH a named
@@ -606,13 +721,20 @@ class ServeEngine:
                         "batched admission)"
                     )
             self.prefix = (
-                PrefixCache(self.pool, prefix_cache_pages)
+                PrefixCache(
+                    self.pool, prefix_cache_pages,
+                    demote_fn=self._demote_prefix_page if self.host else None,
+                    promote_fn=self._promote_prefix_page if self.host else None,
+                )
                 if prefix_cache and self.prefix_disabled_reason is None
                 else None
             )
         else:
             self.pool = None
             self.prefix = None
+            self.host = None
+            self.swap = False
+            self.swap_disabled_reason = None
             self.prefix_disabled_reason = (
                 "paged_cache=False (prefix sharing rides the page table)"
                 if prefix_cache
@@ -656,6 +778,10 @@ class ServeEngine:
         self.prefix_resume_hit_tokens = 0
         self.prefill_tokens = 0
         self.cow_copies = 0
+        self.swapped_out_pages = 0
+        self.swapped_in_pages = 0
+        self.host_demoted_pages = 0
+        self.host_promote_hits = 0
         # Every hot-path jit donates the cache pytree (argument 1): the ring
         # buffers are updated in place instead of being functionally copied
         # through each step. Each wrapper body runs exactly once per input
@@ -745,17 +871,44 @@ class ServeEngine:
             self._prefill_slots = None
             self._prefill_suffix = None
 
-        # COW page split: copy one physical page (all layers) inside the
-        # donated cache — in place under donation, one compile total
+        # Pool arrays that carry page content (int8 mode adds the scale
+        # planes) — the unit every page-granular copy/swap moves together.
+        kv_names = tuple(
+            n for n in ("k", "v", "ks", "vs")
+            if paged_cache and n in self.cache
+        )
+        self._kv_names = kv_names
+
+        # COW page split: copy one physical page (all layers, every pool
+        # plane) inside the donated cache — in place under donation, one
+        # compile total
         def _copy_page_fn(c, src, dst):
-            return {
-                **c,
-                "k": c["k"].at[:, dst].set(c["k"][:, src]),
-                "v": c["v"].at[:, dst].set(c["v"][:, src]),
-            }
+            out = dict(c)
+            for n in kv_names:
+                out[n] = c[n].at[:, dst].set(c[n][:, src])
+            return out
 
         self._copy_page = jax.jit(
             _copy_page_fn, donate_argnums=(0,) if donate_cache else ()
+        )
+
+        # Host-tier traffic: batched page gather (device→host reads the
+        # cache, NOT donated) and scatter (host→device rewrites pages in
+        # the donated cache). Page-batch sizes are pow2-bucketed by the
+        # callers (padding with scratch page 0) so compile counts stay
+        # bounded like every other hot-path shape axis.
+        def _gather_pages_fn(c, idx):
+            return tuple(c[n][:, idx] for n in kv_names)
+
+        def _scatter_pages_fn(c, idx, arrs):
+            out = dict(c)
+            for n, a in zip(kv_names, arrs):
+                out[n] = c[n].at[:, idx].set(a)
+            return out
+
+        self._gather_pages_jit = jax.jit(_gather_pages_fn)
+        self._scatter_pages_jit = jax.jit(
+            _scatter_pages_fn, donate_argnums=(0,) if donate_cache else ()
         )
         self._sample = jax.jit(
             lambda key, row, t, k, p: sample_token(
@@ -823,6 +976,10 @@ class ServeEngine:
         self.prefix_resume_hit_tokens = 0
         self.prefill_tokens = 0
         self.cow_copies = 0
+        self.swapped_out_pages = 0
+        self.swapped_in_pages = 0
+        self.host_demoted_pages = 0
+        self.host_promote_hits = 0
         self.suffix_dispatches = 0
         self.cold_dispatches = 0
         if self.paged_cache:
@@ -875,6 +1032,10 @@ class ServeEngine:
             # repeated warm rounds hit them, tracing the suffix-prefill and
             # COW paths too); real traffic must start from an empty index
             self.prefix.clear()
+        if self.host is not None:
+            # warm preemptions/demotions may have parked synthetic pages on
+            # the host tier; real traffic starts from an empty tier
+            self.host.clear()
         self.reset_metrics()
 
     @property
@@ -951,6 +1112,19 @@ class ServeEngine:
             "prefix_evicted_pages": (
                 self.prefix.evicted_pages if self.prefix is not None else 0
             ),
+            "kv_dtype": self.kv_dtype,
+            "swap_enabled": self.swap,
+            "swap_disabled_reason": self.swap_disabled_reason,
+            "host_capacity_pages": (
+                self.host.capacity_pages if self.host is not None else 0
+            ),
+            "host_tier_pages": (
+                self.host.pages if self.host is not None else 0
+            ),
+            "swapped_out_pages": self.swapped_out_pages,
+            "swapped_in_pages": self.swapped_in_pages,
+            "host_demoted_pages": self.host_demoted_pages,
+            "host_promote_hits": self.host_promote_hits,
         }
 
     @property
@@ -1045,7 +1219,12 @@ class ServeEngine:
                 and not mid_stream
                 and now - req.arrival_time > req.deadline_s
             ):
-                self._resume.pop(req.uid, None)
+                dropped = self._resume.pop(req.uid, None)
+                if (
+                    dropped is not None and dropped.host_key is not None
+                    and self.host is not None
+                ):
+                    self.host.pop(dropped.host_key)
                 self.shed.append(AdmissionError(
                     req.uid, "deadline_exceeded",
                     f"request {req.uid}: queued {now - req.arrival_time:.3f}s"
@@ -1105,6 +1284,69 @@ class ServeEngine:
                 if respect_arrivals and req.arrival_time > now:
                     break
                 resume = self._resume.get(req.uid)
+                if resume is not None and resume.host_key is not None and (
+                    self.host is None
+                    or self.host.n_pages(resume.host_key) == 0
+                ):
+                    # tier dropped the entry (LRU) or the record migrated in
+                    # from another engine — fall back to recompute-resume
+                    resume.host_key = None
+                if resume is not None and resume.host_key is not None:
+                    # SWAP-IN: the preempted slot's pages are resident on
+                    # the host tier. Restore them with one batched scatter,
+                    # rebuild the table row, and continue decoding — no
+                    # prefill at all. The restored pages are bitwise the
+                    # ones the slot held, so token identity vs. the
+                    # recompute oracle is structural.
+                    n_need = self.host.n_pages(resume.host_key)
+                    others_live = any(s is not None for s in self.slots)
+                    hold = self.watermark_pages if others_live else 0
+                    if self.pool.available < n_need + hold:
+                        if self.prefix is not None:
+                            self.prefix.evict(
+                                n_need + hold - self.pool.available
+                            )
+                        if self.pool.available < n_need + hold:
+                            break  # stays queued; recompute needs no fewer
+                    pages = self.pool.alloc(n_need)
+                    self.waiting.popleft()
+                    i = free.pop(0)
+                    self._resume.pop(req.uid)
+                    self._restore_pages(
+                        pages, self.host.pop(resume.host_key)
+                    )
+                    self.swapped_in_pages += n_need
+                    self._slot_pages[i] = pages
+                    self._table_np[i, :] = 0
+                    self._table_np[i, : n_need] = pages
+                    self._table_dirty = True
+                    self.cache = {
+                        **self.cache,
+                        "pos": self.cache["pos"].at[i].set(resume.pos),
+                    }
+                    # written tokens = stream[:pos]; the slot re-feeds
+                    # stream[pos] next step and (for a mid-prefill victim)
+                    # teacher-forces the remaining prompt through pending
+                    stream = [int(t) for t in req.prompt] + list(
+                        resume.generated
+                    )
+                    slot = _Slot(
+                        req=req,
+                        pending=collections.deque(stream[resume.pos + 1:]),
+                        generated=list(resume.generated),
+                        next_feed=stream[resume.pos],
+                        admit_time=resume.admit_time,
+                        key=resume.key,
+                        feed=None,
+                        prefix_len=0,
+                    )
+                    slot.first_token_time = resume.first_token_time
+                    slot.pos_host = resume.pos
+                    self._admit_seq += 1
+                    slot.seq = self._admit_seq
+                    self.slot_history.setdefault(req.uid, []).append(i)
+                    self.slots[i] = slot
+                    continue
                 feed = req.prompt
                 if resume is not None and resume.generated:
                     feed = np.concatenate([
@@ -1471,6 +1713,73 @@ class ServeEngine:
             self.cache = {**self.cache, "table": jnp.asarray(self._table_np)}
             self._table_dirty = False
 
+    # -------------------------------------------------------- host tier I/O
+    @staticmethod
+    def _page_bucket(n: int) -> int:
+        """Pow2 page-batch bucket: keeps the gather/scatter jits to
+        O(log pool) compiled shapes, like every other hot-path axis."""
+        m = 1
+        while m < n:
+            m *= 2
+        return m
+
+    def _gather_host(self, pages: list[int]) -> dict:
+        """Copy page CONTENT device→host: name → (L, n, page, …) numpy.
+        ``np.asarray`` blocks until the copy lands, so callers may free
+        (and let the pool rewrite) the source pages immediately after."""
+        n = len(pages)
+        m = self._page_bucket(n)
+        idx = jnp.asarray(np.asarray(list(pages) + [0] * (m - n), np.int32))
+        arrs = self._gather_pages_jit(self.cache, idx)
+        return {
+            name: np.asarray(a[:, :n])
+            for name, a in zip(self._kv_names, arrs)
+        }
+
+    def _restore_pages(self, pages: list[int], arrays: dict) -> None:
+        """Scatter host content back into freshly allocated pool pages.
+        Bucket padding targets scratch page 0 (reserved: writes harmless,
+        never validly read)."""
+        n = len(pages)
+        m = self._page_bucket(n)
+        idx = np.asarray(list(pages) + [0] * (m - n), np.int32)
+        arrs = []
+        for name in self._kv_names:
+            a = arrays[name]
+            if m > n:
+                pad = np.zeros((a.shape[0], m - n) + a.shape[2:], a.dtype)
+                a = np.concatenate([a, pad], axis=1)
+            arrs.append(jnp.asarray(a))
+        self.cache = self._scatter_pages_jit(
+            self.cache, jnp.asarray(idx), tuple(arrs)
+        )
+
+    def _demote_prefix_page(self, key: tuple, page: int) -> None:
+        """PrefixCache eviction hook: copy the page's content to the host
+        tier (keyed by the full token prefix it caches) before the index
+        drops its pool ref. Content is copied, never aliased — co-readers
+        still holding the page are unaffected."""
+        if self.host is None:
+            return
+        if self.host.put(("prefix", key), self._gather_host([page]), 1):
+            self.host_demoted_pages += 1
+
+    def _promote_prefix_page(self, key: tuple) -> int | None:
+        """PrefixCache miss hook: restore a demoted prefix page into a
+        fresh pool page; the returned rc=1 ref becomes the index's. None
+        when the tier holds no copy or the pool is too tight to spend a
+        page on caching (promotion must never starve live admission)."""
+        if self.host is None or self.host.n_pages(("prefix", key)) != 1:
+            return None
+        if self.pool.available <= self.watermark_pages + 1:
+            return None
+        pages = self.pool.alloc(1)
+        if pages is None:
+            return None
+        self._restore_pages(pages, self.host.pop(("prefix", key)))
+        self.host_promote_hits += 1
+        return pages[0]
+
     def _preempt_victim(self) -> int:
         """SLO-aware preemption order: the LOWEST-priority live slot goes
         first; within a priority tier, the YOUNGEST (max admission seq) —
@@ -1487,9 +1796,22 @@ class ServeEngine:
         re-admit before anything that arrived after it), freeing its pages.
         Generated tokens, the sampling stream and timing stamps ride along
         in a resume record — re-admission recomputes the KV state by
-        prefilling prompt + generated and continues token-identically."""
+        prefilling prompt + generated and continues token-identically.
+
+        With the host tier on, the pages are first copied device→host
+        (BEFORE the pool refs drop — a freed page may be rewritten by the
+        very next decode): re-admission then swaps them back in with one
+        scatter instead of re-prefilling. The recompute path stays the
+        fallback (and the oracle) whenever the tier dropped the entry."""
         slot = self.slots[i]
-        self.pool.free(self._slot_pages[i])
+        pages = self._slot_pages[i]
+        host_key = None
+        if self.swap and pages:
+            key = ("swap", slot.req.uid)
+            if self.host.put(key, self._gather_host(pages), len(pages)):
+                host_key = key
+                self.swapped_out_pages += len(pages)
+        self.pool.free(pages)
         self._slot_pages[i] = []
         self._table_np[i, :] = 0
         self._table_dirty = True
@@ -1498,6 +1820,8 @@ class ServeEngine:
             key=slot.key,
             first_token_time=slot.first_token_time,
             admit_time=slot.admit_time,
+            host_key=host_key,
+            pos=slot.pos_host,
         )
         self.waiting.appendleft(slot.req)
         self.slots[i] = None
@@ -1544,7 +1868,14 @@ class ServeEngine:
                 self._table_dirty = True
         while self.waiting:
             req = self.waiting.popleft()
-            items.append((req, self._resume.pop(req.uid, None)))
+            resume = self._resume.pop(req.uid, None)
+            if resume is not None and resume.host_key is not None:
+                # swapped pages live in THIS engine's host tier; the
+                # importing engine resumes through recompute instead
+                if self.host is not None:
+                    self.host.pop(resume.host_key)
+                resume.host_key = None
+            items.append((req, resume))
         return items
 
     def import_inflight(
@@ -1780,6 +2111,9 @@ def serve_continuous(
     watermark_pages: int = 0,
     prefix_cache: bool = True,
     prefix_cache_pages: int = 0,
+    kv_dtype: str = "fp",
+    host_pages: int = 0,
+    swap: bool = True,
     num_shards: int = 0,
     sampling: SamplingParams | None = None,
     seed: int = 0,
@@ -1817,6 +2151,9 @@ def serve_continuous(
         watermark_pages=watermark_pages,
         prefix_cache=prefix_cache,
         prefix_cache_pages=prefix_cache_pages,
+        kv_dtype=kv_dtype,
+        host_pages=host_pages,
+        swap=swap,
         seed=seed,
         max_wall_s=max_wall_s,
     )
@@ -1858,6 +2195,7 @@ def serve_continuous(
             dict(engine.mesh.shape) if engine.mesh is not None else None
         ),
         "prefix_cache": engine.prefix_cache,
+        "kv_dtype": engine.kv_dtype,
         "prefill_tokens": engine.prefill_tokens,
         "sampling": None if sampling is None else dataclasses.asdict(sampling),
         "engine_steps": engine.steps,
@@ -1887,6 +2225,13 @@ def serve_continuous(
                 f", prefix hit {ps['prefix_hit_rate']:.0%} "
                 f"({ps['prefix_hit_pages']} pages, "
                 f"{ps['cow_copies']} CoW)"
+            )
+        if ps["kv_dtype"] != "fp":
+            pool_line += f", kv {ps['kv_dtype']}"
+        if ps["swap_enabled"]:
+            pool_line += (
+                f", swap {ps['swapped_out_pages']}↓/"
+                f"{ps['swapped_in_pages']}↑ pages"
             )
     log_fn(
         f"{cfg.name}: {n_requests} reqs × {gen_tokens} tok over "

@@ -282,7 +282,10 @@ def serve_param_specs(params: Pytree) -> Pytree:
 def serve_cache_specs(cache: Pytree) -> Pytree:
     """KV caches split the kv-head axis — dim -2 in both the paged pool
     (L, P, page, Hkv, hd) and ring (L, B, C, Hkv, hd) layouts — over
-    ``model``; positions and page tables are shard-invariant (replicated)."""
+    ``model``; positions and page tables are shard-invariant (replicated).
+    An int8 pool's scale planes (``ks``/``vs``: (L, P, page, Hkv)) carry
+    the kv-head axis LAST, so they split dim -1 — each shard holds exactly
+    the scales of its page slice."""
 
     def spec(path, leaf):
         name = _leaf_path(path)
@@ -290,6 +293,10 @@ def serve_cache_specs(cache: Pytree) -> Pytree:
         if re.search(r"(^|/)(k|v)$", name) and nd >= 4:
             axes: list = [None] * nd
             axes[-2] = "model"
+            return P(*axes)
+        if re.search(r"(^|/)(ks|vs)$", name) and nd >= 4:
+            axes = [None] * nd
+            axes[-1] = "model"
             return P(*axes)
         return P()
 

@@ -20,6 +20,12 @@ indexed in a radix trie and later requests with a common prefix alias the
 same physical pages, prefilling only their uncached suffix — same tokens,
 a fraction of the prefill FLOPs. Slots default to ring-equivalent logical
 width; --long-requests widens every slot's page table to the whole pool.
+--kv-dtype int8 stores pool pages quantized (per-token-slot per-kv-head
+fp32 scales, dequantized inside the attend kernels) for ~4x the resident
+sequences per HBM byte; --host-pages N adds a host-RAM tier under the
+pool — preempted slots swap pages out and restore them with one copy
+instead of recomputing, and evicted prefix pages demote/promote through
+the same tier (--no-swap keeps only the prefix half).
 Continuous mode also serves TENSOR-PARALLEL (--mesh N): attention heads and
 the KV pool's kv-head slices split over an N-device ``model`` mesh through
 ``shard_map``, bitwise token-identical to the single-device engine; on CPU
@@ -250,6 +256,22 @@ def main(argv=None):
                     help="[continuous] cap on pool pages the prefix index "
                     "may pin (0 = the pool's allocatable capacity); "
                     "entries are LRU-evicted under pool pressure")
+    ap.add_argument("--kv-dtype", choices=("fp", "int8"), default="fp",
+                    help="[continuous] KV pool storage dtype (paged cache): "
+                    "int8 stores pages quantized with per-token-slot per-"
+                    "kv-head fp32 scales and dequantizes inside the attend "
+                    "— ~4x the resident sequences per HBM byte vs fp32 "
+                    "pools at near-identical output quality")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="[continuous] host-RAM page budget for the tiered "
+                    "KV cache (paged cache; 0 = off): preempted slots swap "
+                    "their pages to host and restore with one copy instead "
+                    "of recomputing, and LRU-evicted prefix pages demote/"
+                    "promote through the same tier")
+    ap.add_argument("--no-swap", dest="swap", action="store_false",
+                    help="[continuous] with --host-pages, keep prefix "
+                    "demote/promote but resume preemptions by recompute "
+                    "instead of swap-in")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
     ap.add_argument("--replicas", type=int, default=1,
@@ -334,6 +356,50 @@ def main(argv=None):
                 "--prefix-cache cannot be honored by this config: "
                 + "; ".join(blockers)
             )
+    # same fail-fast contract as --prefix-cache: a flag the engine would
+    # have to silently ignore is a config error, not a degraded run
+    if args.kv_dtype != "fp":
+        blockers = []
+        if not args.continuous:
+            blockers.append("batch mode (use --continuous)")
+        if not args.paged_cache:
+            blockers.append(
+                "--no-paged-cache (int8 KV quantizes POOL pages; the "
+                "contiguous ring cache stays fp)"
+            )
+        if args.replicas > 1:
+            blockers.append(
+                "--replicas (router replicas build fp pools; int8 "
+                "replica pools are not wired yet)"
+            )
+        if blockers:
+            ap.error(
+                f"--kv-dtype {args.kv_dtype} cannot be honored by this "
+                "config: " + "; ".join(blockers)
+            )
+    if args.host_pages > 0:
+        blockers = []
+        if not args.continuous:
+            blockers.append("batch mode (use --continuous)")
+        if not args.paged_cache:
+            blockers.append(
+                "--no-paged-cache (the host tier backs the page pool)"
+            )
+        if args.mesh > 0:
+            blockers.append(
+                f"--mesh {args.mesh} (KV pool is sharded; the host tier "
+                "assumes a single-device pool)"
+            )
+        if args.replicas > 1:
+            blockers.append(
+                "--replicas (router replicas manage their own pools; "
+                "per-replica host tiers are not wired yet)"
+            )
+        if blockers:
+            ap.error(
+                f"--host-pages {args.host_pages} cannot be honored by "
+                "this config: " + "; ".join(blockers)
+            )
     if args.continuous:
         from repro.launch.engine import serve_continuous
         from repro.launch.sampling import SamplingParams
@@ -381,6 +447,9 @@ def main(argv=None):
             watermark_pages=args.watermark_pages,
             prefix_cache=args.prefix_cache is not False,  # None = default on
             prefix_cache_pages=args.prefix_cache_pages,
+            kv_dtype=args.kv_dtype,
+            host_pages=args.host_pages,
+            swap=args.swap,
             num_shards=args.mesh,
             sampling=sampling,
             seed=args.seed, stagger=args.stagger,

@@ -105,10 +105,13 @@ def paged_cache_specs(
     page_size: int,
     table_width: int,
     window: int = 0,
+    kv_dtype: str = "fp",
 ) -> Pytree:
     """ShapeDtypeStructs for the engine's SHARED paged KV pool + per-slot
     page tables — total KV bytes scale with ``num_pages``, not
-    ``num_slots × max_seq``, which is the memory claim the dry-run sizes."""
+    ``num_slots × max_seq``, which is the memory claim the dry-run sizes.
+    ``kv_dtype="int8"`` sizes the quantized pool: int8 pages plus fp32
+    per-token-slot per-kv-head scale planes (1/head_dim the page bytes)."""
     if model.init_paged_cache is None:
         raise ValueError(f"{model.cfg.name}: no paged-cache API for this arch")
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -116,7 +119,7 @@ def paged_cache_specs(
     def mk(params):
         return model.init_paged_cache(
             params, num_slots, num_pages, page_size, table_width,
-            window=window,
+            window=window, kv_dtype=kv_dtype,
         )
 
     return jax.eval_shape(mk, params)

@@ -468,12 +468,20 @@ def decode_attend_paged(
     scalar-prefetched table rows, no gather) or the jnp path: gather the
     row's pages into contiguous ring rows and run the same masked-attention
     math as ``decode_attend``'s per-slot branch — bitwise identical to the
-    ring engine holding the same values."""
+    ring engine holding the same values.
+
+    int8 pools (``ks``/``vs`` keys — (P, page, Hkv) fp32 scales) quantize
+    the one fresh token vector per kv-head at write time
+    (``quantize.kv_quant``) and dequantize at read time: in-body in the
+    kernel, or on the gathered rows in the jnp path — the same value set
+    either way."""
     hd = cfg.resolved_head_dim
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     g = hq // hkv
     b = x.shape[0]
     pool_k, pool_v = cache["k"], cache["v"]
+    pool_ks, pool_vs = cache.get("ks"), cache.get("vs")
+    quant = pool_ks is not None
     table = cache["table"]
     page = pool_k.shape[1]
     cap = table.shape[1] * page
@@ -497,8 +505,20 @@ def decode_attend_paged(
     # dim — pages shard where the ring cache sharded its sequence axis.
     k = constrain(k, "batch", None, "kv_heads", None)
     v = constrain(v, "batch", None, "kv_heads", None)
-    new_k = pool_k.at[phys_page, off].set(k[:, 0])
-    new_v = pool_v.at[phys_page, off].set(v[:, 0])
+    if quant:
+        from repro.kernels.quantize import kv_dequant, kv_quant
+
+        kq, ksc = kv_quant(k[:, 0])   # (B, Hkv, hd) int8, (B, Hkv) f32
+        vq, vsc = kv_quant(v[:, 0])
+        new_k = pool_k.at[phys_page, off].set(kq)
+        new_v = pool_v.at[phys_page, off].set(vq)
+        new_ks = pool_ks.at[phys_page, off].set(ksc)
+        new_vs = pool_vs.at[phys_page, off].set(vsc)
+        new_ks = constrain(new_ks, "cache_seq", None, "kv_heads")
+        new_vs = constrain(new_vs, "cache_seq", None, "kv_heads")
+    else:
+        new_k = pool_k.at[phys_page, off].set(k[:, 0])
+        new_v = pool_v.at[phys_page, off].set(v[:, 0])
     new_k = constrain(new_k, "cache_seq", None, "kv_heads", None)
     new_v = constrain(new_v, "cache_seq", None, "kv_heads", None)
 
@@ -507,12 +527,25 @@ def decode_attend_paged(
 
         q_k = q.reshape(b, hkv, g, hd)
         out = swa_decode_attention(
-            q_k, new_k, new_v, pos, window, use_kernel=True, table=table
+            q_k, new_k, new_v, pos, window, use_kernel=True, table=table,
+            k_scale=new_ks if quant else None,
+            v_scale=new_vs if quant else None,
         )
         out = out.reshape(b, 1, hkv * g * hd).astype(x.dtype)
     else:
-        g_k = gather_pages(new_k, table)
-        g_v = gather_pages(new_v, table)
+        if quant:
+            t_w = table.shape[1]
+            g_k = kv_dequant(
+                gather_pages(new_k, table),
+                new_ks[table].reshape(b, t_w * page, hkv), q.dtype,
+            )
+            g_v = kv_dequant(
+                gather_pages(new_v, table),
+                new_vs[table].reshape(b, t_w * page, hkv), q.dtype,
+            )
+        else:
+            g_k = gather_pages(new_k, table)
+            g_v = gather_pages(new_v, table)
         # identical math to decode_attend's per-slot branch, on the
         # gathered rows — same values, same shapes, same reductions
         slots = jnp.arange(cap)
@@ -529,6 +562,8 @@ def decode_attend_paged(
         out = _gqa_out(probs, g_v, x.dtype)  # (B,1,H*hd)
     out = gather_heads(out) @ params["wo"]
     new_cache = {"k": new_k, "v": new_v, "pos": pos + 1, "table": table}
+    if quant:
+        new_cache["ks"], new_cache["vs"] = new_ks, new_vs
     return out, new_cache
 
 

@@ -49,8 +49,10 @@ class ModelAPI:
     #               tokens start at position starts[r]); prefix_pages
     #               statically bounds the prefix pages the attend streams
     # init_paged_cache(params, num_slots, num_pages, page_size, table_width,
-    #               window=) -> shared paged pool + per-slot page tables;
-    #               decode/prefill_slots accept either cache layout
+    #               window=, kv_dtype=) -> shared paged pool + per-slot page
+    #               tables; decode/prefill_slots accept either cache layout;
+    #               kv_dtype="int8" stores pages quantized with per-token-
+    #               slot per-kv-head fp32 scales ("ks"/"vs" keys)
     init_slot_cache: Callable[..., Any] | None = None
     prefill_slot: Callable[..., tuple[Any, jax.Array]] | None = None
     prefill_slots: Callable[..., tuple[Any, jax.Array]] | None = None
@@ -98,10 +100,12 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
         )
 
     def init_paged_cache(
-        params, num_slots, num_pages, page_size, table_width, *, window=0
+        params, num_slots, num_pages, page_size, table_width, *, window=0,
+        kv_dtype="fp",
     ):
         return transformer.init_paged_cache(
-            cfg, num_slots, num_pages, page_size, table_width, window=window
+            cfg, num_slots, num_pages, page_size, table_width, window=window,
+            kv_dtype=kv_dtype,
         )
 
     return ModelAPI(

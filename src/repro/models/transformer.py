@@ -161,6 +161,7 @@ def init_paged_cache(
     table_width: int,
     *,
     window: int = 0,
+    kv_dtype: str = "fp",
 ) -> dict:
     """Stacked shared paged KV pool: (L, P, page, Hkv, hd) physical pages +
     per-slot page tables (num_slots, T) shared across layers (every layer
@@ -169,16 +170,30 @@ def init_paged_cache(
     page_size``; pool page 0 is the reserved scratch page (see
     ``attention.init_paged_pool``). Total KV memory is ``num_pages`` pages
     regardless of ``num_slots`` — slots share the pool instead of owning
-    ``max_seq`` rows each."""
+    ``max_seq`` rows each.
+
+    ``kv_dtype="int8"`` stores the pages quantized (kernels/quantize.py
+    row scheme): k/v become int8 and ``ks``/``vs`` hold one fp32 scale per
+    token-slot per kv-head, (L, P, page, Hkv). Zero-initialized scales
+    dequantize unwritten lanes to exactly 0.0 — the same value set the fp
+    pool starts with, so the validity-mask story is unchanged."""
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, hd)
-    return {
-        "k": jnp.zeros(shape, cfg.dtype),
-        "v": jnp.zeros(shape, cfg.dtype),
+    cache = {
         "pos": jnp.zeros((num_slots,), jnp.int32),
         "table": jnp.zeros((num_slots, table_width), jnp.int32),
         "window": jnp.asarray(window, jnp.int32),
     }
+    if kv_dtype == "int8":
+        cache["k"] = jnp.zeros(shape, jnp.int8)
+        cache["v"] = jnp.zeros(shape, jnp.int8)
+        cache["ks"] = jnp.zeros(shape[:-1], jnp.float32)
+        cache["vs"] = jnp.zeros(shape[:-1], jnp.float32)
+    else:
+        assert kv_dtype == "fp", f"unknown kv_dtype {kv_dtype!r}"
+        cache["k"] = jnp.zeros(shape, cfg.dtype)
+        cache["v"] = jnp.zeros(shape, cfg.dtype)
+    return cache
 
 
 def reset_slot(cache: dict, slot) -> dict:
@@ -203,18 +218,25 @@ def decode_step(
     Works over both cache layouts: per-row contiguous rings (``init_decode_
     cache``) and the shared paged pool (``init_paged_cache`` — detected by
     the ``table`` key; each layer's pool is scanned jointly with its params
-    while the one page table is closed over)."""
+    while the one page table is closed over). An int8 pool (``ks`` key)
+    scans its per-layer scale planes alongside the pages."""
     x = embed_tokens(params["embed"], tokens)
     pos = cache["pos"]
     table = cache.get("table")
+    quant = "ks" in cache
 
     def body(h, sl):
-        lp, ck, cv = sl
+        if quant:
+            lp, ck, cv, cks, cvs = sl
+        else:
+            lp, ck, cv = sl
         a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
         if table is not None:
+            layer_cache = {"k": ck, "v": cv, "pos": pos, "table": table}
+            if quant:
+                layer_cache["ks"], layer_cache["vs"] = cks, cvs
             a, newc = attn.decode_attend_paged(
-                lp["attn"], a, {"k": ck, "v": cv, "pos": pos, "table": table},
-                cfg, window=window,
+                lp["attn"], a, layer_cache, cfg, window=window,
             )
         else:
             a, newc = attn.decode_attend(
@@ -223,12 +245,22 @@ def decode_step(
         h = h + a
         f = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
         f, _ = ffn.apply(lp["ffn"], f, cfg)
-        return h + f, (newc["k"], newc["v"])
+        out = (newc["k"], newc["v"])
+        if quant:
+            out += (newc["ks"], newc["vs"])
+        return h + f, out
 
-    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if quant:
+        xs += (cache["ks"], cache["vs"])
+    x, news = jax.lax.scan(body, x, xs)
     x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg)[:, 0]
-    new_cache = {"k": nk, "v": nv, "pos": pos + 1, "window": cache["window"]}
+    new_cache = {
+        "k": news[0], "v": news[1], "pos": pos + 1, "window": cache["window"],
+    }
+    if quant:
+        new_cache["ks"], new_cache["vs"] = news[2], news[3]
     if table is not None:
         new_cache["table"] = table
     return new_cache, logits
@@ -415,6 +447,8 @@ def prefill_slots(
     slots = jnp.asarray(slots, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
     table = cache.get("table")
+    quant = "ks" in cache
+    assert not quant or table is not None, "int8 KV requires a paged cache"
     if table is not None:
         t_rows = table[slots]                      # (n, T) page map per row
         flat_pages = t_rows.reshape(-1)            # (n·T,)
@@ -435,11 +469,38 @@ def prefill_slots(
         # beyond any real query position so the causal mask excludes them
         ring_c = jnp.arange(w_pfx * page)[None, :]
         prefix_pos = jnp.where(ring_c < starts[:, None], ring_c, attn.FAR_POS)
+    if quant:
+        from repro.kernels.quantize import kv_dequant, kv_quant
+
+        # ring slots this prefill writes (exactly fill_cache_rows' ``written``
+        # mask): requantization is restricted to them so untouched slots —
+        # shared prefix pages above all — keep their original (q, scale)
+        # BITWISE. Requantizing a dequantized row can drift the scale one
+        # ulp (fp double-rounding of (s·127)/127), which would silently
+        # fork pages other rows still read.
+        cap_r = t_w * page
+        ring = jnp.arange(cap_r)[None, :]
+        c_rel = ring if starts is None else (ring - starts[:, None]) % cap_r
+        written = c_rel <= (lengths[:, None] - 1)   # (n, cap)
 
     def body(h, sl):
-        lp, ck, cv = sl  # ck/cv: one layer — (B, C, Hkv, hd) or (P, page, Hkv, hd)
+        if quant:
+            lp, ck, cv, cks, cvs = sl
+        else:
+            lp, ck, cv = sl  # one layer — (B, C, Hkv, hd) or (P, page, Hkv, hd)
         a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
         k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
+        if quant:
+            # gather the int8 pages + scales once; the fp view feeds the
+            # attend and the ring write, the raw (q, scale) pair survives
+            # untouched slots
+            hkv, hd = ck.shape[-2], ck.shape[-1]
+            gkq = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
+            gvq = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
+            gks = cks[flat_pages].reshape(n, t_w * page, hkv)
+            gvs = cvs[flat_pages].reshape(n, t_w * page, hkv)
+            gk = kv_dequant(gkq, gks, k.dtype)
+            gv = kv_dequant(gvq, gvs, k.dtype)
         if starts is None:
             a = attn.attend_full(
                 lp["attn"], a, pos, cfg, causal=True, window=window,
@@ -458,7 +519,10 @@ def prefill_slots(
             q = attn.apply_rope(q, pos, cfg.rope_theta)
             o = suffix_prefill_attention(
                 q.reshape(n, s, cfg.n_kv_heads, g, hd), k, v, ck, cv,
-                t_rows, starts, prefix_width=w_pfx, use_kernel=True,
+                t_rows, starts, prefix_width=w_pfx,
+                pool_k_scale=cks if quant else None,
+                pool_v_scale=cvs if quant else None,
+                use_kernel=True,
             )
             a = sharding.gather_heads(
                 o.reshape(n, s, -1).astype(a.dtype)
@@ -468,9 +532,11 @@ def prefill_slots(
             # — the displaced production path, kept as the kernel's oracle.
             # Only the first w_pfx pages enter the attend (bounded score
             # tensor); dead lanes past each row's start are FAR-banished.
-            hkv, hd = ck.shape[-2], ck.shape[-1]
-            gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
-            gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
+            # (int8 pools arrive here pre-gathered and dequantized.)
+            if not quant:
+                hkv, hd = ck.shape[-2], ck.shape[-1]
+                gk = ck[flat_pages].reshape(n, t_w * page, hkv, hd)
+                gv = cv[flat_pages].reshape(n, t_w * page, hkv, hd)
             a = attn.attend_full(
                 lp["attn"], a, pos, cfg, causal=True, window=window,
                 q_chunk=q_chunk,
@@ -487,7 +553,7 @@ def prefill_slots(
         f, _ = ffn.apply(lp["ffn"], f, cfg)
         if table is not None:
             hkv, hd = ck.shape[-2], ck.shape[-1]
-            if starts is None or attn.USE_SUFFIX_KERNEL:
+            if not quant and (starts is None or attn.USE_SUFFIX_KERNEL):
                 # the ring WRITE always works over full-width gathered rows
                 # (fill_cache_rows may land the suffix on any page); the
                 # kernel branch above skipped the gather for the attend
@@ -496,26 +562,48 @@ def prefill_slots(
             rows_k, rows_v = attn.fill_cache_rows(
                 gk, gv, k, v, lengths, starts=starts
             )
+            if quant:
+                # masked requant: only ``written`` ring slots take fresh
+                # (q, scale); everything else scatters back its ORIGINAL
+                # int8 bits — shared prefix pages stay bitwise identical
+                rq_k, rs_k = kv_quant(rows_k)
+                rq_v, rs_v = kv_quant(rows_v)
+                w4 = written[:, :, None, None]
+                w3 = written[:, :, None]
+                nk = ck.at[flat_pages].set(
+                    jnp.where(w4, rq_k, gkq).reshape(n * t_w, page, hkv, hd))
+                nv = cv.at[flat_pages].set(
+                    jnp.where(w4, rq_v, gvq).reshape(n * t_w, page, hkv, hd))
+                nks = cks.at[flat_pages].set(
+                    jnp.where(w3, rs_k, gks).reshape(n * t_w, page, hkv))
+                nvs = cvs.at[flat_pages].set(
+                    jnp.where(w3, rs_v, gvs).reshape(n * t_w, page, hkv))
+                return h + f, (nk, nv, nks, nvs)
             nk = ck.at[flat_pages].set(rows_k.reshape(n * t_w, page, hkv, hd))
             nv = cv.at[flat_pages].set(rows_v.reshape(n * t_w, page, hkv, hd))
             return h + f, (nk, nv)
         rows_k, rows_v = attn.fill_cache_rows(ck[slots], cv[slots], k, v, lengths)
         return h + f, (ck.at[slots].set(rows_k), cv.at[slots].set(rows_v))
 
-    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if quant:
+        xs += (cache["ks"], cache["vs"])
+    x, news = jax.lax.scan(body, x, xs)
     x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
     last = jnp.take_along_axis(x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
     logits = lm_logits(params["embed"], last, cfg)[:, 0]
     end = lengths if starts is None else starts + lengths
     new_cache = {
-        "k": nk,
-        "v": nv,
+        "k": news[0],
+        "v": news[1],
         # padding rows (length 0) must not touch their slot's position
         "pos": cache["pos"].at[slots].set(
             jnp.where(lengths > 0, end, cache["pos"][slots])
         ),
         "window": cache["window"],
     }
+    if quant:
+        new_cache["ks"], new_cache["vs"] = news[2], news[3]
     if table is not None:
         new_cache["table"] = table
     return new_cache, logits

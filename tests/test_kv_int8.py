@@ -1,0 +1,420 @@
+"""int8 KV pages: quantize helpers, dequantizing kernels, engine behavior.
+
+The oracle layering follows the house rules:
+
+* The fp kernels running over the DEQUANTIZED pool are the BITWISE oracle
+  for the int8 kernels — in-body dequant is ``q · scale`` cast to the
+  query dtype, exactly what ``ref.dequant_pool_ref`` materializes, so the
+  int8 kernel must equal the fp kernel fed that materialized pool bit for
+  bit (same chunking, same online-softmax association).
+* The jnp dequant refs (``paged_table_decode_int8_ref``,
+  ``suffix_prefill_int8_ref``) are the NUMERIC oracle (flash reassociates;
+  allclose at the suite's usual tolerances).
+* The fp engine is the TOLERANCE oracle for the int8 engine: quantized KV
+  legitimately moves logits, so the engine pin is a greedy-token agreement
+  floor on a fixed trace plus exact self-consistency (int8 preemption/
+  resume must be bitwise-identical to an uncontended int8 run).
+
+``int8_encode``/``int8_roundtrip`` pad-and-slice (arbitrary row counts)
+is property-tested through ``tests/_hypothesis_compat``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.kernels import ops, ref
+from repro.kernels.flash_suffix_prefill import suffix_prefill
+from repro.kernels.paged_decode import paged_decode
+from repro.kernels.quantize import (
+    BLOCK,
+    int8_encode,
+    int8_roundtrip,
+    kv_dequant,
+    kv_quant,
+)
+from repro.launch.engine import Request, ServeEngine, make_requests
+
+ARCH = "stablelm-1.6b"
+P, G = 8, 6
+
+
+# ------------------------------------------------------------ quantize math
+def test_kv_quant_roundtrip_error_bound():
+    """Symmetric per-vector int8: reconstruction error ≤ scale/2 per
+    element (round-to-nearest over a 254-step grid)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 7, 64), jnp.float32)
+    q, s = kv_quant(x)
+    assert q.dtype == jnp.int8 and s.shape == (5, 7)
+    err = np.abs(np.asarray(kv_dequant(q, s)) - np.asarray(x))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_kv_quant_matches_encode_ref_rows():
+    """kv_quant over (nb, 256) rows IS the wire encoder's row math."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (11, BLOCK), jnp.float32)
+    q, s = kv_quant(x)
+    qr, sr = ref.int8_encode_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr)[:, 0])
+
+
+@given(nb=st.integers(1, 40))
+@settings(max_examples=15, deadline=None)
+def test_property_encode_pad_and_slice(nb):
+    """Arbitrary row counts (page-shaped callers): the padded kernel's
+    sliced output matches the per-row reference — q bitwise, scales to
+    1-ulp (the suite's idiom for the interpret pipeline's division) — and
+    padding rows never leak into real rows."""
+    x = jax.random.normal(jax.random.PRNGKey(nb), (nb, BLOCK), jnp.float32)
+    q, s = int8_encode(x, interpret=True)
+    assert q.shape == (nb, BLOCK) and s.shape == (nb, 1)
+    qr, sr = ref.int8_encode_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@given(nb=st.integers(1, 40))
+@settings(max_examples=15, deadline=None)
+def test_property_roundtrip_pad_and_slice(nb):
+    x = jax.random.normal(
+        jax.random.PRNGKey(100 + nb), (nb, BLOCK), jnp.float32
+    )
+    out = int8_roundtrip(x, interpret=True)
+    assert out.shape == (nb, BLOCK)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.int8_roundtrip_ref(x)),
+        rtol=1e-6, atol=1e-9,
+    )
+
+
+# ------------------------------------------------------- int8 decode kernel
+def _int8_pool_case(key, *, n, cap, page, hkv=2, g=4, hd=64,
+                    dtype=jnp.float32):
+    """Random queries + a quantized scattered page pool with its fp
+    mirror: (q, pos→caller, int8 pools + scales, dequantized pools,
+    table)."""
+    t_w = cap // page
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (n, hkv, g, hd), dtype)
+    n_pool = 1 + n * t_w
+    pool_k = jax.random.normal(ks[1], (n_pool, page, hkv, hd), jnp.float32)
+    pool_v = jax.random.normal(ks[2], (n_pool, page, hkv, hd), jnp.float32)
+    qk, sk = kv_quant(pool_k)
+    qv, sv = kv_quant(pool_v)
+    perm = jax.random.permutation(ks[3], n * t_w)
+    table = (1 + perm).reshape(n, t_w).astype(jnp.int32)
+    deq_k = ref.dequant_pool_ref(qk, sk, dtype)
+    deq_v = ref.dequant_pool_ref(qv, sv, dtype)
+    return q, (qk, qv, sk, sv), (deq_k, deq_v), table
+
+
+DECODE_CASES = [
+    (256, [0, 10, 255, 300, 1000], 0),
+    (256, [0, 10, 255, 300, 1000], 64),
+    (512, [3, 511, 512, 700, 1537], 128),
+]
+PAGE = 64
+
+
+class TestInt8Decode:
+    @pytest.mark.parametrize("cap,poss,window", DECODE_CASES)
+    def test_kernel_bitwise_matches_fp_kernel_on_dequant_pool(
+        self, cap, poss, window
+    ):
+        """In-body dequant is invisible: the int8 table kernel == the fp
+        table kernel over the materialized dequantized pool, bit for bit."""
+        q, (qk, qv, sk, sv), (dk, dv), table = _int8_pool_case(
+            jax.random.PRNGKey(cap + window), n=len(poss), cap=cap, page=PAGE
+        )
+        pos = jnp.asarray(poss, jnp.int32)
+        out = paged_decode(
+            q, qk, qv, pos, window, table=table, k_scale=sk, v_scale=sv
+        )
+        exp = paged_decode(q, dk, dv, pos, window, table=table)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    @pytest.mark.parametrize("cap,poss,window", DECODE_CASES)
+    def test_kernel_close_to_int8_ref(self, cap, poss, window):
+        q, (qk, qv, sk, sv), _, table = _int8_pool_case(
+            jax.random.PRNGKey(3 * cap + window), n=len(poss), cap=cap,
+            page=PAGE,
+        )
+        pos = jnp.asarray(poss, jnp.int32)
+        out = paged_decode(
+            q, qk, qv, pos, window, table=table, k_scale=sk, v_scale=sv
+        )
+        exp = ref.paged_table_decode_int8_ref(
+            q, qk, qv, sk, sv, pos, table, window
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=3e-5, atol=3e-5
+        )
+
+    def test_int8_ref_bitwise_is_dequant_then_plain_ref(self):
+        """The int8 oracle is definitionally dequant→gather→ring oracle —
+        pinned so the oracle itself can't drift from the dequant scheme."""
+        q, (qk, qv, sk, sv), (dk, dv), table = _int8_pool_case(
+            jax.random.PRNGKey(17), n=3, cap=256, page=PAGE
+        )
+        pos = jnp.asarray([5, 100, 700], jnp.int32)
+        a = ref.paged_table_decode_int8_ref(q, qk, qv, sk, sv, pos, table, 0)
+        b = ref.paged_table_decode_ref(q, dk, dv, pos, table, 0)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bf16_queries_dequant_to_bf16(self):
+        """The kernel dequantizes to the QUERY dtype (what the bf16 engine
+        stores logically): bitwise vs. the fp kernel over a bf16-dequant
+        pool."""
+        q, (qk, qv, sk, sv), _, table = _int8_pool_case(
+            jax.random.PRNGKey(23), n=2, cap=256, page=PAGE,
+            dtype=jnp.bfloat16,
+        )
+        dk = ref.dequant_pool_ref(qk, sk, jnp.bfloat16)
+        dv = ref.dequant_pool_ref(qv, sv, jnp.bfloat16)
+        pos = jnp.asarray([30, 400], jnp.int32)
+        out = paged_decode(
+            q, qk, qv, pos, 64, table=table, k_scale=sk, v_scale=sv
+        )
+        exp = paged_decode(q, dk, dv, pos, 64, table=table)
+        np.testing.assert_array_equal(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32)
+        )
+
+    def test_ops_routes_int8_table_mode(self):
+        q, (qk, qv, sk, sv), (dk, dv), table = _int8_pool_case(
+            jax.random.PRNGKey(31), n=2, cap=256, page=PAGE
+        )
+        pos = jnp.asarray([9, 300], jnp.int32)
+        for use_kernel in (False, True):
+            out = ops.swa_decode_attention(
+                q, qk, qv, pos, 0, use_kernel=use_kernel, table=table,
+                k_scale=sk, v_scale=sv,
+            )
+            exp = ops.swa_decode_attention(
+                q, dk, dv, pos, 0, use_kernel=use_kernel, table=table
+            )
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    def test_scales_require_table_mode(self):
+        """Scales without a page table are a caller bug, not a silent
+        fp read of int8 bytes."""
+        q, (qk, qv, sk, sv), _, _ = _int8_pool_case(
+            jax.random.PRNGKey(37), n=2, cap=256, page=PAGE
+        )
+        with pytest.raises(AssertionError):
+            paged_decode(
+                q, qk, qv, jnp.asarray([5, 6], jnp.int32), 0,
+                k_scale=sk, v_scale=sv,
+            )
+
+
+# ------------------------------------------------- int8 suffix-prefill kernel
+class TestInt8SuffixPrefill:
+    def _case(self, key, dtype=jnp.float32):
+        n, s, hkv, g, hd, page, t_w, n_pool = 3, 8, 2, 2, 32, 4, 8, 24
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (n, s, hkv, g, hd), dtype)
+        ksuf = jax.random.normal(ks[1], (n, s, hkv, hd), dtype)
+        vsuf = jax.random.normal(ks[2], (n, s, hkv, hd), dtype)
+        pk = jax.random.normal(ks[3], (n_pool, page, hkv, hd), jnp.float32)
+        pv = jax.random.normal(ks[4], (n_pool, page, hkv, hd), jnp.float32)
+        qk, sk = kv_quant(pk)
+        qv, sv = kv_quant(pv)
+        # scattered placement, shared page 5 between rows 0/1, row 2 cold
+        table = jnp.array([
+            [5, 17, 3, 21, 9, 2, 7, 11],
+            [5, 17, 13, 4, 0, 0, 0, 0],
+            [0, 0, 0, 0, 0, 0, 0, 0],
+        ], jnp.int32)
+        starts = jnp.array([19, 16, 0], jnp.int32)
+        return q, ksuf, vsuf, (qk, qv, sk, sv), table, starts
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_kernel_bitwise_matches_fp_kernel_on_dequant_pool(self, dtype):
+        q, ksuf, vsuf, (qk, qv, sk, sv), table, starts = self._case(
+            jax.random.PRNGKey(41), dtype
+        )
+        dk = ref.dequant_pool_ref(qk, sk, dtype)
+        dv = ref.dequant_pool_ref(qv, sv, dtype)
+        out = suffix_prefill(
+            q, ksuf, vsuf, qk, qv, table, starts, prefix_width=5,
+            pool_k_scale=sk, pool_v_scale=sv,
+        )
+        exp = suffix_prefill(
+            q, ksuf, vsuf, dk, dv, table, starts, prefix_width=5
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32)
+        )
+
+    def test_kernel_close_to_int8_ref(self):
+        q, ksuf, vsuf, (qk, qv, sk, sv), table, starts = self._case(
+            jax.random.PRNGKey(43)
+        )
+        out = suffix_prefill(
+            q, ksuf, vsuf, qk, qv, table, starts, prefix_width=5,
+            pool_k_scale=sk, pool_v_scale=sv,
+        )
+        exp = ref.suffix_prefill_int8_ref(
+            q, ksuf, vsuf, qk, qv, sk, sv, table, starts
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+        )
+
+    def test_ops_routes_int8_suffix(self):
+        q, ksuf, vsuf, (qk, qv, sk, sv), table, starts = self._case(
+            jax.random.PRNGKey(47)
+        )
+        dk = ref.dequant_pool_ref(qk, sk, jnp.float32)
+        dv = ref.dequant_pool_ref(qv, sv, jnp.float32)
+        for use_kernel in (False, True):
+            out = ops.suffix_prefill_attention(
+                q, ksuf, vsuf, qk, qv, table, starts, prefix_width=5,
+                pool_k_scale=sk, pool_v_scale=sv, use_kernel=use_kernel,
+            )
+            exp = ops.suffix_prefill_attention(
+                q, ksuf, vsuf, dk, dv, table, starts, prefix_width=5,
+                use_kernel=use_kernel,
+            )
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+# ------------------------------------------------------------ engine layer
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _build(model_and_params, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_seq", P + G)
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(cfg, lens, *, gen=G, seed=0):
+    base = make_requests(
+        cfg, n_requests=len(lens), prompt_len=max(lens), gen_tokens=gen,
+        seed=seed,
+    )
+    return [
+        Request(uid=j, prompt=r.prompt[: lens[j]], max_new_tokens=gen)
+        for j, r in enumerate(base)
+    ]
+
+
+def _assert_same_tokens(a, b):
+    got = {o.uid: o.tokens for o in b}
+    assert len(a) == len(b)
+    for o in a:
+        assert o.tokens == got[o.uid], f"uid {o.uid}: {o.tokens} != {got[o.uid]}"
+
+
+def test_engine_rejects_int8_without_paged_cache(model_and_params):
+    with pytest.raises(ValueError, match="paged"):
+        _build(model_and_params, kv_dtype="int8")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        _build(model_and_params, paged_cache=True, kv_dtype="int4")
+
+
+def test_int8_pool_layout_and_stats(model_and_params):
+    cfg, _, _ = model_and_params
+    eng = _build(
+        model_and_params, paged_cache=True, page_size=4, kv_dtype="int8"
+    )
+    assert eng.cache["k"].dtype == jnp.int8
+    assert eng.cache["ks"].dtype == jnp.float32
+    # one scale per (layer, page, token slot, kv head)
+    assert eng.cache["ks"].shape == eng.cache["k"].shape[:-1]
+    assert eng.pool_stats["kv_dtype"] == "int8"
+    fp = _build(model_and_params, paged_cache=True, page_size=4)
+    assert fp.pool_stats["kv_dtype"] == "fp"
+    assert "ks" not in fp.cache
+
+
+def test_int8_engine_token_agreement_vs_fp(model_and_params):
+    """Tolerance pin: quantized KV may move a logit across a tie, but on
+    the fixed smoke trace greedy outputs must agree on a large majority of
+    requests (exact agreement is seed-stable; the floor leaves room for
+    tie-flips only)."""
+    cfg, _, _ = model_and_params
+    lens = [4, 8, 3, 7, 6]
+    fp = _build(model_and_params, paged_cache=True, page_size=4)
+    i8 = _build(
+        model_and_params, paged_cache=True, page_size=4, kv_dtype="int8"
+    )
+    ref_outs = {o.uid: o.tokens for o in fp.run(_reqs(cfg, lens))}
+    outs = i8.run(_reqs(cfg, lens))
+    agree = sum(o.tokens == ref_outs[o.uid] for o in outs) / len(outs)
+    assert agree >= 0.6, f"int8 engine agreed on only {agree:.0%} of requests"
+    for o in outs:  # every request still ran to its full budget
+        assert len(o.tokens) == G
+
+
+def test_int8_preemption_resume_bitwise_self_consistent(model_and_params):
+    """Within int8, memory pressure must stay invisible: a preempting
+    tight pool emits the SAME tokens as an uncontended int8 run — the
+    resume path re-prefills into freshly quantized pages deterministically
+    (masked requantization keeps scales bit-stable)."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7]
+    ample = _build(
+        model_and_params, paged_cache=True, page_size=4, kv_dtype="int8"
+    )
+    ref_outs = ample.run(_reqs(cfg, lens))
+    tight = _build(
+        model_and_params, paged_cache=True, page_size=4, kv_dtype="int8",
+        num_pages=6,
+    )
+    outs = tight.run(_reqs(cfg, lens))
+    assert tight.preemptions > 0, "tight pool must preempt"
+    _assert_same_tokens(outs, ref_outs)
+    assert tight.pool.in_use == 0
+
+
+def test_int8_prefix_sharing_token_identical_to_int8_cold(model_and_params):
+    """Prefix sharing over int8 pages: aliasing quantized pages is pure
+    placement, so warm == cold within the int8 engine, bitwise."""
+    cfg, _, _ = model_and_params
+    shared = _reqs(cfg, [P, P], gen=4)
+    shared[1] = Request(uid=1, prompt=shared[0].prompt, max_new_tokens=4)
+
+    def run(prefix):
+        eng = _build(
+            model_and_params, paged_cache=True, page_size=4,
+            kv_dtype="int8", num_slots=1, prefix_cache=prefix,
+        )
+        outs = eng.run([Request(uid=r.uid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens)
+                        for r in shared])
+        return eng, outs
+
+    warm_eng, warm = run(True)
+    _, cold = run(False)
+    assert warm_eng.pool_stats["prefix_hit_rate"] > 0
+    _assert_same_tokens(warm, cold)
+
+
+def test_paged_cache_specs_int8_shapes(model_and_params):
+    """Dry-run specs mirror the quantized pool: int8 payload + fp32 scale
+    planes at 1/head_dim the page bytes."""
+    from repro.launch.specs import paged_cache_specs
+
+    cfg, model, _ = model_and_params
+    specs = paged_cache_specs(
+        model, num_slots=3, num_pages=9, page_size=4, table_width=8,
+        kv_dtype="int8",
+    )
+    assert specs["k"].dtype == jnp.int8
+    assert specs["ks"].dtype == jnp.float32
+    assert specs["ks"].shape == specs["k"].shape[:-1]
+    assert specs["vs"].shape == specs["v"].shape[:-1]

@@ -194,6 +194,62 @@ def test_live_refs_counts_shares():
     assert pool.live_refs == 6  # 3 + 2 extra + 1 extra
 
 
+def test_cross_tier_demote_promote_refcounts_exact():
+    """Refcount safety across the host-tier boundary: demoting an indexed
+    page drops only the INDEX's ref (a live co-reader keeps the page
+    resident — the tier gets a copy, never the page), and promotion
+    materializes a FRESH rc=1 page rather than resurrecting the old id.
+    No ref is leaked or double-freed end to end."""
+    from repro.launch.prefix_cache import PrefixCache
+
+    pool = PagePool(num_pages=8, page_size=2)
+    host: dict[tuple, int] = {}  # fake tier: prefix tokens -> demoted page
+
+    def demote(prefix, page):
+        host[prefix] = page  # the engine copies bytes; the id suffices here
+
+    def promote(prefix):
+        if prefix not in host:
+            return None
+        pages = pool.alloc(1)
+        if pages is None:
+            return None
+        host.pop(prefix)
+        return pages[0]
+
+    cache = PrefixCache(pool, max_pages=1, demote_fn=demote,
+                        promote_fn=promote)
+    toks = [7, 7]
+    (p,) = pool.alloc(1)          # slot A writes the page…
+    cache.insert(toks, [p])       # …and publishes it: index ref
+    assert pool.refcount(p) == 2
+    (hit,) = cache.match(toks)    # slot B maps the hit and takes its ref
+    assert hit == p
+    pool.share(p)
+    assert pool.refcount(p) == 3
+    (q,) = pool.alloc(1)          # a different prefix at max_pages=1:
+    cache.insert([9, 9], [q])     # inserting evicts p's node → demote
+    assert host == {(7, 7): p}
+    # eviction dropped exactly the index's ref; both slots keep the page
+    assert pool.refcount(p) == 2 and pool.in_use == 2
+    pool.free([p])                # slot A retires
+    pool.free([p])                # slot B retires — NOW the page dies
+    assert pool.refcount(p) == 0
+    # radix miss promotes the demoted copy into a fresh rc=1 page whose
+    # ref belongs to the index (the tier entry is consumed)
+    (promoted,) = cache.match(toks)
+    assert (7, 7) not in host and cache.size == 1
+    assert pool.refcount(promoted) == 1
+    # adopting the promoted node at the cap evicted q's node (demote), so
+    # q now lives only through its slot's ref — and q's content moved to
+    # the tier in the same motion
+    assert pool.refcount(q) == 1 and host == {(9, 9): q}
+    pool.free([q])
+    cache.clear()                 # drops the index's promoted-page ref
+    assert pool.in_use == 0 and pool.live_refs == 0
+    assert pool.available == pool.capacity
+
+
 @given(
     ops=st.lists(st.integers(0, 9), min_size=1, max_size=60),
     num_pages=st.integers(3, 13),

@@ -1,0 +1,328 @@
+"""Tiered host↔device KV cache tests (launch/engine.py, host_pages>0).
+
+The contract: the host tier is a pure PERFORMANCE layer. Swap-resume
+restores the bitwise pages a preempted slot held, so every trace must be
+token-identical to the recompute-resume engine (which stays the oracle) —
+across greedy and sampled decoding, chunked and interleaved prefill, and
+every degraded path: a tier too small for the victim, an entry dropped by
+LRU mid-queue, a shed request, and an export to another engine. What the
+tier buys is visible only in the counters: swap-resumes add ZERO prefill
+tokens where recompute re-prefills prompt + generated per resume.
+
+``HostTier`` itself is exact host-side bookkeeping (LRU over page-counted
+entries), unit-tested first without a model.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import (
+    HostTier,
+    Request,
+    ServeEngine,
+    make_requests,
+)
+from repro.launch.sampling import SamplingParams
+
+ARCH = "stablelm-1.6b"
+P, G = 8, 6  # default prompt / generated tokens (ring cap 14)
+
+
+# --------------------------------------------------------- HostTier (unit)
+class TestHostTier:
+    def _arrays(self, n):
+        return {"k": np.ones((2, n, 3), np.int8)}
+
+    def test_capacity_must_be_positive(self):
+        with pytest.raises(ValueError, match="capacity"):
+            HostTier(0)
+
+    def test_put_get_pop_accounting(self):
+        host = HostTier(4)
+        assert host.put(("swap", 1), self._arrays(2), 2)
+        assert host.pages == 2
+        assert host.n_pages(("swap", 1)) == 2
+        got = host.get(("swap", 1))
+        assert got is not None and got["k"].shape[1] == 2
+        assert host.get(("swap", 9)) is None
+        popped = host.pop(("swap", 1))
+        assert popped is not None and popped["k"].shape[1] == 2
+        assert host.pages == 0 and host.n_pages(("swap", 1)) == 0
+        assert host.pop(("swap", 1)) is None
+
+    def test_lru_eviction_order_and_touch(self):
+        host = HostTier(4)
+        host.put(("swap", 1), self._arrays(2), 2)
+        host.put(("swap", 2), self._arrays(2), 2)
+        host.get(("swap", 1))  # touch: 2 becomes LRU
+        assert host.put(("swap", 3), self._arrays(2), 2)
+        assert host.evictions == 1
+        assert host.n_pages(("swap", 2)) == 0  # the untouched entry went
+        assert host.n_pages(("swap", 1)) == 2
+        assert host.pages == 4
+
+    def test_oversized_entry_refused_without_eviction(self):
+        host = HostTier(4)
+        host.put(("swap", 1), self._arrays(3), 3)
+        assert not host.put(("swap", 2), self._arrays(5), 5)
+        assert host.evictions == 0  # refusal must not churn the tier
+        assert host.n_pages(("swap", 1)) == 3
+
+    def test_reput_same_key_replaces(self):
+        host = HostTier(4)
+        host.put(("swap", 1), self._arrays(3), 3)
+        host.put(("swap", 1), self._arrays(2), 2)
+        assert host.pages == 2
+        assert host.n_pages(("swap", 1)) == 2
+
+    def test_clear(self):
+        host = HostTier(4)
+        host.put(("swap", 1), self._arrays(2), 2)
+        host.clear()
+        assert host.pages == 0 and host.get(("swap", 1)) is None
+
+
+# ------------------------------------------------------------ engine layer
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _build(model_and_params, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_seq", P + G)
+    kw.setdefault("paged_cache", True)
+    kw.setdefault("page_size", 4)
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(cfg, lens, *, gen=G, uid0=0, seed=0):
+    base = make_requests(
+        cfg, n_requests=len(lens), prompt_len=max(lens), gen_tokens=gen,
+        seed=seed,
+    )
+    return [
+        Request(uid=uid0 + j, prompt=r.prompt[: lens[j]], max_new_tokens=gen)
+        for j, r in enumerate(base)
+    ]
+
+
+def _assert_same_tokens(a, b):
+    ref = {o.uid: o.tokens for o in b}
+    assert len(a) == len(b)
+    for o in a:
+        assert o.tokens == ref[o.uid], (
+            f"uid {o.uid}: {o.tokens} != {ref[o.uid]}"
+        )
+
+
+def test_host_pages_requires_paged_cache(model_and_params):
+    with pytest.raises(ValueError, match="paged"):
+        _build(model_and_params, paged_cache=False, host_pages=8)
+
+
+def test_swap_resume_token_identical_and_prefill_free(model_and_params):
+    """The load-bearing identity + perf claim in one trace: a tight pool
+    preempts, the swap engine resumes via device scatter, and its output is
+    bitwise the ample-pool run — while its prefill_tokens stay at the
+    fault-free minimum (sum of prompts) where recompute-resume pays prompt
+    + generated again per resume."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7]
+    ample = _build(model_and_params)
+    ref = ample.run(_reqs(cfg, lens))
+    assert ample.preemptions == 0
+    recompute = _build(model_and_params, num_pages=6)
+    swap = _build(model_and_params, num_pages=6, host_pages=16)
+    rc_outs = recompute.run(_reqs(cfg, lens))
+    sw_outs = swap.run(_reqs(cfg, lens))
+    assert recompute.preemptions > 0 and swap.preemptions > 0
+    _assert_same_tokens(rc_outs, ref)
+    _assert_same_tokens(sw_outs, ref)
+    # swap-resume never re-prefills: every resumed page came back via
+    # scatter, so prefill work equals the no-preemption minimum
+    sw_stats, rc_stats = swap.pool_stats, recompute.pool_stats
+    assert sw_stats["prefill_tokens"] == sum(lens)
+    assert rc_stats["prefill_tokens"] > sum(lens)
+    assert sw_stats["swapped_out_pages"] > 0
+    assert sw_stats["swapped_in_pages"] == sw_stats["swapped_out_pages"]
+    assert rc_stats["swapped_out_pages"] == 0
+    # tier drained: every swapped entry was consumed by its resume
+    assert swap.host.pages == 0
+    assert sw_stats["swap_enabled"] and not rc_stats["swap_enabled"]
+    assert sw_stats["host_capacity_pages"] == 16
+
+
+def test_swap_resume_preserves_sampling_streams(model_and_params):
+    """Swap-in must not replay or skip PRNG draws: sampled output under a
+    swapping pool equals the ample-pool run stream-for-stream."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 6]
+
+    def reqs():
+        rs = _reqs(cfg, lens)
+        for r in rs:
+            r.sampling = SamplingParams(
+                temperature=0.9, top_k=7, seed=100 + r.uid
+            )
+        return rs
+
+    ref = _build(model_and_params).run(reqs())
+    swap = _build(model_and_params, num_pages=6, host_pages=16)
+    outs = swap.run(reqs())
+    assert swap.preemptions > 0
+    assert swap.swapped_in_pages > 0
+    _assert_same_tokens(outs, ref)
+
+
+def test_interleaved_swap_resume_token_identical(model_and_params):
+    """Interleaved prefill preempts lazily-growing slots (possibly
+    mid-prompt, pos < len(prompt)); the swap path must restore exactly the
+    written prefix and teacher-force the rest through pending."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 5]
+    ref = _build(model_and_params, prefill="interleaved").run(
+        _reqs(cfg, lens)
+    )
+    swap = _build(
+        model_and_params, prefill="interleaved", num_pages=6, host_pages=16
+    )
+    outs = swap.run(_reqs(cfg, lens))
+    assert swap.preemptions > 0
+    assert swap.swapped_in_pages > 0
+    _assert_same_tokens(outs, ref)
+
+
+def test_host_tier_too_small_falls_back_to_recompute(model_and_params):
+    """A victim bigger than the whole tier refuses the put (no partial
+    swap) and resumes through recompute — output unchanged."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7]
+    ref = _build(model_and_params).run(_reqs(cfg, lens))
+    swap = _build(model_and_params, num_pages=6, host_pages=1)
+    outs = swap.run(_reqs(cfg, lens))
+    assert swap.preemptions > 0
+    assert swap.swapped_out_pages == 0  # every victim held >1 page
+    assert swap.swapped_in_pages == 0
+    _assert_same_tokens(outs, ref)
+
+
+def test_dropped_host_entry_falls_back_to_recompute(model_and_params):
+    """An entry the tier dropped while its request queued (here: forced
+    with clear(), the LRU-eviction worst case) downgrades that resume to
+    recompute mid-run — token identity must survive the mixed trace."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7]
+    ref = _build(model_and_params).run(_reqs(cfg, lens))
+    swap = _build(model_and_params, num_pages=6, host_pages=16)
+    for r in _reqs(cfg, lens):
+        swap.submit(r)
+    outs = []
+    while swap.has_work:
+        outs.extend(swap.step())
+        if swap.swapped_out_pages > 0 and swap.host.pages > 0:
+            swap.host.clear()  # drop queued victims' entries
+    assert swap.swapped_out_pages > 0
+    # the cleared entries never swapped back in
+    assert swap.swapped_in_pages < swap.swapped_out_pages
+    _assert_same_tokens(sorted(outs, key=lambda o: o.uid), ref)
+
+
+def test_shed_queued_victim_drops_host_entry(model_and_params):
+    """A mid-prefill victim (no generated tokens — NOT mid-stream, so not
+    shed-exempt) queued past its deadline is shed AND its host-tier entry
+    is released with it; the survivor still matches the ample run."""
+    cfg, _, _ = model_and_params
+    lens = [14, 14]
+    ref = _build(
+        model_and_params, prefill="interleaved", max_seq=16, num_slots=2
+    ).run(_reqs(cfg, lens, gen=2))
+    swap = _build(
+        model_and_params, prefill="interleaved", max_seq=16, num_slots=2,
+        num_pages=6, host_pages=16,
+    )
+    for r in _reqs(cfg, lens, gen=2):
+        swap.submit(r)
+    victim_uid = None
+    outs = []
+    for _ in range(200):
+        outs.extend(swap.step())
+        if victim_uid is None:
+            for uid, resume in swap._resume.items():
+                if not resume.generated and resume.host_key is not None:
+                    victim_uid = uid
+                    for req in swap.waiting:
+                        if req.uid == uid:
+                            req.deadline_s = 1e-9
+                    break
+        if not swap.has_work:
+            break
+    assert victim_uid is not None, "no mid-prefill swap victim occurred"
+    assert not swap.has_work
+    assert swap.shed_requests == 1
+    assert swap.shed[0].uid == victim_uid
+    assert swap.shed[0].reason == "deadline_exceeded"
+    # shedding released the tier entry along with the resume record
+    assert swap.host.n_pages(("swap", victim_uid)) == 0
+    assert swap.host.pages == 0
+    assert victim_uid not in swap._resume
+    survivors = {o.uid for o in outs}
+    assert victim_uid not in survivors
+    _assert_same_tokens(
+        sorted(outs, key=lambda o: o.uid),
+        [o for o in ref if o.uid in survivors],
+    )
+
+
+def test_export_inflight_strips_host_entries(model_and_params):
+    """Migration: exported resume records carry no host_key (swapped pages
+    live in the SOURCE engine's tier, which is drained), and the importing
+    engine resumes through recompute token-identically."""
+    cfg, _, _ = model_and_params
+    lens = [P, P, 7]
+    ref = _build(model_and_params).run(_reqs(cfg, lens))
+    src = _build(model_and_params, num_pages=6, host_pages=16)
+    for r in _reqs(cfg, lens):
+        src.submit(r)
+    while src.has_work and src.host.pages == 0:
+        src.step()
+    assert src.host.pages > 0, "no swapped-out victim queued at export time"
+    items = src.export_inflight()
+    assert src.host.pages == 0  # exported entries released, none leaked
+    assert all(
+        resume is None or resume.host_key is None for _, resume in items
+    )
+    assert not src.has_work
+    dst = _build(model_and_params)  # no tier: only recompute can resume
+    dst.import_inflight(items)
+    outs = src.finished + dst.run()
+    _assert_same_tokens(sorted(outs, key=lambda o: o.uid), ref)
+
+
+def test_prefix_demote_promote_round_trip(model_and_params):
+    """Cold prefix pages demoted under index pressure come BACK: a later
+    radix miss promotes the host copy into a fresh pool page and serves the
+    prompt as a prefix hit, token-identically to the original run."""
+    cfg, _, _ = model_and_params
+    engine = _build(
+        model_and_params, max_seq=16, num_slots=1, num_pages=8,
+        prefix_cache=True, prefix_cache_pages=2, host_pages=8,
+    )
+    req_a = _reqs(cfg, [8], gen=4, uid0=0, seed=0)
+    req_b = _reqs(cfg, [8], gen=4, uid0=1, seed=7)
+    assert list(req_a[0].prompt) != list(req_b[0].prompt)
+    ref = engine.run(req_a)  # publishes A's 2 full prompt pages
+    engine.run(req_b)        # tiny index: B's pages evict A's → demote
+    assert engine.host_demoted_pages >= 2
+    assert engine.host.pages > 0
+    again = Request(uid=10, prompt=req_a[0].prompt, max_new_tokens=4)
+    outs = engine.run([again])
+    assert engine.host_promote_hits == 2  # both of A's pages came back
+    assert engine.prefix_hit_pages >= 2
+    assert outs[0].tokens == ref[0].tokens
