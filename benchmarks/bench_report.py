@@ -9,10 +9,13 @@ count, steady warm-round seconds) added with prefix sharing, the
 tensor-parallel columns (shard count, sharded tokens/sec) added with
 mesh-sharded serving, the fault-tolerance columns (migrations,
 migrated requests, sheds, per-replica occupancy, routed tokens/sec) added
-with the multi-replica router, and the tiered/quantized-KV columns (int8
+with the multi-replica router, the tiered/quantized-KV columns (int8
 residency ratio and token agreement at an equal pool byte budget,
 host-tier swap-ins, swap-vs-recompute resume walls) added with the
-host↔device KV tier. Entries predating a column render as "—".
+host↔device KV tier, and the speculative-decoding columns (same-params
+draft acceptance, spec tokens/sec, target dispatches per emitted token,
+dispatch-count reduction) added with draft-model lookahead.
+Entries predating a column render as "—".
 In CI it lands on the job's step summary page.
 
 Output goes to ``$GITHUB_STEP_SUMMARY`` when set (the GitHub Actions
@@ -57,6 +60,10 @@ COLUMNS = (
     ("swap in", "tiered_swapped_in_pages", "{}"),
     ("swap wall (s)", "tiered_wall_swap_s", "{:.2f}"),
     ("recompute wall (s)", "tiered_wall_recompute_s", "{:.2f}"),
+    ("spec accept", "spec_accept_rate", "{:.0%}"),
+    ("spec tok/s", "spec_tok_s", "{:.1f}"),
+    ("spec disp/tok", "spec_dispatches_per_token", "{:.2f}"),
+    ("spec disp ×", "spec_dispatch_reduction", "{:.1f}"),
     ("migrations", "router_migrations", "{}"),
     ("migrated", "router_migrated_requests", "{}"),
     ("shed", "router_shed_requests", "{}"),

@@ -65,6 +65,15 @@ walls — the swap-vs-recompute resume contrast in the trajectory.
 ``--tiered-probe`` runs just these two probes — the CI tiered smoke job's
 entry point.
 
+Burst mode also runs the SPEC-DECODE probe (``bench_spec``): the burst
+trace target-only vs. draft-model speculative decoding (k-token lookahead
+verified in one batched suffix-prefill dispatch per round). The
+same-params draft row is the deterministic upper bound CI pins — greedy
+tokens bitwise identical and ≥ 1.5× fewer target dispatches are both
+asserted — and a foreign-seed draft row records realistic acceptance.
+``--spec-probe`` runs just this probe — the CI spec smoke job's entry
+point.
+
 ``--smoke`` is the CI-sized burst run. Besides the usual
 ``benchmarks/results.json`` entry it APPENDS a timestamped entry to
 ``BENCH_serve.json`` at the repo root — the perf trajectory future PRs
@@ -713,6 +722,91 @@ def bench_router(args) -> dict:
     }
 
 
+def bench_spec(args) -> dict:
+    """Speculative-decoding probe: the burst trace through the paged
+    engine target-only vs. with a draft proposing ``--spec-tokens``
+    lookahead tokens per slot per round, verified in one batched
+    suffix-prefill dispatch.
+
+    The CI-pinned upper bound uses a SAME-ARCH draft initialized from the
+    SAME seed — identical parameters, so the target agrees with every
+    proposal and acceptance sits at ~100%. That makes the probe
+    deterministic: greedy tokens must be BITWISE identical to the
+    target-only engine (asserted), and the engine must take ≥ 1.5× fewer
+    target dispatches overall (asserted; at full acceptance a k-token
+    round replaces k+1 decode steps, so the per-token dispatch rate
+    approaches 1/(k+1) against the non-spec engine's 1.0). A second
+    FOREIGN-seed draft row records the realistic-acceptance contrast —
+    reported, not asserted, since a randomly initialized smoke draft's
+    agreement is an accident of the seed."""
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_seq = max(args.prompt_lens) + args.gen
+
+    def trace():
+        return burst_trace(
+            cfg, n_requests=args.requests, burst_size=max(args.burst, 1),
+            gap=0.0, prompt_lens=tuple(args.prompt_lens),
+            gen_tokens=args.gen, seed=args.seed,
+        )
+
+    out = {}
+    for label, draft_seed in (
+        ("target_only", None), ("spec", args.seed), ("spec_foreign", None),
+    ):
+        kw = {}
+        if label != "target_only":
+            dseed = args.seed if draft_seed is not None else args.seed + 7
+            dmodel = build_model(cfg)
+            kw = dict(
+                draft_model=dmodel,
+                draft_params=dmodel.init(jax.random.PRNGKey(dseed)),
+                spec_tokens=args.spec_tokens,
+            )
+        engine = ServeEngine(
+            model, params, num_slots=args.slots, max_seq=max_seq,
+            prefill="chunked", paged_cache=True, page_size=args.page_size,
+            **kw,
+        )
+        t0 = time.time()
+        outs = engine.run(trace())
+        wall = time.time() - t0
+        total = sum(len(o.tokens) for o in outs)
+        ps = engine.pool_stats
+        out[label] = {
+            "wall_seconds": wall,
+            "tokens_per_second": total / max(wall, 1e-9),
+            "engine_steps": engine.steps,
+            "spec_rounds": ps["spec_rounds"],
+            "spec_accept_rate": ps["spec_accept_rate"],
+            "spec_dispatches_per_token": ps["spec_dispatches_per_token"],
+            "pool_occupancy_max": ps["occupancy_max"],
+            "generated": [o.tokens for o in outs],
+        }
+    base, spec = out["target_only"], out["spec"]
+    assert spec["generated"] == base["generated"], (
+        "speculative decoding changed greedy output (same-params draft)"
+    )
+    assert out["spec_foreign"]["generated"] == base["generated"], (
+        "speculative decoding changed greedy output (foreign draft)"
+    )
+    reduction = base["engine_steps"] / max(spec["engine_steps"], 1)
+    assert reduction >= 1.5, (
+        f"same-params draft cut target dispatches only {reduction:.2f}x "
+        f"({base['engine_steps']} -> {spec['engine_steps']} steps) — "
+        "lookahead is not landing"
+    )
+    for m in out.values():
+        del m["generated"]
+    return {
+        "spec_tokens": args.spec_tokens,
+        "dispatch_reduction": reduction,
+        "token_identical": True,  # asserted above, recorded for the seed
+        **out,
+    }
+
+
 _SHARDED_PROBE_MARK = "SHARDED_PROBE_JSON "
 
 
@@ -861,6 +955,7 @@ def bench_burst(args) -> dict:
         "tiered": bench_tiered(args),
         "sharded": bench_sharded(args),
         "router": bench_router(args),
+        "spec": bench_spec(args),
         **out,
     }
 
@@ -883,6 +978,7 @@ def write_bench_seed(res: dict) -> None:
     rt = res["router"]
     k8 = res["kv_int8"]
     td = res["tiered"]
+    sd = res["spec"]
     entry = {
         "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"
@@ -958,6 +1054,13 @@ def write_bench_seed(res: dict) -> None:
         "tiered_wall_recompute_s": td["recompute"]["wall_seconds"],
         "tiered_prefill_tokens_swap": td["swap"]["prefill_tokens"],
         "tiered_prefill_tokens_recompute": td["recompute"]["prefill_tokens"],
+        "spec_tokens_k": sd["spec_tokens"],
+        "spec_accept_rate": sd["spec"]["spec_accept_rate"],
+        "spec_tok_s": sd["spec"]["tokens_per_second"],
+        "spec_tok_s_base": sd["target_only"]["tokens_per_second"],
+        "spec_dispatches_per_token": sd["spec"]["spec_dispatches_per_token"],
+        "spec_dispatch_reduction": sd["dispatch_reduction"],
+        "spec_accept_rate_foreign": sd["spec_foreign"]["spec_accept_rate"],
     }
     trajectory = {"schema": 2, "entries": []}
     if os.path.exists(BENCH_SEED_PATH):
@@ -1047,6 +1150,15 @@ def _parser():
                     "preemption resume — asserts swapped_in_pages > 0, "
                     "fewer prefill tokens, and token identity) and print "
                     "their JSON — the CI tiered smoke job entry point")
+    ap.add_argument("--spec-probe", action="store_true",
+                    help="run ONLY the speculative-decoding probe (same-"
+                    "params draft for the deterministic ~100%% acceptance "
+                    "upper bound; asserts greedy token identity and >= "
+                    "1.5x fewer target dispatches) and print its JSON — "
+                    "the CI spec smoke job entry point")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="[spec probe] draft lookahead tokens per slot "
+                    "per round")
     ap.add_argument("--kill-step", type=int, default=3,
                     help="[router probe] kill replica 0 at its own step "
                     "number (default lands mid-decode for smoke sizes)")
@@ -1086,6 +1198,24 @@ def run(argv: list[str] | None = None):
             "to fault-free engine",
         )
         print("ROUTER_PROBE_JSON " + json.dumps(res))
+        return res
+
+    if args.spec_probe:
+        res = bench_spec(args)
+        sp_ = res["spec"]
+        emit(
+            "serve_spec_decode",
+            res["dispatch_reduction"],
+            f"k={res['spec_tokens']} same-params draft: accept "
+            f"{sp_['spec_accept_rate']:.0%}, "
+            f"{sp_['spec_dispatches_per_token']:.2f} dispatch/tok, "
+            f"{res['dispatch_reduction']:.1f}x fewer target dispatches "
+            f"({res['target_only']['engine_steps']} -> "
+            f"{sp_['engine_steps']} steps); foreign-draft accept "
+            f"{res['spec_foreign']['spec_accept_rate']:.0%} — greedy "
+            "tokens identical",
+        )
+        print("SPEC_PROBE_JSON " + json.dumps(res))
         return res
 
     if args.tiered_probe:
@@ -1193,6 +1323,18 @@ def run(argv: list[str] | None = None):
             f"per-shard occ {sh['sharded']['occupancy_max']:.0%}, "
             f"{sh['sharded']['prefill_compiles']} prefill compiles — "
             "tokens bitwise identical",
+        )
+        sd = res["spec"]
+        emit(
+            "serve_spec_decode",
+            sd["dispatch_reduction"],
+            f"k={sd['spec_tokens']} same-params draft: accept "
+            f"{sd['spec']['spec_accept_rate']:.0%}, "
+            f"{sd['spec']['spec_dispatches_per_token']:.2f} dispatch/tok, "
+            f"{sd['dispatch_reduction']:.1f}x fewer target dispatches; "
+            f"foreign-draft accept "
+            f"{sd['spec_foreign']['spec_accept_rate']:.0%} — greedy "
+            "tokens identical",
         )
         rt = res["router"]
         emit(

@@ -89,7 +89,12 @@ from repro.launch.mesh import (
     serve_shardings,
 )
 from repro.launch.prefix_cache import PrefixCache
-from repro.launch.sampling import SamplingParams, sample_token
+from repro.launch.sampling import (
+    SamplingParams,
+    sample_token,
+    speculative_acceptance,
+)
+from repro.launch.spec_decode import make_draft_backend
 from repro.models import attention, build_model
 from repro.models.model import ModelAPI, localize_config
 from repro.models.sharding import use_tensor_axis
@@ -336,13 +341,21 @@ class _ResumeState:
     bitwise the pages the slot held, so token-identity is trivial. A
     dropped tier entry (LRU) falls back to the recompute path above.
     ``pos`` is the slot's write position at preemption (tokens written =
-    prompt + generated[:-1] for a decoding slot)."""
+    prompt + generated[:-1] for a decoding slot).
+
+    ``host_arrays`` carries the page CONTENT itself (name → (L, n, …)
+    numpy) when the record migrates BETWEEN engines (``export_inflight``):
+    a host-tier key is meaningless outside the engine that owns the tier,
+    but the copied pages are engine-independent — ``import_inflight``
+    adopts layout-compatible arrays into the local tier so a migrated
+    request swaps in instead of re-prefilling its whole history."""
     generated: list[int]
     key: jax.Array | None
     first_token_time: float
     admit_time: float
     host_key: tuple | None = None
     pos: int = 0
+    host_arrays: dict | None = None
 
 
 @dataclasses.dataclass
@@ -513,6 +526,24 @@ class ServeEngine:
         0`` (silently off otherwise).
     prefix_cache_pages : cap on pages the prefix index may pin (0 = the
         pool's allocatable capacity).
+    draft_model, draft_params, spec_tokens : speculative decoding. A
+        second, cheap model (``spec_decode.make_draft_backend`` picks its
+        state layout: small KV ring for transformer-family drafts,
+        recurrent snapshots for ssm drafts like ``xlstm_125m``) proposes
+        ``spec_tokens`` lookahead tokens per live slot per scheduling
+        round; the TARGET model then scores ALL of them in ONE batched
+        suffix-prefill dispatch (``prefill_slots(starts=..., return_all_
+        logits=True)``) over the shared page pool instead of k sequential
+        decode dispatches. Accepted tokens keep the KV pages the verify
+        pass just wrote; the first rejection rolls back by pos truncation
+        plus freeing the round's unreached fresh pages — a table edit, no
+        recompute. Greedy requests emit BITWISE the tokens of the
+        non-speculative engine (the per-token decode path stays as the
+        oracle); sampled requests run Leviathan rejection sampling on
+        their request-uid PRNG streams, preserving the target
+        distribution (not bitwise-pinned). Requires paged_cache, chunked
+        prefill, window == 0, no mesh, and matching draft/target vocab;
+        all three arguments travel together.
     eos_id : optional token id that retires a sequence early.
     seed : engine-level sampling seed; requests without an explicit
         ``SamplingParams.seed`` draw from PRNGKey(seed) folded with their
@@ -555,6 +586,9 @@ class ServeEngine:
         kv_dtype: str = "fp",
         host_pages: int = 0,
         swap: bool = True,
+        draft_model: ModelAPI | None = None,
+        draft_params=None,
+        spec_tokens: int = 0,
         eos_id: int | None = None,
         seed: int = 0,
         max_wall_s: float = 0.0,
@@ -932,6 +966,132 @@ class ServeEngine:
         self._sample_rows = jax.jit(_rows)
         self._dummy_key = jax.random.PRNGKey(0)
 
+        # ---------------------------------------------- speculative decoding
+        # counters exist in every mode (pool_stats/bench schema stability);
+        # the machinery only when a draft is wired up
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.draft = None
+        self.spec_tokens = 0
+        if draft_model is not None or draft_params is not None or spec_tokens:
+            blockers = []
+            if draft_model is None or draft_params is None:
+                blockers.append("draft_model and draft_params are required")
+            if spec_tokens < 1:
+                blockers.append("spec_tokens must be >= 1")
+            if not paged_cache:
+                blockers.append(
+                    "paged_cache=False (rollback is a page-table edit)"
+                )
+            if prefill != "chunked":
+                blockers.append(
+                    f"prefill={prefill!r} (verification is a batched "
+                    "suffix-prefill round)"
+                )
+            if window != 0:
+                blockers.append(
+                    f"window={window} (suffix prefill is windowless)"
+                )
+            if mesh is not None:
+                blockers.append("mesh serving (single-device verify only)")
+            if model.prefill_slots is None:
+                blockers.append("target arch has no prefill_slots API")
+            if (
+                draft_model is not None
+                and draft_model.cfg.vocab_size != model.cfg.vocab_size
+            ):
+                blockers.append(
+                    f"draft vocab {draft_model.cfg.vocab_size} != target "
+                    f"vocab {model.cfg.vocab_size}"
+                )
+            if blockers:
+                raise ValueError(
+                    "speculative decoding unavailable: " + "; ".join(blockers)
+                )
+            self.spec_tokens = spec_tokens
+            self._compiles.update(
+                {"spec_verify": 0, "draft_propose": 0, "draft_prefill": 0}
+            )
+            limit = min(self.cap, self.pool.capacity * self.page_size)
+            self.draft = make_draft_backend(
+                draft_model, draft_params, num_slots=num_slots, cap=limit,
+                spec_tokens=spec_tokens, compiles=self._compiles,
+                donate=donate_cache,
+            )
+            # host mirror of each draft row's consumed-token count; -1 =
+            # diverged/dead, forcing a re-sync prefill before the next
+            # propose (slot reuse can never alias the old occupant's state)
+            self._draft_pos = np.full(num_slots, -1, np.int64)
+            self._spec_dummy_keys = jnp.stack([self._dummy_key] * num_slots)
+
+            # k-token verify: the suffix-prefill trace with logits at EVERY
+            # position (the cache write is bit-for-bit the plain suffix
+            # trace — tests pin greedy identity through this entry)
+            def _spec_verify_fn(p, c, t, l, s, st, pw):
+                self._compiles["spec_verify"] += 1
+                return serve_model.prefill_slots(
+                    p, c, t, l, s, starts=st, prefix_pages=pw,
+                    window=window, return_all_logits=True,
+                )
+
+            self._spec_verify = jax.jit(
+                _spec_verify_fn, donate_argnums=donate, static_argnums=(6,),
+            )
+
+            # masked pos correction: verify advances every dispatched row
+            # to starts+lengths (= p + k + 1); acceptance truncates each to
+            # its accepted span. One compile, reused every round.
+            def _fix_pos_fn(c, pos_vec, mask):
+                return {
+                    **c, "pos": jnp.where(mask, pos_vec, c["pos"]),
+                }
+
+            self._fix_pos = jax.jit(
+                _fix_pos_fn, donate_argnums=(0,) if donate_cache else ()
+            )
+
+            # batched per-row round-key split (mirrors _sample_rows'
+            # fixed-width discipline: dummy rows for greedy slots)
+            def _split_fn(keys):
+                def one(k):
+                    nk, sub = jax.random.split(k)
+                    return nk, sub
+
+                return jax.vmap(one)(keys)
+
+            self._spec_split = jax.jit(_split_fn)
+
+            # batched acceptance: one vmapped rejection-sampling dispatch
+            # over the verify round's rows (greedy/padding rows ride along
+            # with dummy keys; their outputs are discarded host-side).
+            # fold_in(sub, 2) keeps the acceptance uniforms on a stream
+            # disjoint from the draft's (sub, 1, t) proposal draws.
+            kk = spec_tokens
+            vocab = model.cfg.vocab_size
+
+            def _accept_fn(keys, vlog, dtoks, dlogq, klive, temps, tks, tps):
+                def one(key, tl, dt, dq, kl, t, k, p):
+                    # verify rows are padded to the round's length bucket;
+                    # clip-take exactly k+1 positions (rows past each row's
+                    # own k_live are never read by the acceptance math)
+                    tl = jnp.take(
+                        tl,
+                        jnp.minimum(jnp.arange(kk + 1), tl.shape[0] - 1),
+                        axis=0,
+                    )
+                    return speculative_acceptance(
+                        jax.random.fold_in(key, 2), tl, dt, dq, kl,
+                        t, k, p, vocab,
+                    )
+
+                return jax.vmap(one)(
+                    keys, vlog, dtoks, dlogq, klive, temps, tks, tps
+                )
+
+            self._spec_accept = jax.jit(_accept_fn)
+
         self.waiting: collections.deque[Request] = collections.deque()
         self.slots: list[_Slot | None] = [None] * num_slots
         self.finished: list[RequestOutput] = []
@@ -982,6 +1142,10 @@ class ServeEngine:
         self.host_promote_hits = 0
         self.suffix_dispatches = 0
         self.cold_dispatches = 0
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
         if self.paged_cache:
             self.pool.peak_in_use = self.pool.in_use
         if self.prefix is not None:
@@ -1125,6 +1289,27 @@ class ServeEngine:
             "swapped_in_pages": self.swapped_in_pages,
             "host_demoted_pages": self.host_demoted_pages,
             "host_promote_hits": self.host_promote_hits,
+            # speculative decoding: accept_rate is accepted DRAFTS over
+            # proposed drafts (the bonus/rejection token is free either
+            # way); dispatches_per_token is target decode dispatches per
+            # emitted token — 1.0 for the non-spec engine, 1/(k+1) at full
+            # acceptance
+            "spec_enabled": self.draft is not None,
+            "spec_tokens": self.spec_tokens,
+            "spec_rounds": self.spec_rounds,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "spec_accept_rate": (
+                self.spec_accepted / self.spec_drafted
+                if self.spec_drafted
+                else 0.0
+            ),
+            "spec_dispatches_per_token": (
+                self.spec_rounds / self.spec_emitted
+                if self.spec_emitted
+                else 0.0
+            ),
         }
 
     @property
@@ -1640,6 +1825,8 @@ class ServeEngine:
             )
         )
         self.slots[i] = None
+        if self.draft is not None:
+            self._draft_pos[i] = -1  # next occupant must re-sync the draft
         if self.paged_cache:
             if self.prefix is not None:
                 # publish the slot's FULL prompt pages into the prefix
@@ -1685,6 +1872,8 @@ class ServeEngine:
             )
         )
         self.slots[i] = None
+        if self.draft is not None:
+            self._draft_pos[i] = -1
         if self.paged_cache:
             self.pool.free(self._slot_pages[i])
             self._slot_pages[i] = []
@@ -1825,6 +2014,8 @@ class ServeEngine:
         )
         self.waiting.appendleft(slot.req)
         self.slots[i] = None
+        if self.draft is not None:
+            self._draft_pos[i] = -1
         self.preemptions += 1
 
     # ------------------------------------------------------------ migration
@@ -1840,15 +2031,23 @@ class ServeEngine:
         router fronting real replica processes would hold anyway — it has
         streamed every generated token to the client, and the request-keyed
         PRNG stream is derivable from (seed, uid, tokens emitted), since
-        each emission advances the key by one ``jax.random.split``. No
-        device (KV) state crosses engines: ``import_inflight`` re-derives
-        it through the resume re-prefill path, which is what makes failover
-        token-exact rather than approximate."""
+        each emission advances the key by one ``jax.random.split``.
+
+        KV pages ride along as HOST-SIDE COPIES (``host_arrays``) when the
+        engine can take them: a live slot's pages are gathered
+        device→host before being freed, and a waiting request's
+        already-swapped tier entry is popped into its record (the tier KEY
+        is meaningless to another engine; the content is not). A
+        layout-compatible importer adopts them into its own tier and the
+        migrated request swaps back in with one scatter — no re-prefill.
+        Incompatible or absent arrays fall back to the recompute-resume
+        path, which remains the oracle."""
         items: list[tuple[Request, _ResumeState | None]] = []
         live = sorted(
             (i for i, s in enumerate(self.slots) if s is not None),
             key=lambda i: self.slots[i].seq,
         )
+        can_carry = self.paged_cache and self.mesh is None
         for i in live:
             slot = self.slots[i]
             resume = None
@@ -1858,9 +2057,18 @@ class ServeEngine:
                     key=slot.key,
                     first_token_time=slot.first_token_time,
                     admit_time=slot.admit_time,
+                    pos=slot.pos_host,
                 )
+                if can_carry and self._slot_pages[i]:
+                    # copy BEFORE the free below — a freed page may be
+                    # rewritten by the importer's very first dispatch
+                    resume.host_arrays = self._gather_host(
+                        self._slot_pages[i]
+                    )
             items.append((slot.req, resume))
             self.slots[i] = None
+            if self.draft is not None:
+                self._draft_pos[i] = -1
             if self.paged_cache:
                 self.pool.free(self._slot_pages[i])
                 self._slot_pages[i] = []
@@ -1870,13 +2078,41 @@ class ServeEngine:
             req = self.waiting.popleft()
             resume = self._resume.pop(req.uid, None)
             if resume is not None and resume.host_key is not None:
-                # swapped pages live in THIS engine's host tier; the
-                # importing engine resumes through recompute instead
+                # pop the swapped pages out of THIS engine's tier and carry
+                # their content in the record itself
                 if self.host is not None:
-                    self.host.pop(resume.host_key)
+                    resume.host_arrays = self.host.pop(resume.host_key)
                 resume.host_key = None
             items.append((req, resume))
         return items
+
+    def _adopt_host_arrays(
+        self, uid: int, resume: _ResumeState, arrays: dict
+    ) -> bool:
+        """Take a migrated record's page content into the LOCAL host tier
+        (under this engine's own ("swap", uid) key) so admission swaps the
+        request in instead of recomputing. Adoption requires an exactly
+        matching pool layout — same plane set (fp vs int8+scales), same
+        layer count, page shape and dtypes — anything else recomputes."""
+        if self.host is None or resume.pos <= 0:
+            return False
+        if set(arrays) != set(self._kv_names):
+            return False
+        for name in self._kv_names:
+            ref = self.cache[name]
+            a = arrays[name]
+            if (
+                a.shape[0] != ref.shape[0]
+                or a.shape[2:] != tuple(ref.shape[2:])
+                or a.dtype != np.dtype(ref.dtype)
+            ):
+                return False
+        n = int(arrays[self._kv_names[0]].shape[1])
+        key = ("swap", uid)
+        if not self.host.put(key, arrays, n):
+            return False
+        resume.host_key = key
+        return True
 
     def import_inflight(
         self, items: list[tuple[Request, _ResumeState | None]]
@@ -1896,6 +2132,9 @@ class ServeEngine:
                     "static capacity",
                 )
             if resume is not None and resume.generated:
+                if resume.host_arrays is not None:
+                    self._adopt_host_arrays(req.uid, resume, resume.host_arrays)
+                    resume.host_arrays = None
                 self._resume[req.uid] = resume
             self.waiting.appendleft(req)
 
@@ -1928,6 +2167,260 @@ class ServeEngine:
                 if victim == i:
                     break  # the needy slot itself went back to the queue
 
+    # ------------------------------------------------------- spec decoding
+    def _ensure_spec_pages(
+        self, live: list[int], k_r: dict[int, int]
+    ) -> dict[int, list[tuple[int, int]]]:
+        """BEST-EFFORT lookahead pages for a speculative round: slot ``i``
+        verifying ``k_r[i]`` drafts writes positions ``pos .. pos+k_r[i]``,
+        which may cross into logical pages beyond the one
+        ``_ensure_decode_pages`` guarantees. Lookahead pages never preempt
+        live work and never dip below the admission watermark — when the
+        pool is tight the round simply runs SHALLOWER (``k_r`` shrinks to
+        what the covered pages can hold; 0 degenerates to a 1-token verify,
+        i.e. plain decode with an extra logit row). Returns the freshly
+        allocated (page_index, page) pairs per slot so rejection rollback
+        can free exactly the pages that ended up holding no kept tokens."""
+        fresh: dict[int, list[tuple[int, int]]] = {}
+        for i in live:
+            p = self.slots[i].pos_host
+            first = p // self.page_size + 1
+            last = (p + k_r[i]) // self.page_size
+            got = []
+            for pi in range(first, last + 1):
+                if self._table_np[i, pi] != 0:
+                    continue
+                pages = None
+                if self.pool.available > self.watermark_pages:
+                    pages = self.pool.alloc(1)
+                if (
+                    pages is None
+                    and self.prefix is not None
+                    and self.prefix.evict(1) > 0
+                    and self.pool.available > self.watermark_pages
+                ):
+                    pages = self.pool.alloc(1)
+                if pages is None:
+                    k_r[i] = pi * self.page_size - 1 - p
+                    break
+                self._slot_pages[i].append(pages[0])
+                self._table_np[i, pi] = pages[0]
+                self._table_dirty = True
+                got.append((pi, pages[0]))
+            if got:
+                fresh[i] = got
+        return fresh
+
+    def _rollback_spec_pages(
+        self, i: int, fresh_i: list[tuple[int, int]], keep_pos: int
+    ) -> None:
+        """Free the round's fresh lookahead pages past the accepted span:
+        after acceptance the slot keeps ``keep_pos`` written tokens, so a
+        fresh page whose index is beyond the last kept token's page holds
+        only rejected KV. Pre-existing pages are never touched (they hold
+        committed history), so rejection storms cannot leak or double-free
+        — the accounting invariant the spec tests pin."""
+        last = (keep_pos - 1) // self.page_size
+        for pi, page in fresh_i:
+            if pi > last:
+                self.pool.free([page])
+                self._slot_pages[i].remove(page)
+                self._table_np[i, pi] = 0
+                self._table_dirty = True
+
+    def _spec_round(self, live: list[int]) -> None:
+        """One speculative iteration over the live slots: draft-propose k
+        tokens per row, verify ALL rows' proposals in ONE batched
+        suffix-prefill dispatch of the target, then accept a prefix of each
+        row's drafts (greedy: longest argmax-matching run; sampled:
+        Leviathan rejection sampling) and roll rejected KV back by pos
+        truncation + lookahead-page free.
+
+        Greedy rows emit EXACTLY the target-only decode stream: the verify
+        logits at position p+j are the same forward the per-token path
+        would compute after consuming the same j accepted tokens, and the
+        walk stops at the first draft/argmax mismatch — so every emitted
+        token is an argmax the sequential engine would have produced
+        (bitwise, pinned by tests). Sampled rows draw from the target
+        distribution exactly (speculative-sampling guarantee), on a
+        per-request stream advanced ONE split per round."""
+        kk = self.spec_tokens
+        for i in live:
+            slot = self.slots[i]
+            # chunked admission prefills prompts whole, so decode-phase
+            # slots can never be mid-prefill or resume-suppressed here
+            assert not slot.pending and not slot.resumed, (
+                "spec round over a mid-prefill/resumed slot"
+            )
+        # ---- draft re-sync: rows whose draft state does not sit exactly at
+        # pos_host (fresh admissions, preemption returns, slot reuse) get a
+        # full re-prefill of their written stream; rows in sync ride along
+        # as length-0 no-ops
+        stale = [i for i in live if self._draft_pos[i] != self.slots[i].pos_host]
+        if stale:
+            lb = bucket_length(max(self.slots[i].pos_host for i in stale))
+            toks = np.zeros((self.num_slots, lb), np.int32)
+            lens = np.zeros(self.num_slots, np.int32)
+            for i in stale:
+                slot = self.slots[i]
+                p = slot.pos_host
+                stream = list(slot.req.prompt) + slot.generated
+                toks[i, :p] = stream[:p]
+                lens[i] = p
+            self.draft.prefill_rows(jnp.asarray(toks), jnp.asarray(lens))
+            for i in stale:
+                self._draft_pos[i] = self.slots[i].pos_host
+        # ---- per-row depth: never draft past max_new (the +1 correction /
+        # bonus token must still fit) or the slot's token capacity; the page
+        # pass below may shrink depths further
+        lim = min(self.cap, self.pool.capacity * self.page_size)
+        k_r = {}
+        for i in live:
+            slot = self.slots[i]
+            rem = slot.req.max_new_tokens - len(slot.generated)
+            k_r[i] = max(0, min(kk, rem - 1, lim - 1 - slot.pos_host))
+        fresh = self._ensure_spec_pages(live, k_r)
+        # ---- round inputs (full slot width, like every engine dispatch)
+        feed = np.zeros(self.num_slots, np.int32)
+        greedy = np.ones(self.num_slots, bool)
+        temps = np.ones(self.num_slots, np.float32)
+        topks = np.zeros(self.num_slots, np.int32)
+        topps = np.ones(self.num_slots, np.float32)
+        samp = [i for i in live if self.slots[i].key is not None]
+        for i in live:
+            slot = self.slots[i]
+            feed[i] = slot.next_feed
+            if slot.key is not None:
+                sp = slot.req.sampling
+                greedy[i] = False
+                temps[i] = sp.temperature
+                topks[i] = sp.top_k
+                topps[i] = sp.top_p
+        subs = None
+        if samp:
+            in_samp = set(samp)
+            keys = [
+                self.slots[i].key if i in in_samp else self._dummy_key
+                for i in range(self.num_slots)
+            ]
+            new_keys, subs = self._spec_split(jnp.stack(keys))
+            for i in samp:
+                self.slots[i].key = new_keys[i]
+        keys_arr = subs if subs is not None else self._spec_dummy_keys
+        # ---- draft proposals: k sequential CHEAP steps, all rows at once
+        drafts_dev, logq_dev = self.draft.propose(
+            jnp.asarray(feed), keys_arr, jnp.asarray(greedy),
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
+        )
+        drafts = np.asarray(drafts_dev)  # (num_slots, k)
+        # ---- single-dispatch verify: row j feeds [next_feed, d_1..d_kr]
+        # as a SUFFIX at starts=pos over the shared page table — one target
+        # forward replaces kr+1 sequential decode dispatches
+        self._sync_table()
+        n = len(live)
+        width = bucket_width(n, self.num_slots)
+        s_len = bucket_length(max(k_r[i] for i in live) + 1)
+        tokens = np.zeros((width, s_len), np.int32)
+        lengths = np.zeros(width, np.int32)
+        starts = np.zeros(width, np.int32)
+        slot_ids = np.zeros(width, np.int32)
+        for j, i in enumerate(live):
+            slot = self.slots[i]
+            kr = k_r[i]
+            tokens[j, 0] = slot.next_feed
+            tokens[j, 1:kr + 1] = drafts[i, :kr]
+            lengths[j] = kr + 1
+            starts[j] = slot.pos_host
+            slot_ids[j] = i
+        in_round = set(live)
+        spare = [s for s in range(self.num_slots) if s not in in_round]
+        slot_ids[n:] = spare[: width - n]
+        pw = bucket_pages(
+            -(-max(int(s) for s in starts) // self.page_size),
+            self.table_width,
+        )
+        self.cache, vlog = self._spec_verify(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(slot_ids),
+            jnp.asarray(starts), pw,
+        )
+        self.spec_rounds += 1
+        self.steps += 1
+        # ---- acceptance: one batched argmax transfer for greedy rows, one
+        # batched rejection-sampling dispatch for sampled rows
+        g_host = None
+        if any(self.slots[i].key is None for i in live):
+            g_host = np.asarray(
+                jnp.argmax(vlog[..., : self.cfg.vocab_size], axis=-1)
+            )  # (width, s_len)
+        n_emit_host = emitted_host = None
+        if samp:
+            klive = np.zeros(width, np.int32)
+            for j, i in enumerate(live):
+                klive[j] = k_r[i]
+            sl = jnp.asarray(slot_ids)
+            n_emit_dev, emitted_dev = self._spec_accept(
+                keys_arr[sl], vlog, jnp.asarray(drafts)[sl], logq_dev[sl],
+                jnp.asarray(klive), jnp.asarray(temps[slot_ids]),
+                jnp.asarray(topks[slot_ids]), jnp.asarray(topps[slot_ids]),
+            )
+            n_emit_host = np.asarray(n_emit_dev)
+            emitted_host = np.asarray(emitted_dev)
+        # ---- commit: append each row's accepted run, truncate target pos
+        # to the kept span, free lookahead pages past it, restore the draft
+        now = self._now()
+        new_pos = np.zeros(self.num_slots, np.int32)
+        mask = np.zeros(self.num_slots, bool)
+        snap_idx = np.full(self.num_slots, kk, np.int32)
+        for j, i in enumerate(live):
+            slot = self.slots[i]
+            kr = k_r[i]
+            p = slot.pos_host
+            if slot.key is None:
+                g = g_host[j]
+                emitted = []
+                t = 0
+                while True:
+                    emitted.append(int(g[t]))
+                    if t >= kr or int(drafts[i, t]) != int(g[t]):
+                        break
+                    t += 1
+            else:
+                ne = min(int(n_emit_host[j]), kr + 1)
+                emitted = [int(x) for x in emitted_host[j, :ne]]
+            if slot.first_token_time < 0:
+                slot.first_token_time = now
+            appended = 0
+            done = False
+            for tok in emitted:
+                slot.generated.append(tok)
+                appended += 1
+                if self._done(slot, tok):
+                    done = True
+                    break
+            self.spec_drafted += kr
+            self.spec_emitted += appended
+            self.spec_accepted += max(0, appended - 1)
+            new_pos[i] = p + appended
+            mask[i] = True
+            snap_idx[i] = appended - 1
+            if done:
+                # _retire frees EVERY slot page (lookahead included), so
+                # rollback must not run first — that would double-free
+                self._retire(i, slot)
+            else:
+                self._rollback_spec_pages(i, fresh.get(i, []), p + appended)
+                slot.pos_host = p + appended
+                slot.next_feed = emitted[appended - 1]
+                self._draft_pos[i] = p + appended
+        self.cache = self._fix_pos(
+            self.cache, jnp.asarray(new_pos), jnp.asarray(mask)
+        )
+        self.draft.commit(
+            jnp.asarray(mask), jnp.asarray(new_pos), jnp.asarray(snap_idx)
+        )
+        self.occupancy.append(self.pool.in_use / max(self.pool.capacity, 1))
+
     def step(self, *, respect_arrivals: bool = False) -> list[RequestOutput]:
         """One engine iteration: admit → one batched decode step → retire.
 
@@ -1950,7 +2443,11 @@ class ServeEngine:
                 # the pool runs dry — re-collect the survivors)
                 self._ensure_decode_pages(live)
                 live = [i for i, s in enumerate(self.slots) if s is not None]
-            if live:
+            if live and self.draft is not None:
+                # speculative round: draft k tokens per slot, verify all of
+                # them in one batched target dispatch (see _spec_round)
+                self._spec_round(live)
+            elif live:
                 self._sync_table()
                 feed = np.zeros((self.num_slots, 1), np.int32)
                 for i in live:
@@ -2115,6 +2612,8 @@ def serve_continuous(
     host_pages: int = 0,
     swap: bool = True,
     num_shards: int = 0,
+    draft: str | None = None,
+    spec_tokens: int = 0,
     sampling: SamplingParams | None = None,
     seed: int = 0,
     stagger: float = 0.0,
@@ -2127,10 +2626,22 @@ def serve_continuous(
     restores per-slot contiguous rings) — output is token-identical either
     way; paged mode additionally reports pool occupancy and preemptions.
     ``num_shards > 0`` serves tensor-parallel on a ``model``-axis mesh over
-    that many devices (bitwise token-identical to the unsharded engine)."""
+    that many devices (bitwise token-identical to the unsharded engine).
+    ``draft`` names a second (cheap) config for speculative decoding: it
+    proposes ``spec_tokens`` tokens per slot per round and the target
+    verifies them in one batched dispatch — greedy output stays bitwise
+    identical to the non-speculative engine."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+    draft_model = draft_params = None
+    if draft is not None:
+        dcfg = get_smoke_config(draft) if smoke else get_config(draft)
+        draft_model = build_model(dcfg)
+        # the draft seeds from the SAME stream: --draft <arch> with the
+        # target's own arch gives identical params, the ~100% acceptance
+        # probe configuration serve_bench --spec-probe exploits
+        draft_params = draft_model.init(jax.random.PRNGKey(seed))
     engine = ServeEngine(
         model,
         params,
@@ -2154,6 +2665,9 @@ def serve_continuous(
         kv_dtype=kv_dtype,
         host_pages=host_pages,
         swap=swap,
+        draft_model=draft_model,
+        draft_params=draft_params,
+        spec_tokens=spec_tokens,
         seed=seed,
         max_wall_s=max_wall_s,
     )
@@ -2196,6 +2710,8 @@ def serve_continuous(
         ),
         "prefix_cache": engine.prefix_cache,
         "kv_dtype": engine.kv_dtype,
+        "draft": None if draft_model is None else draft_model.cfg.name,
+        "spec_tokens": engine.spec_tokens,
         "prefill_tokens": engine.prefill_tokens,
         "sampling": None if sampling is None else dataclasses.asdict(sampling),
         "engine_steps": engine.steps,
@@ -2232,6 +2748,12 @@ def serve_continuous(
             pool_line += (
                 f", swap {ps['swapped_out_pages']}↓/"
                 f"{ps['swapped_in_pages']}↑ pages"
+            )
+        if ps["spec_enabled"]:
+            pool_line += (
+                f", spec k={ps['spec_tokens']} accept "
+                f"{ps['spec_accept_rate']:.0%}, "
+                f"{ps['spec_dispatches_per_token']:.2f} dispatch/tok"
             )
     log_fn(
         f"{cfg.name}: {n_requests} reqs × {gen_tokens} tok over "

@@ -48,6 +48,33 @@ class SamplingParams:
         return self.temperature == 0.0
 
 
+def filter_logits(
+    logits: jax.Array,
+    temperature: jax.Array,
+    top_k: jax.Array,
+    top_p: jax.Array,
+    vocab_size: int,
+) -> jax.Array:
+    """Temperature/top-k/top-p filtered logits for a single row.
+
+    logits: (Vp,); returns (vocab_size,) fp32 with every filtered-out
+    column at NEG_INF — ``softmax`` of the result is the distribution a
+    request actually samples from. Shared by ``sample_token`` and the
+    speculative-decoding acceptance sampler, which needs the SAME filtered
+    target distribution the per-token path would have drawn from."""
+    logits = logits[:vocab_size].astype(jnp.float32)
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    order = jnp.argsort(-logits)  # descending
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(vocab_size))
+    logits = jnp.where((top_k > 0) & (ranks >= top_k), NEG_INF, logits)
+    # nucleus cut on the post-top-k distribution: keep rank i iff the mass
+    # strictly before it is < top_p (the best token always survives)
+    probs_sorted = jax.nn.softmax(logits[order])
+    before = jnp.cumsum(probs_sorted) - probs_sorted
+    keep_sorted = (before < top_p) | (top_p >= 1.0)
+    return jnp.where(keep_sorted[ranks], logits, NEG_INF)
+
+
 def sample_token(
     key: jax.Array,
     logits: jax.Array,
@@ -62,15 +89,72 @@ def sample_token(
     temperature > 0 (greedy is the caller's fast path), top_k/top_p as in
     ``SamplingParams`` but traced, so a single jit covers all requests.
     """
-    logits = logits[:vocab_size].astype(jnp.float32)
-    logits = logits / jnp.maximum(temperature, 1e-6)
-    order = jnp.argsort(-logits)  # descending
-    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(vocab_size))
-    logits = jnp.where((top_k > 0) & (ranks >= top_k), NEG_INF, logits)
-    # nucleus cut on the post-top-k distribution: keep rank i iff the mass
-    # strictly before it is < top_p (the best token always survives)
-    probs_sorted = jax.nn.softmax(logits[order])
-    before = jnp.cumsum(probs_sorted) - probs_sorted
-    keep_sorted = (before < top_p) | (top_p >= 1.0)
-    logits = jnp.where(keep_sorted[ranks], logits, NEG_INF)
-    return jax.random.categorical(key, logits)
+    return jax.random.categorical(
+        key, filter_logits(logits, temperature, top_k, top_p, vocab_size)
+    )
+
+
+def speculative_acceptance(
+    key: jax.Array,
+    tgt_logits: jax.Array,
+    draft_tokens: jax.Array,
+    draft_logq: jax.Array,
+    k_live: jax.Array,
+    temperature: jax.Array,
+    top_k: jax.Array,
+    top_p: jax.Array,
+    vocab_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Leviathan-style rejection sampling for ONE sampled request's round.
+
+    tgt_logits: (K+1, Vp) target logits at absolute positions p..p+K (one
+    verify dispatch); draft_tokens: (K,) proposals d_1..d_K; draft_logq:
+    (K, V) the draft's FILTERED log-probs each proposal was drawn from;
+    k_live: how many proposals this row actually speculated (<= K — rows
+    near max_new or the page budget run shallower).
+
+    Accept d_j while u_j < p_{j-1}(d_j) / q_j(d_j); the first rejection
+    draws from the normalized residual max(p - q, 0) (falling back to p
+    when the residual has no mass); a fully accepted row draws a BONUS
+    token from p_K. Emitted tokens are therefore exact samples from the
+    target distribution regardless of the draft — the standard
+    speculative-sampling guarantee. Returns (n_emit, emitted (K+1,)):
+    emitted[:n_emit] = accepted drafts + the final draw, n_emit in
+    [1, k_live+1]. All draws fold the per-request stream ``key``, so a
+    request's round is reproducible from (seed, uid, rounds elapsed)."""
+    kk = draft_tokens.shape[0]
+    flt = jax.vmap(
+        lambda row: filter_logits(row, temperature, top_k, top_p, vocab_size)
+    )(tgt_logits)                                    # (K+1, V)
+    p = jax.nn.softmax(flt, axis=-1)                 # target dists
+    q = jnp.exp(draft_logq)                          # proposal dists
+    steps = jnp.arange(kk)
+    p_d = jnp.take_along_axis(p[:kk], draft_tokens[:, None], axis=1)[:, 0]
+    q_d = jnp.take_along_axis(q, draft_tokens[:, None], axis=1)[:, 0]
+    u = jax.vmap(lambda j: jax.random.uniform(jax.random.fold_in(key, j)))(
+        steps
+    )
+    ok = (steps < k_live) & (u * jnp.maximum(q_d, 1e-30) < p_d)
+    # leading run of accepts: d_j lands iff every d_<j did too
+    acc = jnp.cumprod(ok.astype(jnp.int32))
+    n_acc = jnp.sum(acc)
+    # rejection at step n_acc+1 (if any): residual max(p_{n_acc}-q_{n_acc}, 0)
+    p_rej = p[n_acc]
+    q_rej = q[jnp.minimum(n_acc, kk - 1)]
+    resid = jnp.maximum(p_rej - q_rej, 0.0)
+    mass = jnp.sum(resid)
+    resid = jnp.where(mass > 0, resid / jnp.maximum(mass, 1e-30), p_rej)
+    resid_tok = jax.random.categorical(
+        jax.random.fold_in(key, kk), jnp.log(jnp.maximum(resid, 1e-30))
+    )
+    bonus_tok = jax.random.categorical(
+        jax.random.fold_in(key, kk + 1), jnp.log(jnp.maximum(p[k_live], 1e-30))
+    )
+    final = jnp.where(n_acc >= k_live, bonus_tok, resid_tok)
+    pos = jnp.arange(kk + 1)
+    emitted = jnp.where(
+        pos < n_acc,
+        jnp.concatenate([draft_tokens, jnp.zeros((1,), draft_tokens.dtype)]),
+        jnp.where(pos == n_acc, final.astype(draft_tokens.dtype), 0),
+    )
+    return n_acc + 1, emitted

@@ -30,6 +30,11 @@ Continuous mode also serves TENSOR-PARALLEL (--mesh N): attention heads and
 the KV pool's kv-head slices split over an N-device ``model`` mesh through
 ``shard_map``, bitwise token-identical to the single-device engine; on CPU
 pair it with --num-devices N (host-device override, set before jax inits).
+--draft ARCH --spec-tokens K turns on speculative decoding: a cheap draft
+model proposes K lookahead tokens per slot per round and the target
+verifies all of them in ONE batched suffix-prefill dispatch — up to K+1
+tokens emitted per target forward, greedy output bitwise identical to the
+plain engine.
 With --replicas N the trace is served through the fault-tolerant router
 (``launch/router.py``): prefix-affinity + occupancy placement over N
 engine replicas, SLO-aware preemption, and token-exact failover — inject
@@ -272,6 +277,16 @@ def main(argv=None):
                     help="[continuous] with --host-pages, keep prefix "
                     "demote/promote but resume preemptions by recompute "
                     "instead of swap-in")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="[continuous] speculative decoding: config name of "
+                    "the cheap DRAFT model that proposes --spec-tokens "
+                    "lookahead tokens per slot per round, verified by the "
+                    "target in one batched dispatch; greedy output stays "
+                    "bitwise identical to the non-speculative engine")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="[continuous] draft lookahead depth k per round "
+                    "(requires --draft; an accepted round emits up to k+1 "
+                    "tokens for one target dispatch)")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="[continuous] inter-arrival spacing in seconds")
     ap.add_argument("--replicas", type=int, default=1,
@@ -400,6 +415,45 @@ def main(argv=None):
                 f"--host-pages {args.host_pages} cannot be honored by "
                 "this config: " + "; ".join(blockers)
             )
+    if args.draft is not None or args.spec_tokens > 0:
+        blockers = []
+        if args.draft is None:
+            blockers.append("--spec-tokens without --draft (the lookahead "
+                            "depth needs a draft model to propose it)")
+        if args.spec_tokens <= 0:
+            blockers.append("--draft without --spec-tokens >= 1 (a draft "
+                            "with no lookahead depth proposes nothing)")
+        if not args.continuous:
+            blockers.append("batch mode (use --continuous)")
+        if not args.paged_cache:
+            blockers.append(
+                "--no-paged-cache (k-token verify rides the suffix-"
+                "prefill path over the page table)"
+            )
+        if args.prefill == "interleaved":
+            blockers.append(
+                "--prefill interleaved (the verify dispatch needs chunked "
+                "batched admission)"
+            )
+        if args.window > 0:
+            blockers.append(
+                f"--window {args.window} (verify positions assume the "
+                "full-context page layout)"
+            )
+        if args.mesh > 0:
+            blockers.append(
+                f"--mesh {args.mesh} (the draft runs single-device; "
+                "sharded verify is not wired yet)"
+            )
+        if args.replicas > 1:
+            blockers.append(
+                "--replicas (router replicas do not build draft models yet)"
+            )
+        if blockers:
+            ap.error(
+                "speculative decoding cannot be honored by this config: "
+                + "; ".join(blockers)
+            )
     if args.continuous:
         from repro.launch.engine import serve_continuous
         from repro.launch.sampling import SamplingParams
@@ -451,6 +505,8 @@ def main(argv=None):
             host_pages=args.host_pages,
             swap=args.swap,
             num_shards=args.mesh,
+            draft=args.draft,
+            spec_tokens=args.spec_tokens,
             sampling=sampling,
             seed=args.seed, stagger=args.stagger,
             max_wall_s=args.max_wall_s,

@@ -1,0 +1,256 @@
+"""Draft-model backends for paged speculative decoding.
+
+The engine's speculative round is draft-propose → single-dispatch verify →
+accept/rollback (see ``ServeEngine._spec_round``). This module owns the
+DRAFT side: a second, cheap model that runs k sequential decode steps per
+round so the expensive target model can verify all k proposals in ONE
+batched suffix-prefill dispatch. Two state layouts:
+
+* ``TransformerDraft`` — the draft is a KV-cache architecture: it gets its
+  own small per-slot contiguous ring (capacity ``cap + k + 1``, sized so a
+  request at the engine's token limit still has k lookahead rows; no paging
+  — draft KV is tiny). Rollback after a rejection is a masked pos
+  truncation: the ring rows past the accepted point simply become invisible
+  to the validity mask and are overwritten next round.
+* ``XlstmDraft`` — the draft is recurrent (``arch_type == "ssm"``, e.g.
+  ``xlstm_125m``): state cannot be truncated by position, so the propose
+  scan stacks a state SNAPSHOT after every step and rollback gathers, per
+  row, the snapshot just after the last accepted token
+  (``xlstm.gather_snapshots``).
+
+Both backends run FULL ``num_slots`` width every round — dead rows carry
+length-0 / masked work — so each jit compiles for one width and the
+engine's compile-count gating story is unchanged. The propose scan samples
+with the same ``filter_logits`` chain the target's sampler uses, collecting
+per-step filtered log-probs q (the acceptance test needs q(d) for the
+Leviathan ratio); greedy rows take argmax and their q lanes are garbage by
+construction (never read). Consumption invariant: after ``propose`` the
+draft has consumed k+1 tokens past its row position (k proposals plus one
+trailing step feeding the last draft, output discarded), so a fully
+accepted row — k accepts + bonus token — rolls FORWARD to ``pos + k + 1``
+without an extra dispatch; ``commit`` then truncates every row to its
+accepted length.
+
+Per-row PRNG discipline: the engine passes one subkey per row per round;
+propose folds (sub, 1) then the step index, the engine's acceptance jit
+folds (sub, 2) — disjoint streams, so draft draws never correlate with the
+acceptance uniforms (which would break the rejection-sampling guarantee).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sampling import filter_logits
+from repro.models import xlstm
+
+
+def _propose_step(logits, t, keys, greedy, temps, topks, topps, vocab):
+    """One propose step's token draw + filtered log-probs, all rows.
+
+    Greedy rows take argmax of the RAW logits (bitwise the target engine's
+    greedy draw on the same logits); sampled rows draw categorical from the
+    filtered distribution with key fold (sub, 1, t). Greedy rows' filter
+    runs at temperature 1.0 purely to keep their (unread) q lanes finite.
+    """
+    t_eff = jnp.where(greedy, 1.0, temps)
+    flt = jax.vmap(
+        lambda l, tt, tk, tp: filter_logits(l, tt, tk, tp, vocab)
+    )(logits, t_eff, topks, topps)
+    d_g = jnp.argmax(logits[:, :vocab], axis=-1)
+    kt = jax.vmap(lambda k: jax.random.fold_in(jax.random.fold_in(k, 1), t))(
+        keys
+    )
+    d_s = jax.vmap(jax.random.categorical)(kt, flt)
+    d = jnp.where(greedy, d_g, d_s).astype(jnp.int32)
+    return d, jax.nn.log_softmax(flt, axis=-1)
+
+
+class TransformerDraft:
+    """Ring-cache draft backend (KV architectures)."""
+
+    kind = "ring"
+
+    def __init__(
+        self, model, params, *, num_slots, cap, spec_tokens, compiles,
+        donate=True,
+    ):
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.spec_tokens = spec_tokens
+        self.cap = cap + spec_tokens + 1
+        self.cache = model.init_slot_cache(params, num_slots, self.cap)
+        self._slots = jnp.arange(num_slots, dtype=jnp.int32)
+        vocab = model.cfg.vocab_size
+        kk = spec_tokens
+        dn = (1,) if donate else ()
+
+        def _prefill_fn(p, c, toks, lens, slots):
+            compiles["draft_prefill"] += 1
+            return model.prefill_slots(p, c, toks, lens, slots)
+
+        self._prefill = jax.jit(_prefill_fn, donate_argnums=dn)
+
+        def _propose_fn(p, c, feed, keys, greedy, temps, topks, topps):
+            compiles["draft_propose"] += 1
+
+            def step(carry, t):
+                c, cur = carry
+                c, logits = model.decode(p, c, cur[:, None])
+                d, lq = _propose_step(
+                    logits, t, keys, greedy, temps, topks, topps, vocab
+                )
+                return (c, d), (d, lq)
+
+            (c, last), (ds, lq) = jax.lax.scan(
+                step, (c, feed), jnp.arange(kk)
+            )
+            # trailing consumption of the last draft: a fully accepted row
+            # needs the draft to have seen all k proposals next round
+            c, _ = model.decode(p, c, last[:, None])
+            return c, ds.swapaxes(0, 1), lq.swapaxes(0, 1)
+
+        self._propose = jax.jit(_propose_fn, donate_argnums=dn)
+
+        def _commit_fn(c, new_pos, mask):
+            return {**c, "pos": jnp.where(mask, new_pos, c["pos"])}
+
+        self._commit = jax.jit(
+            _commit_fn, donate_argnums=(0,) if donate else ()
+        )
+
+    def prefill_rows(self, tokens, lengths) -> None:
+        """Re-sync rows with ``lengths > 0`` from scratch: row r's first
+        ``lengths[r]`` tokens overwrite its ring from slot 0 and its pos
+        resets to the true length; length-0 rows are untouched no-ops."""
+        self.cache, _ = self._prefill(
+            self.params, self.cache, tokens, lengths, self._slots
+        )
+
+    def propose(self, feed, keys, greedy, temps, topks, topps):
+        """k draft tokens for every row. Returns (drafts (B,k) device,
+        logq (B,k,V) device); the cache advances k+1 positions."""
+        self.cache, drafts, logq = self._propose(
+            self.params, self.cache, feed, keys, greedy, temps, topks, topps
+        )
+        return drafts, logq
+
+    def commit(self, mask, new_pos, snap_idx) -> None:
+        """Truncate rows in ``mask`` to their accepted position (covers
+        both rollback and the fully-accepted forward case)."""
+        del snap_idx
+        self.cache = self._commit(self.cache, new_pos, mask)
+
+
+class XlstmDraft:
+    """Recurrent-state draft backend (``arch_type == "ssm"``)."""
+
+    kind = "recurrent"
+
+    def __init__(
+        self, model, params, *, num_slots, cap, spec_tokens, compiles,
+        donate=True,
+    ):
+        del cap  # recurrent state is O(1) in sequence length
+        cfg = model.cfg
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.spec_tokens = spec_tokens
+        self.cache = xlstm.init_decode_cache(cfg, num_slots, 1)
+        self._snaps = None
+        vocab = cfg.vocab_size
+        kk = spec_tokens
+        dn = (1,) if donate else ()
+        empty = xlstm.init_decode_cache(cfg, num_slots, 1)
+
+        def _prefill_fn(p, c, toks, lens):
+            compiles["draft_prefill"] += 1
+            # reset refreshed rows to the empty state, then teacher-force
+            # the padded prompts; each row stops advancing at its own length
+            c = xlstm.select_rows(lens > 0, empty, c)
+
+            def step(c, xs):
+                tok_t, t = xs
+                c2, _ = xlstm.decode_step(cfg, p, c, tok_t[:, None])
+                return xlstm.select_rows(t < lens, c2, c), None
+
+            c, _ = jax.lax.scan(
+                step, c, (toks.T, jnp.arange(toks.shape[1]))
+            )
+            return c
+
+        self._prefill = jax.jit(_prefill_fn, donate_argnums=dn)
+
+        def _propose_fn(p, c, feed, keys, greedy, temps, topks, topps):
+            compiles["draft_propose"] += 1
+
+            def step(carry, t):
+                c, cur = carry
+                c, logits = xlstm.decode_step(cfg, p, c, cur[:, None])
+                d, lq = _propose_step(
+                    logits, t, keys, greedy, temps, topks, topps, vocab
+                )
+                snap = {"periods": c["periods"], "rest": c["rest"]}
+                return (c, d), (d, lq, snap)
+
+            (c, last), (ds, lq, snaps) = jax.lax.scan(
+                step, (c, feed), jnp.arange(kk)
+            )
+            c, _ = xlstm.decode_step(cfg, p, c, last[:, None])
+            final = {"periods": c["periods"], "rest": c["rest"]}
+            # snapshot s = state after consuming s+1 round tokens,
+            # s in [0, k]: rollback target for n_emit = s+1
+            snaps = jax.tree_util.tree_map(
+                lambda s, f: jnp.concatenate([s, f[None]], axis=0),
+                snaps, final,
+            )
+            return c, ds.swapaxes(0, 1), lq.swapaxes(0, 1), snaps
+
+        self._propose = jax.jit(_propose_fn, donate_argnums=dn)
+
+        def _commit_fn(snaps, idx):
+            return xlstm.gather_snapshots(snaps, jnp.clip(idx, 0, kk))
+
+        self._commit = jax.jit(
+            _commit_fn, donate_argnums=(0,) if donate else ()
+        )
+
+    def prefill_rows(self, tokens, lengths) -> None:
+        self.cache = self._prefill(self.params, self.cache, tokens, lengths)
+
+    def propose(self, feed, keys, greedy, temps, topks, topps):
+        self.cache, drafts, logq, self._snaps = self._propose(
+            self.params, self.cache, feed, keys, greedy, temps, topks, topps
+        )
+        return drafts, logq
+
+    def commit(self, mask, new_pos, snap_idx) -> None:
+        """Restore every row from its accepted-point snapshot. Rows outside
+        ``mask`` (no live slot this round) take an arbitrary valid snapshot
+        — poison state a future ``prefill_rows`` reset fully overwrites."""
+        del mask, new_pos
+        assert self._snaps is not None, "commit without a propose round"
+        self.cache = self._commit(self._snaps, snap_idx)
+        self._snaps = None
+
+
+def make_draft_backend(
+    model, params, *, num_slots, cap, spec_tokens, compiles, donate=True,
+):
+    """Pick the draft state layout for a model: ring cache where the arch
+    has the slot-cache API, recurrent snapshots for ssm archs."""
+    if model.init_slot_cache is not None and model.prefill_slots is not None:
+        cls = TransformerDraft
+    elif model.cfg.arch_type == "ssm":
+        cls = XlstmDraft
+    else:
+        raise ValueError(
+            f"draft arch {model.cfg.name!r} ({model.cfg.arch_type}) has "
+            "neither a slot-cache API nor recurrent decode state"
+        )
+    return cls(
+        model, params, num_slots=num_slots, cap=cap,
+        spec_tokens=spec_tokens, compiles=compiles, donate=donate,
+    )

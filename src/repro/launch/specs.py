@@ -125,6 +125,33 @@ def paged_cache_specs(
     return jax.eval_shape(mk, params)
 
 
+def draft_cache_specs(
+    model: ModelAPI, num_slots: int, cap: int, spec_tokens: int
+) -> Pytree:
+    """ShapeDtypeStructs for a speculative-decoding DRAFT backend's state:
+    the small per-slot ring a KV draft carries (capacity cap + k + 1 — the
+    engine token limit plus k lookahead rows plus the trailing consumption
+    step), or the O(1) recurrent state of an ssm draft. Sizes the memory a
+    ``--draft`` flag adds on top of the target's pool."""
+    from repro.models import xlstm
+
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if model.init_slot_cache is not None:
+        def mk(params):
+            return model.init_slot_cache(
+                params, num_slots, cap + spec_tokens + 1
+            )
+
+        return jax.eval_shape(mk, params)
+    if model.cfg.arch_type == "ssm":
+        return jax.eval_shape(
+            lambda: xlstm.init_decode_cache(model.cfg, num_slots, 1)
+        )
+    raise ValueError(
+        f"{model.cfg.name}: no draft state layout for this arch"
+    )
+
+
 def layers_for_memory(cfg: ModelConfig) -> int:
     n = cfg.n_layers
     if cfg.arch_type == "audio":

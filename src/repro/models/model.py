@@ -47,7 +47,9 @@ class ModelAPI:
     #               starts (n,) switches to SUFFIX prefill over a
     #               pre-populated page table (prefix sharing: row r's
     #               tokens start at position starts[r]); prefix_pages
-    #               statically bounds the prefix pages the attend streams
+    #               statically bounds the prefix pages the attend streams;
+    #               return_all_logits=True returns (n, S, Vp) logits at
+    #               every padded position (speculative k-token verify)
     # init_paged_cache(params, num_slots, num_pages, page_size, table_width,
     #               window=, kv_dtype=) -> shared paged pool + per-slot page
     #               tables; decode/prefill_slots accept either cache layout;
@@ -93,10 +95,11 @@ def _transformer_api(cfg: ModelConfig, ffn) -> ModelAPI:
         )
 
     def prefill_slots(params, cache, tokens, lengths, slots, *, starts=None,
-                      prefix_pages=None, window=0):
+                      prefix_pages=None, window=0, return_all_logits=False):
         return transformer.prefill_slots(
             cfg, params, cache, tokens, lengths, slots, starts=starts,
             prefix_pages=prefix_pages, ffn=ffn, window=window,
+            return_all_logits=return_all_logits,
         )
 
     def init_paged_cache(

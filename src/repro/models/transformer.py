@@ -391,6 +391,7 @@ def prefill_slots(
     prefix_pages: int | None = None,
     ffn: FFNHooks = DENSE_FFN,
     window: int = 0,
+    return_all_logits: bool = False,
 ) -> tuple[dict, jax.Array]:
     """Batched chunked prefill: N newly admitted requests in ONE forward.
 
@@ -439,6 +440,16 @@ def prefill_slots(
     (kernels/flash_suffix_prefill.py), reading the prefix straight through
     the page table with no HBM gather; the jnp gather-concat path below
     stays as its oracle.
+
+    ``return_all_logits=True`` (static) returns logits at EVERY padded
+    position, (n, S, Vp), instead of only each row's last valid one —
+    the k-token verify of speculative decoding reads a target logit per
+    draft position out of one suffix dispatch. Padding positions (at or
+    beyond ``lengths[r]``) are garbage; callers slice by true length.
+    The cache write is bit-for-bit the ``False`` trace. On int8 pools this
+    mode attends the round's own k/v through a quantize/dequantize
+    roundtrip — per-token decode writes quant(k) then reads the pool, so
+    bitwise-identical verification must see in-round tokens the same way.
     """
     assert cache["pos"].ndim == 1, "prefill_slots requires a per-slot cache"
     n, s = tokens.shape
@@ -490,6 +501,18 @@ def prefill_slots(
             lp, ck, cv = sl  # one layer — (B, C, Hkv, hd) or (P, page, Hkv, hd)
         a = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
         k, v = attn.compute_kv_for_prefill(lp["attn"], a, pos, cfg)
+        k_att, v_att = k, v
+        if quant and return_all_logits:
+            from repro.kernels.quantize import kv_dequant as _dq
+            from repro.kernels.quantize import kv_quant as _qz
+
+            # speculative verify must reproduce per-token DECODE numerics:
+            # decode writes quant(k) and attends the dequantized pool, so
+            # tokens of the same round see each other (and themselves)
+            # through the int8 roundtrip. Attend the roundtripped view;
+            # the cache write below still quantizes the original.
+            k_att = _dq(*_qz(k), k.dtype)
+            v_att = _dq(*_qz(v), v.dtype)
         if quant:
             # gather the int8 pages + scales once; the fp view feeds the
             # attend and the ring write, the raw (q, scale) pair survives
@@ -518,7 +541,7 @@ def prefill_slots(
             q = (a @ lp["attn"]["wq"]).reshape(n, s, cfg.n_heads, hd)
             q = attn.apply_rope(q, pos, cfg.rope_theta)
             o = suffix_prefill_attention(
-                q.reshape(n, s, cfg.n_kv_heads, g, hd), k, v, ck, cv,
+                q.reshape(n, s, cfg.n_kv_heads, g, hd), k_att, v_att, ck, cv,
                 t_rows, starts, prefix_width=w_pfx,
                 pool_k_scale=cks if quant else None,
                 pool_v_scale=cvs if quant else None,
@@ -541,8 +564,8 @@ def prefill_slots(
                 lp["attn"], a, pos, cfg, causal=True, window=window,
                 q_chunk=q_chunk,
                 kv=(
-                    jnp.concatenate([gk[:, : w_pfx * page], k], axis=1),
-                    jnp.concatenate([gv[:, : w_pfx * page], v], axis=1),
+                    jnp.concatenate([gk[:, : w_pfx * page], k_att], axis=1),
+                    jnp.concatenate([gv[:, : w_pfx * page], v_att], axis=1),
                 ),
                 kv_positions=jnp.concatenate(
                     [prefix_pos, pos], axis=1
@@ -590,8 +613,13 @@ def prefill_slots(
         xs += (cache["ks"], cache["vs"])
     x, news = jax.lax.scan(body, x, xs)
     x = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
-    last = jnp.take_along_axis(x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
-    logits = lm_logits(params["embed"], last, cfg)[:, 0]
+    if return_all_logits:
+        logits = lm_logits(params["embed"], x, cfg)       # (n, S, Vp)
+    else:
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1
+        )
+        logits = lm_logits(params["embed"], last, cfg)[:, 0]
     end = lengths if starts is None else starts + lengths
     new_cache = {
         "k": news[0],

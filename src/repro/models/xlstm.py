@@ -536,6 +536,53 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int, *, window: int
     return {"periods": periods, "rest": rest, "pos": jnp.zeros((), jnp.int32)}
 
 
+def select_rows(cond: jax.Array, a: dict, b: dict) -> dict:
+    """Per-row merge of two decode-cache states (same structure): row r of
+    the result takes ``a``'s state where ``cond[r]`` else ``b``'s.
+
+    Layout contract (see ``init_decode_cache``): periods leaves carry the
+    batch at axis 1 — (n_rep, B, ...) — rest leaves at axis 0. ``pos`` is a
+    batch-free scalar step counter, so it always advances with ``a``. The
+    speculative-decoding draft backend uses this both to reset stale rows
+    to the empty state and to freeze rows past their own prompt length
+    while a batched draft prefill scans to the longest row's."""
+    def sel(axis):
+        def f(x, y):
+            shape = [1] * x.ndim
+            shape[axis] = cond.shape[0]
+            return jnp.where(cond.reshape(shape), x, y)
+        return f
+
+    periods = None
+    if a["periods"] is not None:
+        periods = jax.tree_util.tree_map(sel(1), a["periods"], b["periods"])
+    rest = jax.tree_util.tree_map(sel(0), list(a["rest"]), list(b["rest"]))
+    return {"periods": periods, "rest": rest, "pos": a["pos"]}
+
+
+def gather_snapshots(snaps: dict, idx: jax.Array) -> dict:
+    """Select one per-row state from a stack of decode-cache snapshots.
+
+    ``snaps`` is a decode cache whose leaves carry a leading snapshot axis
+    (periods leaves (S, n_rep, B, ...), rest leaves (S, B, ...)) — the
+    stacked ys of a ``lax.scan`` over ``decode_step``. ``idx`` (B,) picks
+    snapshot ``idx[r]`` for batch row r, giving the speculative-decoding
+    rollback: restore each draft row to the state just after its last
+    ACCEPTED token, discarding the rejected tail's recurrent updates."""
+    def g(axis):
+        def f(leaf):
+            return jax.vmap(
+                lambda i, l: l[i], in_axes=(0, axis), out_axes=axis - 1
+            )(idx, leaf)
+        return f
+
+    periods = None
+    if snaps["periods"] is not None:
+        periods = jax.tree_util.tree_map(g(2), snaps["periods"])
+    rest = jax.tree_util.tree_map(g(1), list(snaps["rest"]))
+    return {"periods": periods, "rest": rest, "pos": jnp.zeros((), jnp.int32)}
+
+
 def _run_cached(cfg, params, cache, x, mode):
     pat = _pattern(cfg)
     bodies = _bodies(cfg, mode)

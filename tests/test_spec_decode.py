@@ -1,0 +1,346 @@
+"""Speculative decoding tests (launch/spec_decode.py + engine spec rounds).
+
+The contract: speculation is a LATENCY optimization that must be invisible
+in the tokens. Greedy requests emit the bitwise stream of the non-
+speculative engine — the displaced per-token decode path stays as the
+oracle — across draft quality (same-params ≈ full acceptance, foreign
+params ≈ rejection storm), prefix caching, and int8 pools. Sampled
+requests draw EXACTLY from the target distribution (the Leviathan
+rejection-sampling guarantee, checked empirically) on deterministic
+request-keyed streams. Rejection rollback may never leak or double-free a
+pool page. Migration rides along: ``export_inflight`` now carries KV page
+content, so a layout-compatible importer swaps migrated requests in
+instead of recomputing."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import Request, ServeEngine, make_requests
+from repro.launch.sampling import (
+    SamplingParams,
+    filter_logits,
+    speculative_acceptance,
+)
+
+ARCH = "stablelm-1.6b"
+P, G = 16, 10
+
+
+@pytest.fixture(scope="module")
+def target():
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _draft(arch=ARCH, seed=0):
+    from repro.models import build_model
+
+    dcfg = get_smoke_config(arch)
+    dm = build_model(dcfg)
+    return dm, dm.init(jax.random.PRNGKey(seed))
+
+
+def _build(target, *, draft=None, spec_tokens=0, **kw):
+    _, model, params = target
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_seq", P + G)
+    kw.setdefault("paged_cache", True)
+    kw.setdefault("page_size", 4)
+    dm, dp = draft if draft is not None else (None, None)
+    return ServeEngine(
+        model, params, draft_model=dm, draft_params=dp,
+        spec_tokens=spec_tokens, **kw,
+    )
+
+
+def _reqs(cfg, n=4, *, gen=G, seed=0, shared_prefix=False):
+    reqs = make_requests(
+        cfg, n_requests=n, prompt_len=P, gen_tokens=gen, seed=seed
+    )
+    if shared_prefix:
+        head = reqs[0].prompt[: P - 2]
+        for r in reqs:
+            r.prompt = np.concatenate([head, r.prompt[P - 2:]])
+    return reqs
+
+
+def _tokens(outs):
+    return {o.uid: o.tokens for o in outs}
+
+
+# -------------------------------------------------------- greedy identity
+@pytest.mark.parametrize("kv_dtype", ["fp", "int8"])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+@pytest.mark.parametrize("draft_seed", [0, 7])
+def test_greedy_bitwise_identity(target, kv_dtype, prefix_cache, draft_seed):
+    """Spec engine == plain engine, token for token, whatever the draft
+    agrees on: seed 0 shares the target's params (≈100%% acceptance, the
+    full-accept + bonus-token path), seed 7 is a foreign model (≈0%%
+    acceptance, every round rolls back). Prefix sharing and int8 pools
+    must compose — the verify dispatch is the same suffix-prefill trace
+    admission uses."""
+    cfg = target[0]
+    kw = dict(kv_dtype=kv_dtype, prefix_cache=prefix_cache)
+    reqs = lambda: _reqs(cfg, 4, shared_prefix=prefix_cache)
+    base = _build(target, **kw).run(reqs())
+    spec = _build(
+        target, draft=_draft(seed=draft_seed), spec_tokens=3, **kw
+    ).run(reqs())
+    assert _tokens(spec) == _tokens(base)
+
+
+def test_greedy_identity_xlstm_draft(target):
+    """A recurrent (snapshot-rollback) draft must hold the same identity
+    as the ring draft — rollback restores the exact pre-round state."""
+    cfg = target[0]
+    base = _build(target).run(_reqs(cfg, 4))
+    spec = _build(
+        target, draft=_draft("xlstm-125m", seed=3), spec_tokens=3
+    ).run(_reqs(cfg, 4))
+    assert _tokens(spec) == _tokens(base)
+
+
+def test_spec_uses_fewer_target_dispatches(target):
+    """The point of the feature: a high-acceptance draft (same params as
+    the target) must emit the trace in well under half the target decode
+    dispatches the plain engine needs."""
+    cfg = target[0]
+    plain = _build(target)
+    plain.run(_reqs(cfg, 4))
+    spec = _build(target, draft=_draft(seed=0), spec_tokens=3)
+    spec.run(_reqs(cfg, 4))
+    assert spec.pool_stats["spec_accept_rate"] > 0.9
+    assert plain.steps >= 1.5 * spec.steps, (plain.steps, spec.steps)
+
+
+def test_spec_counters(target):
+    cfg = target[0]
+    eng = _build(target, draft=_draft(seed=7), spec_tokens=3)
+    eng.run(_reqs(cfg, 2))
+    ps = eng.pool_stats
+    assert ps["spec_enabled"] and ps["spec_tokens"] == 3
+    assert ps["spec_rounds"] == eng.steps > 0
+    # admission prefill emits each request's FIRST token; spec rounds own
+    # the rest
+    assert ps["spec_emitted"] == 2 * (G - 1)
+    assert 0.0 <= ps["spec_accept_rate"] <= 1.0
+    assert ps["spec_dispatches_per_token"] <= 1.0
+    assert {"spec_verify", "draft_propose", "draft_prefill"} <= set(
+        eng.compiles
+    )
+
+
+# ---------------------------------------------------------------- sampling
+def test_sampled_deterministic_and_mixed(target):
+    """Sampled spec runs are reproducible from request seeds, and greedy
+    requests sharing the engine with sampled ones keep bitwise identity
+    (their rows never touch the acceptance sampler)."""
+    cfg = target[0]
+    sp = SamplingParams(temperature=0.9, top_k=12, top_p=0.95)
+
+    def mixed():
+        reqs = _reqs(cfg, 4)
+        for r in reqs[::2]:
+            r.sampling = dataclasses.replace(sp, seed=11 + r.uid)
+        return reqs
+
+    a = _build(target, draft=_draft(seed=7), spec_tokens=3).run(mixed())
+    b = _build(target, draft=_draft(seed=7), spec_tokens=3).run(mixed())
+    assert _tokens(a) == _tokens(b)
+    base = _tokens(_build(target).run(_reqs(cfg, 4)))
+    for o in a:
+        if o.uid % 2 == 1:  # greedy rows
+            assert o.tokens == base[o.uid]
+
+
+def test_acceptance_marginal_matches_target():
+    """Leviathan exactness, empirically: whatever the draft proposes, the
+    FIRST emitted token's marginal over many keys must match the filtered
+    target distribution (accept mass + residual draw reconstruct p)."""
+    v = 8
+    key = jax.random.PRNGKey(42)
+    tgt = jax.random.normal(key, (4, v)) * 2.0
+    dq = jax.nn.log_softmax(jax.random.normal(jax.random.fold_in(key, 1), (3, v)))
+    draws = 1500
+    drafts = jax.vmap(
+        lambda k: jax.random.categorical(k, dq, axis=-1)
+    )(jax.random.split(jax.random.PRNGKey(9), draws)).astype(np.int32)
+    firsts = np.zeros(v)
+    for i in range(draws):
+        _, emitted = speculative_acceptance(
+            jax.random.fold_in(jax.random.PRNGKey(5), i), tgt, drafts[i],
+            dq, 3, 1.0, 0, 1.0, v,
+        )
+        firsts[int(emitted[0])] += 1
+    p = np.asarray(jax.nn.softmax(filter_logits(tgt[0], 1.0, 0, 1.0, v)))
+    np.testing.assert_allclose(firsts / draws, p, atol=0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_live=st.integers(0, 3),
+    temp=st.floats(0.2, 2.0),
+    top_k=st.sampled_from([0, 2, 5]),
+    seed=st.integers(0, 10**6),
+)
+def test_acceptance_invariants(k_live, temp, top_k, seed):
+    """Structural properties on arbitrary rounds: 1 <= n_emit <=
+    k_live + 1, every pre-final emission IS its draft token (only accepted
+    drafts are emitted as-is), and all emissions are valid vocab ids."""
+    v = 16
+    key = jax.random.PRNGKey(seed)
+    tgt = jax.random.normal(key, (4, v))
+    dq = jax.nn.log_softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (3, v)) / temp
+    )
+    drafts = jax.random.categorical(
+        jax.random.fold_in(key, 2), dq, axis=-1
+    ).astype(np.int32)
+    n_emit, emitted = speculative_acceptance(
+        jax.random.fold_in(key, 3), tgt, drafts, dq, k_live, temp, top_k,
+        1.0, v,
+    )
+    n_emit, emitted = int(n_emit), np.asarray(emitted)
+    assert 1 <= n_emit <= k_live + 1
+    assert all(0 <= t < v for t in emitted[:n_emit])
+    np.testing.assert_array_equal(
+        emitted[: n_emit - 1], np.asarray(drafts)[: n_emit - 1]
+    )
+
+
+# -------------------------------------------------------- page accounting
+def test_rollback_never_leaks_pages(target):
+    """A rejection storm (foreign draft + sampling) allocates and rolls
+    back lookahead pages every round; when the trace drains, every page
+    must be back in the pool (no prefix index pinning here) and no slot
+    may hold stale page refs — leaks and double-frees both fail this."""
+    cfg = target[0]
+    sp = SamplingParams(temperature=1.2, top_k=0, top_p=1.0)
+    eng = _build(
+        target, draft=_draft(seed=7), spec_tokens=3, prefix_cache=False,
+        num_slots=2, page_size=2,
+    )
+    reqs = _reqs(cfg, 5)
+    for r in reqs:
+        r.sampling = dataclasses.replace(sp, seed=3 + r.uid)
+    eng.run(reqs)
+    assert eng.pool.in_use == 0
+    assert all(not p for p in eng._slot_pages)
+    ps = eng.pool_stats
+    # rejections actually happened, so rollback paths were exercised
+    assert ps["spec_accepted"] < ps["spec_drafted"]
+    assert ps["spec_accept_rate"] < 1.0
+
+
+def test_tight_pool_shrinks_lookahead(target):
+    """With the pool too small for full lookahead, rounds run shallower
+    (down to plain 1-token verifies) instead of preempting or failing —
+    output identity must survive the degradation."""
+    cfg = target[0]
+    kw = dict(num_slots=2, page_size=2, num_pages=2 * ((P + G) // 2) + 2)
+    base = _build(target, **kw).run(_reqs(cfg, 3))
+    spec = _build(target, draft=_draft(seed=7), spec_tokens=3, **kw)
+    assert spec.pool.capacity * 2 < 2 * (P + G) + 2 * 3  # genuinely tight
+    assert _tokens(spec.run(_reqs(cfg, 3))) == _tokens(base)
+
+
+# ------------------------------------------------------------------ gating
+def test_gating_errors(target):
+    with pytest.raises(ValueError, match="spec_tokens must be >= 1"):
+        _build(target, draft=_draft(), spec_tokens=0)
+    with pytest.raises(ValueError, match="draft_model and draft_params"):
+        _build(target, draft=(None, _draft()[1]), spec_tokens=2)
+    with pytest.raises(ValueError, match="paged_cache"):
+        _build(target, draft=_draft(), spec_tokens=2, paged_cache=False)
+    with pytest.raises(ValueError, match="prefill"):
+        _build(
+            target, draft=_draft(), spec_tokens=2, prefill="interleaved"
+        )
+
+
+# --------------------------------------------- migration with page content
+def test_export_carries_pages_and_import_swaps_in(target):
+    """Satellite: ``export_inflight`` no longer strips the host tier —
+    live slots gather their pages into the record and an importing engine
+    with a matching pool layout adopts them, so the migrated request
+    resumes by SWAP-IN (one scatter), not recompute. Token streams must
+    merge identically either way."""
+    cfg = target[0]
+    kw = dict(num_slots=2, host_pages=64, swap=True)
+    base = _tokens(_build(target, **kw).run(_reqs(cfg, 3)))
+
+    src = _build(target, **kw)
+    for r in _reqs(cfg, 3):
+        src.submit(r)
+    for _ in range(4):  # leave requests mid-decode
+        src.step()
+    items = src.export_inflight()
+    assert src.pool.in_use == 0
+    carried = [
+        res for _, res in items
+        if res is not None and res.host_arrays is not None
+    ]
+    assert carried, "live mid-decode slots must carry their KV pages"
+
+    dst = _build(target, **kw)
+    dst.import_inflight(items)
+    # adoption happened: resumes now point at DST's own host tier
+    assert any(
+        res.host_key == ("swap", uid)
+        for uid, res in ((r.uid, res) for (r, res) in items if res)
+        if res.generated
+    )
+    outs = dst.run()
+    assert _tokens(outs) == base
+    assert dst.pool_stats["swapped_in_pages"] > 0
+
+
+def test_import_layout_mismatch_falls_back_to_recompute(target):
+    """An int8 importer cannot adopt fp pages (plane sets differ): the
+    record's arrays are dropped and the request resumes through the
+    recompute path — it must still complete."""
+    cfg = target[0]
+    src = _build(target, num_slots=2, host_pages=64, swap=True)
+    for r in _reqs(cfg, 2):
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    items = src.export_inflight()
+    dst = _build(
+        target, num_slots=2, host_pages=64, swap=True, kv_dtype="int8"
+    )
+    dst.import_inflight(items)
+    for _, res in items:
+        if res is not None:
+            assert res.host_key is None and res.host_arrays is None
+    outs = dst.run()
+    assert len(outs) == 2 and all(len(o.tokens) == G for o in outs)
+    assert dst.pool_stats["swapped_in_pages"] == 0
+
+
+# ------------------------------------- int8 demote dtype pin (satellite)
+def test_int8_prefix_demote_preserves_pool_dtypes(target):
+    """Pin: demoting a prefix page from an int8 pool stores the int8
+    planes AND their fp32 scale planes — a host tier silently holding fp
+    pages would scatter garbage back on promotion."""
+    cfg = target[0]
+    eng = _build(
+        target, kv_dtype="int8", prefix_cache=True, host_pages=4,
+        prefix_cache_pages=2, page_size=4,
+    )
+    # DISTINCT prompts: each retirement publishes its own chunk chain, so
+    # the 2-page index must LRU-evict across chains (a shared prefix would
+    # pin the whole index on the protected insert path and never demote)
+    eng.run(_reqs(cfg, 6))
+    assert eng.host_demoted_pages > 0, "trace must demote at least one page"
+    assert set(eng._kv_names) == {"k", "v", "ks", "vs"}
+    for entry in eng.host._entries.values():
+        for name, arr in entry["arrays"].items():
+            assert arr.dtype == np.dtype(eng.cache[name].dtype), name
